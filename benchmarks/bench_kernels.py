@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks (CPU wall time of the jnp paths + interpret-mode
+checks; BlockSpec sweeps report the tiling chosen for TPU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import utils
+from repro.core import hessian as hess
+from repro.core import qformat
+from repro.kernels.dequant_matmul import ops as dq_ops
+from repro.kernels.hessian_gg import ops as gg_ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        utils.block_all(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_dequant(ctx=None):
+    rng = np.random.default_rng(0)
+    for (M, K, N, bits) in [(64, 1024, 1024, 2), (64, 1024, 1024, 4),
+                            (8, 2048, 2048, 2)]:
+        gs = 64
+        codes = jnp.asarray(rng.integers(0, 2 ** bits, (K, N)), jnp.uint8)
+        from repro.core import quantizers as qz
+        W = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+        q, s, z, _ = qz.rtn_quantize(W, bits, gs)
+        cap = 8
+        zr = jnp.zeros(cap, jnp.int32)
+        qt = qformat.make_quantized(q, s, z, bits, gs, (K, N), zr, zr,
+                                    jnp.zeros(cap, jnp.bfloat16))
+        x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+        f = jax.jit(lambda xx: dq_ops.dequant_matmul(xx, qt))
+        us = _time(f, x)
+        dense = jax.jit(lambda xx: xx @ W)
+        us_d = _time(dense, x)
+        common.emit(f"kernels/dequant_matmul_M{M}_K{K}_N{N}_w{bits}", us,
+                    f"dense_us={us_d:.0f};packed_bytes={sum(p.size for p in qt.planes)}")
+
+
+def bench_hessian_gg(ctx=None):
+    rng = np.random.default_rng(1)
+    for (D, dout) in [(512, 512), (1024, 512)]:
+        G = jnp.asarray(rng.normal(size=(D, dout)).astype(np.float32))
+        f = jax.jit(lambda g: gg_ops.gg_update(g))
+        us = _time(f, G)
+        tri_flops = D * (D + 1) / 2 * dout * 2
+        full_flops = D * D * dout * 2
+        common.emit(f"kernels/hessian_gg_D{D}_dout{dout}", us,
+                    f"tri_flop_saving={full_flops / tri_flops:.2f}x")
+
+
+def bench_calib_blocks(ctx=None):
+    rng = np.random.default_rng(2)
+    from repro.core import solver
+    for (d_in, d_out) in [(512, 512), (1024, 1024)]:
+        W = jnp.asarray(rng.normal(size=(d_in, d_out)).astype(np.float32))
+        X = jnp.asarray(rng.normal(size=(512, d_in)).astype(np.float32))
+        H = X.T @ X
+        f = jax.jit(lambda w, h: solver.calibrate(
+            w, h, bits=2, group_size=64, alpha=0.1, tau=3.5,
+            outlier_capacity=0.005).w_hat)
+        us = _time(f, W, H, reps=2)
+        common.emit(f"kernels/solver_calibrate_{d_in}x{d_out}_w2", us,
+                    f"cols_per_s={d_in / (us / 1e6):.0f}")
+
+
+ALL = [bench_dequant, bench_hessian_gg, bench_calib_blocks]

@@ -1,0 +1,41 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads artifacts/dryrun/<cell>.json and emits one CSV row per (arch x shape):
+terms in seconds, dominant bottleneck, useful-FLOP ratio, roofline fraction.
+"""
+import glob
+import json
+import os
+
+from benchmarks import common
+
+ART = os.path.join(common.ROOT, "artifacts", "dryrun")
+
+
+def load_cells(mesh="16x16"):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        rec = json.load(open(path))
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def bench_roofline(ctx=None):
+    cells = load_cells()
+    if not cells:
+        common.emit("roofline/missing", 0,
+                    "run: python -m repro.launch.dryrun --all")
+        return
+    for (arch, shape), rec in sorted(cells.items()):
+        r = rec["roofline"]
+        dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        common.emit(
+            f"roofline/{arch}/{shape}", dom * 1e6,
+            f"bottleneck={r['bottleneck']};tc={r['t_compute_s']:.4f}"
+            f";tm={r['t_memory_s']:.4f};tcoll={r['t_collective_s']:.4f}"
+            f";useful={r['useful_ratio']:.3f}"
+            f";roofline_frac={r['roofline_fraction']:.3f}"
+            f";attn={rec['attn_modes']}")
+
+
+ALL = [bench_roofline]

@@ -1,0 +1,147 @@
+"""Paper-table reproductions (quality orderings at toy scale).
+
+One function per table; each prints ``name,us_per_call,derived`` CSV rows
+(us_per_call = quantization wall time; derived = the quality metrics).
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs.base import QuantConfig
+
+
+def _row(m, params, calib, test, name, qcfg, tag=""):
+    t0 = time.time()
+    qp, dt = common.quantize_cached(m, params, calib, qcfg, tag)
+    wall = (dt if dt is not None else 0.0) * 1e6
+    met = common.metrics(m, qp, params, test)
+    bits = common.avg_bits_of(qcfg)
+    common.emit(
+        f"{name}", wall,
+        f"avg_bits={bits:.2f};ppl={met['ppl']:.3f};dCE={met['dce']:.4f};"
+        f"kl={met['kl']:.4f};base_ppl={met['base_ppl']:.3f}")
+    return met
+
+
+def _tuned_row(m, params, calib, valid, test, name, qcfg,
+               alphas=(0.1, 1.0)):
+    """Paper App. C.2: tune the Hessian regularization per method on a
+    validation split, report the test metrics of the winner."""
+    best = (None, 1e9, None)
+    for a in alphas:
+        q = dataclasses.replace(qcfg, alpha=a)
+        qp, dt = common.quantize_cached(m, params, calib, q)
+        ce_v = float(m.loss(qp, valid))
+        if ce_v < best[1]:
+            best = (q, ce_v, qp)
+    met = common.metrics(m, best[2], params, test)
+    bits = common.avg_bits_of(best[0])
+    common.emit(
+        name, 0,
+        f"avg_bits={bits:.2f};ppl={met['ppl']:.3f};dCE={met['dce']:.4f};"
+        f"kl={met['kl']:.4f};alpha={best[0].alpha}")
+    return met
+
+
+def table1_2bit(ctx):
+    """Table 1/11/12: 2-bit PTQ — RTN vs OPTQ vs SpQR(l2) vs OAC.
+    alpha is tuned per method on a validation split (paper App. C.2)."""
+    m, params, calib, test, valid = ctx
+    g = 32
+    out = {"table1/rtn_w2": _row(m, params, calib, test, "table1/rtn_w2",
+                                 QuantConfig(wbits=2, group_size=g,
+                                             method="rtn"))}
+    for name, method, h in (("table1/optq_l2_w2", "optq", "l2"),
+                            ("table1/spqr_l2_w2", "spqr", "l2"),
+                            ("table1/oac_spqr_w2", "spqr", "oac")):
+        out[name] = _tuned_row(m, params, calib, valid, test, name,
+                               QuantConfig(wbits=2, group_size=g,
+                                           method=method, hessian=h))
+    order = [out["table1/oac_spqr_w2"]["dce"],
+             out["table1/spqr_l2_w2"]["dce"],
+             out["table1/rtn_w2"]["dce"]]
+    ok = order[0] <= order[1] * 1.05 and order[1] < order[2]
+    common.emit("table1/ordering_oac<=spqr<rtn", 0, f"holds={ok}")
+    return out
+
+
+def table2_binary(ctx):
+    """Table 2/10: binarization — BiLLM(l2 H) vs OAC_BiLLM."""
+    m, params, calib, test, valid = ctx
+    rows = {
+        "table2/billm_l2_w1": QuantConfig(wbits=1, group_size=64,
+                                          method="billm", hessian="l2"),
+        "table2/oac_billm_w1": QuantConfig(wbits=1, group_size=64,
+                                           method="billm", hessian="oac"),
+    }
+    out = {k: _tuned_row(m, params, calib, valid, test, k, q)
+           for k, q in rows.items()}
+    ok = out["table2/oac_billm_w1"]["dce"] <= \
+        out["table2/billm_l2_w1"]["dce"] * 1.05
+    common.emit("table2/ordering_oac_billm<=billm", 0, f"holds={ok}")
+    return out
+
+
+def table3_grad_dtype(ctx):
+    """Table 3 / App C.1: bf16 vs fp32 gradient Hessians (cost vs quality)."""
+    m, params, calib, test, valid = ctx
+    for name, dt in (("fp32", "float32"), ("bf16", "bfloat16")):
+        q = QuantConfig(wbits=2, group_size=32, method="spqr",
+                        hessian="oac", grad_dtype=dt)
+        _row(m, params, calib, test, f"table3/oac_grad_{name}", q)
+
+
+def table4_alpha(ctx):
+    """Table 4 / App C.2: Hessian regularization sweep."""
+    m, params, calib, test, valid = ctx
+    best = (None, 1e9)
+    for a in (0.001, 0.01, 0.1, 1.0):
+        q = QuantConfig(wbits=2, group_size=32, method="spqr",
+                        hessian="oac", alpha=a)
+        met = _row(m, params, calib, test, f"table4/oac_alpha_{a}", q)
+        if met["dce"] < best[1]:
+            best = (a, met["dce"])
+    common.emit("table4/best_alpha", 0, f"alpha={best[0]}")
+
+
+def table5_reduction(ctx):
+    """Table 5 / App C.3: sum (eq.22) vs mean (eq.14) Hessian reduction."""
+    m, params, calib, test, valid = ctx
+    for red in ("sum", "mean"):
+        q = QuantConfig(wbits=2, group_size=32, method="spqr",
+                        hessian="oac", hessian_reduction=red)
+        _row(m, params, calib, test, f"table5/oac_{red}", q)
+
+
+def table13_3bit(ctx):
+    """Table 13: 3-bit PTQ."""
+    m, params, calib, test, valid = ctx
+    for name, q in {
+        "table13/rtn_w3": QuantConfig(wbits=3, group_size=32, method="rtn"),
+        "table13/spqr_l2_w3": QuantConfig(wbits=3, group_size=32,
+                                          method="spqr", hessian="l2"),
+        "table13/oac_spqr_w3": QuantConfig(wbits=3, group_size=32,
+                                           method="spqr", hessian="oac"),
+    }.items():
+        _row(m, params, calib, test, name, q)
+
+
+def table14_ablation(ctx):
+    """Table 14 / App I: OAC_X improves every base calibrator X."""
+    m, params, calib, test, valid = ctx
+    pairs = {}
+    for base in ("optq", "spqr"):
+        for h in ("l2", "oac"):
+            q = QuantConfig(wbits=2, group_size=32, method=base, hessian=h)
+            met = _tuned_row(m, params, calib, valid, test,
+                             f"table14/{base}_{h}", q)
+            pairs[(base, h)] = met["dce"]
+    for base in ("optq", "spqr"):
+        ok = pairs[(base, "oac")] <= pairs[(base, "l2")] * 1.05
+        common.emit(f"table14/oac_improves_{base}", 0, f"holds={ok}")
+
+
+ALL = [table1_2bit, table2_binary, table3_grad_dtype, table4_alpha,
+       table5_reduction, table13_3bit, table14_ablation]

@@ -1,0 +1,107 @@
+"""Shared benchmark infrastructure: trained toy LM, calib/test sets, metrics.
+
+The quality benchmarks reproduce the paper's TABLE ORDERINGS at toy scale
+(CPU container; see DESIGN.md §7): a trained 4L/256d LLaMa-family model on
+the synthetic Markov corpus, quantized by each method, evaluated by held-out
+perplexity and KL(original ‖ quantized) — the paper's C4/WikiText2 metrics
+stand-ins.  Results cache under artifacts/bench_cache.
+"""
+import hashlib
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+
+from repro.configs.base import QuantConfig, TrainConfig     # noqa: E402
+from repro.configs.paper_models import TOY_LM               # noqa: E402
+from repro.core import pipeline                             # noqa: E402
+from repro.data import SyntheticCorpus, make_calib_set      # noqa: E402
+from repro.models import build_model                        # noqa: E402
+from repro.train import checkpoint as ckpt                  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "artifacts")
+TOY_DIR = os.path.join(ART, "toy_lm")
+CACHE = os.path.join(ART, "bench_cache")
+SEQ = 128
+N_CALIB = 24
+N_TEST = 16
+
+
+def load_toy():
+    """(model, trained params, calib batch, test batch). Trains on demand."""
+    cfg = TOY_LM
+    m = build_model(cfg)
+    params0 = m.init(jax.random.PRNGKey(0))
+    if ckpt.latest_step(TOY_DIR) is None:
+        from benchmarks import prep_toy_lm
+        prep_toy_lm.main(500)
+    from repro.train import optimizer as opt
+    from repro.train import compression as comp
+    tpl = (params0, opt.adamw_init(params0), ())
+    (params, _, _), _ = ckpt.restore(TOY_DIR, tpl, strict=False)
+    params = jax.tree.map(jnp.asarray, params)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=SEQ, seed=7)
+    calib = {"tokens": jnp.asarray(make_calib_set(corpus, N_CALIB)["tokens"])}
+    test = {"tokens": jnp.asarray(
+        np.concatenate([corpus.batch("test", i, 8)["tokens"]
+                        for i in range(N_TEST // 8)], 0))}
+    valid = {"tokens": jnp.asarray(corpus.batch("valid", 0, 8)["tokens"])}
+    return m, params, calib, test, valid
+
+
+def metrics(m, params_q, params_orig, test):
+    """(ppl, delta_ce, kl) of quantized vs original on held-out data."""
+    ce_q = float(m.loss(params_q, test))
+    ce_o = float(m.loss(params_orig, test))
+    lq, _ = m.apply(params_q, test)
+    lo, _ = m.apply(params_orig, test)
+    po = jax.nn.log_softmax(lo.astype(jnp.float32), -1)
+    pq = jax.nn.log_softmax(lq.astype(jnp.float32), -1)
+    kl = float(jnp.sum(jnp.exp(po) * (po - pq), -1).mean())
+    return {"ppl": float(np.exp(ce_q)), "ce": ce_q, "dce": ce_q - ce_o,
+            "kl": kl, "base_ppl": float(np.exp(ce_o))}
+
+
+def quantize_cached(m, params, calib, qcfg: QuantConfig, tag=""):
+    """Run (or load) the Algorithm-1 pipeline for one quant config."""
+    os.makedirs(CACHE, exist_ok=True)
+    key = hashlib.md5((repr(qcfg) + tag).encode()).hexdigest()[:16]
+    path = os.path.join(CACHE, f"q_{key}.npz")
+    if os.path.exists(path):
+        data = np.load(path)
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        leaves = [jnp.asarray(data[f"l{i}"]) for i in range(len(flat))]
+        return jax.tree_util.tree_unflatten(treedef, leaves), None
+    t0 = time.time()
+    qp, results = pipeline.quantize_model(m, params, calib, qcfg,
+                                          log=lambda *a: None)
+    dt = time.time() - t0
+    flat, _ = jax.tree_util.tree_flatten(qp)
+    np.savez(path, **{f"l{i}": np.asarray(v) for i, v in enumerate(flat)})
+    with open(path + ".meta", "w") as f:
+        json.dump({"seconds": dt, "qcfg": repr(qcfg)}, f)
+    return qp, dt
+
+
+def avg_bits_of(qcfg: QuantConfig) -> float:
+    """Analytic average bits for the config (storage accounting)."""
+    b = qcfg.wbits
+    if qcfg.method == "rtn":
+        return b + 2 * 16 / qcfg.group_size
+    if qcfg.method == "billm":
+        return 1.09  # reported per BiLLM's own convention; see core/billm.py
+    stats = 2 * qcfg.stats_bits / qcfg.group_size + \
+        4 * 16 / (qcfg.group_size * qcfg.stats_group)
+    outl = qcfg.outlier_capacity * 48
+    return b + stats + outl
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

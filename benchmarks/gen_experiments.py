@@ -1,0 +1,82 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cells(mesh, suffix=""):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ART, f"*__{mesh}{suffix}.json"))):
+        r = json.load(open(p))
+        if bool(r.get("quantized")) != bool(suffix):
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def dryrun_table():
+    single = cells("16x16")
+    multi = cells("2x16x16")
+    lines = ["| arch | shape | attn (train/decode) | args GiB/dev | "
+             "temp GiB/dev | compile s | multi-pod |",
+             "|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(single.items(),
+                            key=lambda kv: (kv[0][0],
+                                            SHAPE_ORDER.index(kv[0][1]))):
+        m = r["memory"]
+        mp = "OK" if (a, s) in multi else "-"
+        lines.append(
+            f"| {a} | {s} | {r['attn_modes'][0]}/{r['attn_modes'][1]} | "
+            f"{m.get('argument_size_in_bytes', 0) / 2**30:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0) / 2**30:.2f} | "
+            f"{r['compile_s']:.0f} | {mp} |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    single = cells("16x16")
+    lines = ["| arch | shape | t_compute s | t_memory s | t_collective s | "
+             "bottleneck | useful | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(single.items(),
+                            key=lambda kv: (kv[0][0],
+                                            SHAPE_ORDER.index(kv[0][1]))):
+        f = r["roofline"]
+        lines.append(
+            f"| {a} | {s} | {f['t_compute_s']:.4f} | {f['t_memory_s']:.4f} |"
+            f" {f['t_collective_s']:.4f} | {f['bottleneck']} |"
+            f" {f['useful_ratio']:.3f} | {f['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def quantized_rows():
+    lines = []
+    for p in sorted(glob.glob(os.path.join(ART, "*__16x16__w2.json"))):
+        r = json.load(open(p))
+        f = r["roofline"]
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} w2 | {f['t_compute_s']:.4f} | "
+            f"{f['t_memory_s']:.4f} | {f['t_collective_s']:.4f} | "
+            f"{f['bottleneck']} | args {m.get('argument_size_in_bytes', 0) / 2**30:.1f} GiB |")
+    return "\n".join(lines)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = text.replace("<!--DRYRUN_TABLE-->", dryrun_table())
+    text = text.replace("<!--ROOFLINE_TABLE-->", roofline_table())
+    text = text.replace("<!--W2_ROWS-->", quantized_rows())
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables generated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Train the toy LLaMa-family LM used by the quality benchmarks (cached)."""
+import os
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import TrainConfig                     # noqa: E402
+from repro.configs.paper_models import TOY_LM                  # noqa: E402
+from repro.data import DataIterator, SyntheticCorpus           # noqa: E402
+from repro.models import build_model                           # noqa: E402
+from repro.train.loop import train                             # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "toy_lm")
+SEQ = 128
+
+
+def main(steps=400):
+    cfg = TOY_LM
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=SEQ, seed=7)
+    it = DataIterator(corpus, "train", batch_size=16)
+    tcfg = TrainConfig(steps=steps, ckpt_every=50, ckpt_dir=ART,
+                       lr=2e-3, warmup=30, keep=1)
+    params, losses = train(m, params, it, tcfg, log_every=25)
+    print("final loss:", losses[-1])
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 400)

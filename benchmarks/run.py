@@ -1,0 +1,50 @@
+"""Benchmark driver: one function per paper table + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only tables|kernels|roofline]
+"""
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "tables", "kernels", "roofline"])
+    args = ap.parse_args()
+
+    from benchmarks import bench_kernels, bench_roofline, bench_tables
+    from benchmarks import common
+
+    print("name,us_per_call,derived")
+    suites = []
+    if args.only in (None, "tables"):
+        suites.append(("tables", bench_tables.ALL, True))
+    if args.only in (None, "kernels"):
+        suites.append(("kernels", bench_kernels.ALL, False))
+    if args.only in (None, "roofline"):
+        suites.append(("roofline", bench_roofline.ALL, False))
+
+    ctx = None
+    failures = 0
+    for name, fns, needs_ctx in suites:
+        if needs_ctx and ctx is None:
+            ctx = common.load_toy()
+        for fn in fns:
+            try:
+                fn(ctx)
+            except Exception:
+                traceback.print_exc()
+                failures += 1
+    if failures:
+        print(f"# {failures} benchmark(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+``get_config(name)`` returns the exact published config; ``get_smoke(name)``
+returns the reduced same-family config used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (LM_SHAPES, SHAPES_BY_NAME, ModelConfig,
+                                MoEConfig, QuantConfig, RWKVConfig, SSMConfig,
+                                ShapeConfig, TrainConfig, reduce_cfg)
+from repro.configs import (gemma3_27b, granite_moe_1b, grok1_314b,
+                           musicgen_large, nemotron4_340b, paper_models,
+                           phi3_vision_4_2b, qwen2_1_5b, qwen2_5_32b,
+                           rwkv6_3b, zamba2_7b)
+
+ASSIGNED = (
+    gemma3_27b.CONFIG,
+    qwen2_1_5b.CONFIG,
+    nemotron4_340b.CONFIG,
+    qwen2_5_32b.CONFIG,
+    phi3_vision_4_2b.CONFIG,
+    zamba2_7b.CONFIG,
+    granite_moe_1b.CONFIG,
+    grok1_314b.CONFIG,
+    rwkv6_3b.CONFIG,
+    musicgen_large.CONFIG,
+)
+
+EXTRA = (paper_models.LLAMA7B, paper_models.OPT1B, paper_models.TOY_LM)
+
+REGISTRY = {c.name: c for c in ASSIGNED + EXTRA}
+
+ASSIGNED_IDS = tuple(c.name for c in ASSIGNED)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return reduce_cfg(get_config(name))
+
+
+def cells(archs=None, shapes=None):
+    """Yield every (arch_config, shape_config) dry-run cell, honoring skips.
+
+    long_500k requires sub-quadratic decode state; it is skipped (with a
+    reason) for pure full-attention archs per the assignment spec.
+    """
+    archs = archs or ASSIGNED_IDS
+    shapes = shapes or [s.name for s in LM_SHAPES]
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            sc = SHAPES_BY_NAME[s]
+            if sc.name == "long_500k" and not cfg.sub_quadratic:
+                continue
+            yield cfg, sc
+
+
+def skipped_cells(archs=None):
+    archs = archs or ASSIGNED_IDS
+    out = []
+    for a in archs:
+        cfg = get_config(a)
+        if not cfg.sub_quadratic:
+            out.append((a, "long_500k",
+                        "full-attention arch: O(S) KV growth per layer; "
+                        "sub-quadratic shape reserved for ssm/hybrid"))
+    return out
+
+
+__all__ = [
+    "ASSIGNED", "ASSIGNED_IDS", "REGISTRY", "LM_SHAPES", "SHAPES_BY_NAME",
+    "ModelConfig", "MoEConfig", "SSMConfig", "RWKVConfig", "ShapeConfig",
+    "QuantConfig", "TrainConfig", "get_config", "get_smoke", "reduce_cfg",
+    "cells", "skipped_cells",
+]

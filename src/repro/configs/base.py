@@ -1,0 +1,236 @@
+"""Config dataclasses for models, quantization, training, and workload shapes.
+
+Every assigned architecture gets a ``ModelConfig`` in its own module under
+``repro.configs``; the registry in ``__init__`` maps ``--arch <id>`` to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff: int = 0              # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # "dense"   : every expert on every token (only for tiny smoke configs)
+    # "gather"  : capacity-based gather/scatter dispatch, tokens stay data-parallel
+    moe_impl: str = "gather"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64         # mamba2 P (headdim)
+    n_groups: int = 1
+    chunk: int = 128           # SSD chunked-scan block length
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_size: int = 64
+    decay_lora: int = 64       # rank of the data-dependent decay LoRA
+    mix_lora: int = 32         # rank of the token-shift mix LoRA
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab: int
+    # -- attention (unused for family == "ssm") --
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    # sliding-window pattern: `local_window > 0` makes every layer local except
+    # each (global_every)-th one.  gemma3: 5 local : 1 global.
+    local_window: int = 0
+    global_every: int = 0
+    # -- mlp --
+    d_ff: int = 0
+    mlp: str = "swiglu"        # swiglu | relu2 | geglu | gelu
+    # -- misc --
+    norm: str = "rmsnorm"      # rmsnorm | layernorm
+    pos: str = "rope"          # rope | sinusoidal | none
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # -- sub-configs --
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    # hybrid (zamba2): one shared attention block applied every k SSM layers
+    shared_attn_every: int = 0
+    # -- frontend stubs --
+    frontend: str = "none"     # none | vision_stub | audio_stub
+    n_frontend_tokens: int = 0
+    # -- provenance --
+    source: str = ""
+    notes: str = ""
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when decode state does not grow O(S) per *full-attention* layer."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "vlm", "audio", "moe"):
+            hd = self.resolved_head_dim
+            qkv = d * hd * (self.n_heads + 2 * self.n_kv_heads)
+            o = self.n_heads * hd * d
+            attn = qkv + o
+            if self.mlp in ("swiglu", "geglu"):
+                mlp = 3 * d * self.d_ff
+            else:
+                mlp = 2 * d * self.d_ff
+            if self.family == "moe":
+                assert self.moe is not None
+                if self.moe.top_k:
+                    gmul = 3 if self.mlp in ("swiglu", "geglu") else 2
+                    mlp = self.moe.n_experts * gmul * d * self.moe.d_ff
+                    mlp += d * self.moe.n_experts  # router
+            per_layer = attn + mlp + 2 * d
+        elif self.family == "ssm":  # rwkv6
+            assert self.rwkv is not None
+            att = 4 * d * d + d * d  # r,k,v,g,o
+            att += 6 * (self.rwkv.mix_lora * 2 * d) + self.rwkv.decay_lora * 2 * d
+            ffn = 2 * d * self.d_ff + d * d  # key, value, receptance
+            per_layer = att + ffn + 2 * d
+        elif self.family == "hybrid":
+            assert self.ssm is not None
+            d_in = self.ssm.expand * d
+            nh = d_in // self.ssm.head_dim
+            zxbc = d * (2 * d_in + 2 * self.ssm.n_groups * self.ssm.d_state + nh)
+            per_layer = zxbc + d_in * d + 2 * d  # + out proj + norms
+            # shared attention block amortized over layers
+            hd = self.resolved_head_dim
+            shared = (d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                      + self.n_heads * hd * d + 3 * d * self.d_ff)
+            n_shared_inv = L // max(self.shared_attn_every, 1)
+            per_inv_proj = 2 * d * d  # per-invocation input projection
+            return emb + L * per_layer + shared + n_shared_inv * per_inv_proj
+        return emb + L * per_layer
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.family != "moe" or self.moe is None or not self.moe.top_k:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        gmul = 3 if self.mlp in ("swiglu", "geglu") else 2
+        moe_all = L * self.moe.n_experts * gmul * d * self.moe.d_ff
+        moe_active = L * self.moe.top_k * gmul * d * self.moe.d_ff
+        return full - moe_all + moe_active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+# The four LM shape cells shared by all assigned architectures.
+LM_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in LM_SHAPES}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    wbits: int = 2                 # 1 (binary) | 2 | 3 | 4 | 8 | 16 (off)
+    group_size: int = 64
+    # calibration method: rtn | optq | spqr | billm
+    method: str = "spqr"
+    # hessian source: oac (paper) | l2 (output-agnostic baseline) | identity
+    hessian: str = "oac"
+    alpha: float = 0.1             # Hessian regularization (paper eq. 21)
+    outlier_threshold: float = 3.5 # SpQR tau (paper Table 8/9)
+    outlier_capacity: float = 0.005  # max outlier fraction kept (fixed COO budget)
+    stats_bits: int = 3            # SpQR second-round quantization of scales/zeros
+    stats_group: int = 16
+    act_order: bool = False
+    grad_dtype: str = "float32"    # float32 | bfloat16 (App. C.1)
+    hessian_reduction: str = "sum" # sum (eq. 22) | mean (eq. 14)
+    n_calib: int = 128
+    calib_seq: int = 2048
+    solver_block: int = 128        # OPTQ column block size
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    steps: int = 300
+    ckpt_every: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    grad_compression: str = "none"  # none | int8_ef
+
+
+def reduce_cfg(cfg: ModelConfig, **over) -> ModelConfig:
+    """Build a reduced smoke-test config of the same family."""
+    base = dict(
+        n_layers=2,
+        d_model=64,
+        vocab=256,
+        d_ff=128 if cfg.d_ff else 0,
+        n_heads=4 if cfg.n_heads else 0,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=16 if cfg.n_heads else 0,
+        n_frontend_tokens=8 if cfg.n_frontend_tokens else 0,
+    )
+    if cfg.local_window:
+        base["local_window"] = 16
+        base["global_every"] = 3
+        base["n_layers"] = 7     # 2 groups of (2 local + 1 global) + 1 tail
+    if cfg.moe is not None:
+        base["moe"] = dataclasses.replace(cfg.moe, n_experts=4, top_k=2, d_ff=64)
+    if cfg.ssm is not None:
+        base["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=16, chunk=16)
+    if cfg.rwkv is not None:
+        base["rwkv"] = dataclasses.replace(
+            cfg.rwkv, head_size=16, decay_lora=8, mix_lora=8)
+    if cfg.shared_attn_every:
+        base["shared_attn_every"] = 2
+        base["n_layers"] = 5
+    base.update(over)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **base)

@@ -1,0 +1,29 @@
+"""gemma3-27b [dense] — 5:1 local:global sliding-window attention, 128k context.
+
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144
+[hf:google/gemma-3-1b-pt family; unverified]
+head_dim=128 (gemma3 uses a decoupled q/kv width: 32*128=4096 != d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    vocab=262144,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    mlp="geglu",
+    norm="rmsnorm",
+    pos="rope",
+    rope_theta=1_000_000.0,
+    local_window=1024,
+    global_every=6,            # 5 local : 1 global
+    tie_embeddings=True,
+    logit_softcap=30.0,
+    source="hf:google/gemma-3-1b-pt; unverified",
+    notes="5:1 local:global, 128k context",
+)

@@ -1,0 +1,25 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8.
+
+24L d_model=1024 16H (GQA kv=8) d_ff=512(per expert) vocab=49155, MoE 32e top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    vocab=49155,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    moe=MoEConfig(n_experts=32, top_k=8, d_ff=512, capacity_factor=1.25),
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+    notes="32 experts top-8",
+)

@@ -1,0 +1,26 @@
+"""grok-1-314b [moe] — 8 experts top-2.
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768(per expert) vocab=131072, MoE 8e top-2
+[hf:xai-org/grok-1; unverified]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    vocab=131072,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    mlp="geglu",
+    norm="rmsnorm",
+    pos="rope",
+    logit_softcap=30.0,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=32768, capacity_factor=1.25),
+    tie_embeddings=False,
+    source="hf:xai-org/grok-1; unverified",
+    notes="8 experts top-2",
+)

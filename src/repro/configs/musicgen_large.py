@@ -1,0 +1,29 @@
+"""musicgen-large [audio] — decoder-only transformer over EnCodec tokens.
+
+48L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=2048 [arXiv:2306.05284; hf]
+
+Backbone only per the assignment spec: the EnCodec frontend is a STUB whose
+``input_specs()`` provides precomputed frame embeddings (the sum of the four
+delayed-codebook embeddings); the LM head predicts codebook tokens (vocab 2048).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    vocab=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    mlp="gelu",
+    norm="layernorm",
+    pos="sinusoidal",
+    tie_embeddings=False,
+    frontend="audio_stub",
+    n_frontend_tokens=0,       # frames *replace* tokens (pure continuation LM)
+    source="arXiv:2306.05284; hf",
+    notes="decoder-only over EnCodec tokens",
+)

@@ -1,0 +1,24 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU MLP.
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000 [arXiv:2402.16819; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    vocab=256000,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    mlp="relu2",               # squared ReLU
+    norm="layernorm",
+    pos="rope",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    source="arXiv:2402.16819; unverified",
+    notes="GQA, squared-ReLU",
+)

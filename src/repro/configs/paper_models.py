@@ -1,0 +1,64 @@
+"""The paper's own model families (OPT / LLaMa) at proxy scales.
+
+The paper quantizes OPT-1.3B..30B and LLaMa(-2)-7B..30B.  We register the real
+shapes for dry-run purposes plus CPU-runnable proxies used by the quality
+benchmarks (benchmarks/bench_table*.py reproduce the papers' orderings on a
+*trained* toy model of the same family).
+"""
+from repro.configs.base import ModelConfig
+
+# LLaMa-7B exact shape [arXiv:2302.13971] — the paper's main subject.
+LLAMA7B = ModelConfig(
+    name="llama-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    vocab=32000,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    source="arXiv:2302.13971; hf",
+    notes="paper's primary subject model",
+)
+
+# OPT-1.3B exact shape [arXiv:2205.01068].
+OPT1B = ModelConfig(
+    name="opt-1.3b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    vocab=50272,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    mlp="gelu",
+    norm="layernorm",
+    pos="sinusoidal",
+    tie_embeddings=True,
+    source="arXiv:2205.01068; hf",
+    notes="paper's smallest OPT subject",
+)
+
+# CPU-trainable toy of the LLaMa family for the quality benchmarks.
+TOY_LM = ModelConfig(
+    name="toy-llama",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    vocab=512,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=32,
+    d_ff=704,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    tie_embeddings=False,
+    source="reduced llama family",
+    notes="trained on the synthetic corpus for quality benchmarks",
+)

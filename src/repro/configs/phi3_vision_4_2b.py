@@ -1,0 +1,31 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend (stubbed).
+
+32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+
+Per the assignment spec the vision frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (n_frontend_tokens, d_model) which the
+backbone consumes as a prefix.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    vocab=32064,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    frontend="vision_stub",
+    n_frontend_tokens=256,     # precomputed CLIP patch embeddings
+    source="hf:microsoft/Phi-3-vision-128k-instruct; hf",
+    notes="phi3-mini + CLIP; frontend stubbed, CE on text positions only",
+)

@@ -1,0 +1,25 @@
+"""qwen2-1.5b [dense] — GQA with QKV bias.
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936 [arXiv:2407.10671; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    n_layers=28,
+    d_model=1536,
+    vocab=151936,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    qkv_bias=True,
+    d_ff=8960,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="arXiv:2407.10671; hf",
+    notes="GQA, QKV bias",
+)

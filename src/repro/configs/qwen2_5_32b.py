@@ -1,0 +1,25 @@
+"""qwen2.5-32b [dense] — GQA with QKV bias.
+
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064 [hf:Qwen/Qwen2.5-0.5B family; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    vocab=152064,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    qkv_bias=True,
+    d_ff=27648,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    source="hf:Qwen/Qwen2.5-0.5B; hf",
+    notes="GQA, QKV bias; 40 heads not divisible by model=16 -> KV-length-parallel decode attention",
+)

@@ -1,0 +1,23 @@
+"""rwkv6-3b [ssm] — Finch, data-dependent decay; attention-free.
+
+32L d_model=2560 (attn-free) d_ff=8960 vocab=65536 [arXiv:2404.05892; hf]
+head_size 64 -> 40 wkv heads; decode state is O(1) in sequence length, so
+this arch runs the long_500k cell.
+"""
+from repro.configs.base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    vocab=65536,
+    d_ff=8960,
+    mlp="rwkv_channel_mix",
+    norm="layernorm",
+    pos="none",
+    rwkv=RWKVConfig(head_size=64, decay_lora=64, mix_lora=32),
+    tie_embeddings=False,
+    source="arXiv:2404.05892; hf",
+    notes="Finch - data-dependent decay; attn-free -> runs long_500k",
+)

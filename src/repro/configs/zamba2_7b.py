@@ -1,0 +1,30 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64
+[arXiv:2411.15242; unverified]
+
+81 Mamba2 layers; one weight-shared (attention + MLP) block is invoked after
+every 6th Mamba2 layer with a per-invocation input projection (zamba2-style).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    vocab=32000,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                  chunk=256),
+    shared_attn_every=6,
+    tie_embeddings=True,
+    source="arXiv:2411.15242; unverified",
+    notes="Mamba2 + shared attn blocks; sub-quadratic -> runs long_500k",
+)

@@ -1,0 +1,141 @@
+"""Hessian estimators for calibration (the paper's core contribution).
+
+Two estimators, both producing a (d_in, d_in) matrix per linear kernel
+``W (d_in, d_out)`` (our storage transposes the paper's ``W (d_row, d_col)``;
+the Hessian lives on the contraction dim either way):
+
+* **output-agnostic** (OPTQ/SpQR baseline, paper eq. 1):
+    ``H_l2 = sum_i x_i x_i^T`` over calibration inputs of the layer.
+* **output-adaptive** (OAC, paper eq. 13-14 / 22):
+    ``H_oac = sum_i G[i] G[i]^T`` where ``G[i] = dL_CE/dW`` for calibration
+    sample i — the Fisher-information approximation of the CE-loss Hessian
+    aggregated over rows.  The *labels* enter through the gradient (eq. 12),
+    which is what makes the method output-adaptive.
+
+Reduction: paper defaults to the **sum** (eq. 22, better numerics); ``mean``
+(eq. 14) is available for the App. C.3 ablation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+
+def regularize(H: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """Paper eq. 21: H + diag(alpha * mean(diag(H)))."""
+    d = H.shape[-1]
+    lam = alpha * jnp.mean(jnp.diagonal(H, axis1=-2, axis2=-1), axis=-1)
+    return H + lam[..., None, None] * jnp.eye(d, dtype=H.dtype)
+
+
+def l2_hessian_update(H: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Accumulate sum_i x_i x_i^T; x (..., d_in) flattened over leading dims."""
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    return H + x2.T @ x2
+
+
+def oac_hessian_update(H: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
+    """Accumulate G G^T for one sample's weight gradient G (d_in, d_out)."""
+    G = G.astype(jnp.float32)
+    return H + G @ G.T
+
+
+def is_quantizable(path: str, leaf) -> bool:
+    """Linear kernels are the quantization targets (2-D 'kernel' leaves)."""
+    return path.endswith("kernel") and hasattr(leaf, "ndim") and leaf.ndim == 2
+
+
+def select_kernels(params, predicate: Optional[Callable[[str], bool]] = None
+                   ) -> Dict[str, jnp.ndarray]:
+    """{path: kernel} for every quantizable linear, optionally filtered."""
+    out = {}
+    for path, leaf in utils.tree_paths(params).items():
+        if is_quantizable(path, leaf) and (predicate is None or predicate(path)):
+            out[path] = leaf
+    return out
+
+
+def fisher_hessians(loss_fn, params, batches, *, predicate=None,
+                    grad_dtype="float32", reduction="sum",
+                    microbatch_loop: bool = True):
+    """Output-adaptive Hessians for selected kernels (paper Alg. 1 phase 1).
+
+    loss_fn(params, batch) -> scalar CE loss for ONE calibration sample
+    (per-sample gradients are required by eq. 13: the sum of per-sample outer
+    products is NOT the outer product of the summed gradient).
+
+    batches: array pytree with leading dim N (calibration samples).
+    Returns {path: H (d_in, d_in) float32}.
+    """
+    targets = select_kernels(params, predicate)
+    paths = sorted(targets)
+
+    cast = (lambda t: utils.cast_tree(t, jnp.bfloat16)) \
+        if grad_dtype == "bfloat16" else (lambda t: t)
+
+    def one_sample(H_acc, batch):
+        grads = jax.grad(loss_fn)(cast(params), batch)
+        gsel = utils.tree_paths(grads)
+        new = {}
+        for p in paths:
+            new[p] = oac_hessian_update(H_acc[p], gsel[p])
+        return new, None
+
+    H0 = {p: jnp.zeros((targets[p].shape[0], targets[p].shape[0]),
+                       jnp.float32) for p in paths}
+    if microbatch_loop:
+        H, _ = jax.lax.scan(one_sample, H0, batches)
+    else:  # vmapped per-sample grads (faster, more memory)
+        def per_sample(batch):
+            g = jax.grad(loss_fn)(cast(params), batch)
+            return {p: v for p, v in utils.tree_paths(g).items() if p in H0}
+        G = jax.vmap(per_sample)(batches)
+        H = {p: jnp.einsum("nio,njo->ij", G[p].astype(jnp.float32),
+                           G[p].astype(jnp.float32)) for p in paths}
+    n = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    if reduction == "mean":
+        H = {p: v / n for p, v in H.items()}
+    return H
+
+
+def l2_hessians_from_capture(captured: Dict[str, jnp.ndarray],
+                             reduction="sum", n: int = 1):
+    """Finalize output-agnostic Hessians from model-forward captures.
+
+    ``captured[path]`` already holds sum_i x_i x_i^T (models accumulate the
+    per-layer Gram matrix when probing is enabled).
+    """
+    if reduction == "mean":
+        return {p: v / n for p, v in captured.items()}
+    return dict(captured)
+
+
+def cholesky_inv_upper(H: jnp.ndarray) -> jnp.ndarray:
+    """GPTQ's factor: upper-triangular U with ``H^-1 = U^T U``.
+
+    Row i of U drives the OBS update (paper eq. 3): with columns processed in
+    order, ``[H_F^-1]_{i,i:} = U[i,i] * U[i,i:]`` so
+    ``delta = -(w_i - q_i)/U[i,i] * U[i,i:]`` and the saliency denominator
+    (eq. 4) is ``U[i,i]**2``.
+    """
+    d = H.shape[-1]
+    L = jnp.linalg.cholesky(H)                      # H = L L^T
+    eye = jnp.eye(d, dtype=H.dtype)
+    Linv = jax.scipy.linalg.solve_triangular(L, eye, lower=True)
+    Hinv = Linv.T @ Linv                            # H^-1
+    return jnp.linalg.cholesky(Hinv).T              # upper: Hinv = U^T U
+
+
+def hinv_diag(H: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """diag(H^-1) used by the saliency rule (paper eq. 4)."""
+    Hr = regularize(H, alpha)
+    d = Hr.shape[-1]
+    L = jnp.linalg.cholesky(Hr)
+    Linv = jax.scipy.linalg.solve_triangular(L, jnp.eye(d, dtype=H.dtype),
+                                             lower=True)
+    return jnp.sum(Linv * Linv, axis=0)

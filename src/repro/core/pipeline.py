@@ -1,0 +1,264 @@
+"""OAC pipeline (paper Algorithm 1): block-wise Hessian estimation + calibration.
+
+Per transformer block (= layer index in the scanned stack):
+  Phase 1: forward the *current* model (earlier blocks already quantized) on N
+           calibration samples, backprop the output CE loss, accumulate
+           ``H_oac = sum_i G[i] G[i]^T`` for every linear kernel in the block
+           (paper eq. 22).  Gradients are taken w.r.t. ONLY this block's
+           kernels (others frozen), exactly as the paper batches per block.
+  Phase 2: calibrate each kernel with the chosen Hessian-based method
+           (spqr / optq / billm / rtn), substituting H_oac (or the
+           output-agnostic ``sum x x^T`` for the baselines).
+
+Fault tolerance: with ``ckpt_dir`` set, each finished layer is persisted
+(npz + manifest) and the pipeline resumes after preemption.
+
+Real quantization: calibration runs on fake-quant weights (so later blocks
+see the true quantized model, like the paper), and the packed
+``QuantizedTensor`` stack is assembled at the end via ``pack_results``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import utils
+from repro.configs.base import QuantConfig
+from repro.core import billm as bl
+from repro.core import hessian as hess
+from repro.core import qformat
+from repro.core import solver
+
+# capture-key mapping for output-agnostic (l2) Hessians
+L2_KEY = {
+    "attn/wq": "attn_in", "attn/wk": "attn_in", "attn/wv": "attn_in",
+    "attn/wo": "wo_in",
+    "mlp/wi": "mlp_in", "mlp/wg": "mlp_in", "mlp/wo": "mlp_out_in",
+}
+
+
+def layer_kernel_paths(params) -> Dict[str, jnp.ndarray]:
+    """{'attn/wq': stacked kernel (L, d_in, d_out), ...} under params['layers']."""
+    out = {}
+    for path, leaf in utils.tree_paths(params.get("layers", {})).items():
+        if path.endswith("/kernel") and hasattr(leaf, "ndim") and leaf.ndim >= 3:
+            out[path[1:-len("/kernel")]] = leaf
+    return out
+
+
+def _set_layer_kernel(params, name, j, value):
+    parts = name.split("/")
+    node = params["layers"]
+    for p in parts[:-1]:
+        node = node[p]
+    leaf = node[parts[-1]]["kernel"]
+    node[parts[-1]]["kernel"] = leaf.at[j].set(value.astype(leaf.dtype))
+    return params
+
+
+def _get_layer_kernels(params, j):
+    return {n: leaf[j] for n, leaf in layer_kernel_paths(params).items()}
+
+
+def oac_hessians_for_layer(model, params, batches, j, *,
+                           grad_dtype="float32", reduction="sum"):
+    """Phase 1 for one block: per-sample grads of only block j's kernels."""
+    names = sorted(layer_kernel_paths(params))
+
+    def insert(p, kern):
+        p = jax.tree.map(lambda x: x, p)  # shallow copy of dict structure
+        for n, v in kern.items():
+            _set_layer_kernel(p, n, j, v)
+        return p
+
+    block0 = _get_layer_kernels(params, j)
+    cast = (lambda t: utils.cast_tree(t, jnp.bfloat16)) \
+        if grad_dtype == "bfloat16" else (lambda t: t)
+
+    def loss_of(kern, batch):
+        return model.loss(insert(cast(params), cast(kern)), batch)
+
+    @jax.jit
+    def accumulate(H, batch):
+        g = jax.grad(loss_of)(block0, batch)
+        for n in names:
+            G = g[n].astype(jnp.float32)
+            if G.ndim == 2:
+                H[n] = H[n] + G @ G.T
+            else:  # (E, d_in, d_out) expert stack
+                H[n] = H[n] + jnp.einsum("eio,ejo->eij", G, G)
+        return H
+
+    H = {}
+    for n in names:
+        k = block0[n]
+        shp = (k.shape[0], k.shape[0]) if k.ndim == 2 else \
+            (k.shape[0], k.shape[1], k.shape[1])
+        H[n] = jnp.zeros(shp, jnp.float32)
+    N = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    for i in range(N):
+        b = jax.tree.map(lambda x: x[i:i + 1], batches)
+        H = accumulate(H, b)
+    if reduction == "mean":
+        H = {n: v / N for n, v in H.items()}
+    return H
+
+
+def l2_hessians(model, params, batches):
+    """Output-agnostic Hessians for all layers via forward captures."""
+    @jax.jit
+    def one(batch):
+        _, aux = model.apply(params, batch, capture=True)
+        return aux["xtx"]
+
+    N = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    acc = None
+    for i in range(N):
+        b = jax.tree.map(lambda x: x[i:i + 1], batches)
+        x = one(b)
+        acc = x if acc is None else jax.tree.map(jnp.add, acc, x)
+    return acc  # {capture_key: (L, d, d)}
+
+
+@dataclasses.dataclass
+class LayerResult:
+    name: str
+    layer: int
+    calib: Optional[solver.CalibResult]
+    binary: Optional[bl.BinaryResult]
+    w_hat: np.ndarray
+
+
+def _calibrate_kernel(W, H, qcfg: QuantConfig):
+    if qcfg.method == "rtn":
+        if W.ndim == 3:
+            return jax.vmap(lambda w: solver.rtn_result(
+                w, bits=qcfg.wbits, group_size=qcfg.group_size))(W)
+        return solver.rtn_result(W, bits=qcfg.wbits, group_size=qcfg.group_size)
+    if qcfg.method == "billm":
+        fn = lambda w, h: bl.calibrate_binary(
+            w, h, group_size=qcfg.group_size, alpha=qcfg.alpha)
+        return jax.vmap(fn)(W, H) if W.ndim == 3 else fn(W, H)
+    tau = qcfg.outlier_threshold if qcfg.method == "spqr" else 1e30
+    cap = qcfg.outlier_capacity if qcfg.method == "spqr" else 1e-6
+    fn = lambda w, h: solver.calibrate(
+        w, h, bits=qcfg.wbits, group_size=qcfg.group_size, alpha=qcfg.alpha,
+        tau=tau, outlier_capacity=cap, act_order=qcfg.act_order)
+    return jax.vmap(fn)(W, H) if W.ndim == 3 else fn(W, H)
+
+
+def quantize_model(model, params, batches, qcfg: QuantConfig, *,
+                   sequential: bool = True, ckpt_dir: Optional[str] = None,
+                   log: Callable = print):
+    """Run Algorithm 1 over a uniform-stacked model.
+
+    Returns (params with fake-quant weights, {(<layer>, <name>): LayerResult}).
+    """
+    params = jax.tree.map(lambda x: x, params)
+    names = sorted(layer_kernel_paths(params))
+    n_layers = layer_kernel_paths(params)[names[0]].shape[0]
+    results: Dict = {}
+
+    manifest_path = ckpt_dir and os.path.join(ckpt_dir, "pipeline.json")
+    done = {}
+    if ckpt_dir:
+        os.makedirs(ckpt_dir, exist_ok=True)
+        if os.path.exists(manifest_path):
+            done = json.load(open(manifest_path))
+            log(f"[pipeline] resuming: {len(done)} layer-kernels done")
+
+    l2_caps = None
+    for j in range(n_layers):
+        needs_h = qcfg.method != "rtn"
+        H_blk = None
+        todo = [n for n in names if f"{j}:{n}" not in done]
+        if needs_h and qcfg.hessian == "oac" and todo:
+            H_blk = oac_hessians_for_layer(
+                model, params, batches, j, grad_dtype=qcfg.grad_dtype,
+                reduction=qcfg.hessian_reduction)
+        if needs_h and qcfg.hessian == "l2" and todo and (
+                sequential or l2_caps is None):
+            # sequential error propagation: captures reflect the already-
+            # quantized earlier blocks (SpQR/OPTQ-faithful)
+            l2_caps = l2_hessians(model, params, batches)
+        for n in names:
+            key = f"{j}:{n}"
+            W = _get_layer_kernels(params, j)[n]
+            if key in done:
+                data = np.load(os.path.join(ckpt_dir, done[key]),
+                               allow_pickle=False)
+                w_hat = jnp.asarray(data["w_hat"])
+                params = _set_layer_kernel(params, n, j, w_hat)
+                results[(j, n)] = LayerResult(n, j, None, None,
+                                              np.asarray(w_hat))
+                continue
+            if needs_h:
+                if qcfg.hessian == "oac":
+                    H = H_blk[n]
+                elif qcfg.hessian == "l2":
+                    ck = L2_KEY.get(n)
+                    if ck is None:
+                        raise ValueError(f"no l2 capture for kernel {n}")
+                    H = l2_caps[ck][j]
+                else:  # identity
+                    d = W.shape[-2]
+                    H = jnp.eye(d, dtype=jnp.float32)
+                    if W.ndim == 3:
+                        H = jnp.broadcast_to(H, (W.shape[0], d, d))
+            else:
+                H = None
+            res = _calibrate_kernel(W, H, qcfg)
+            w_hat = res.w_hat
+            params = _set_layer_kernel(params, n, j, w_hat)
+            lr = LayerResult(n, j,
+                             res if isinstance(res, solver.CalibResult) else None,
+                             res if isinstance(res, bl.BinaryResult) else None,
+                             np.asarray(w_hat))
+            results[(j, n)] = lr
+            if ckpt_dir:
+                fname = f"layer{j}_{n.replace('/', '_')}.npz"
+                tmp = os.path.join(ckpt_dir, "tmp_" + fname)  # .npz suffix:
+                np.savez(tmp, w_hat=np.asarray(w_hat))        # savez keeps it
+                os.replace(tmp, os.path.join(ckpt_dir, fname))
+                done[key] = fname
+                with open(manifest_path + ".tmp", "w") as f:
+                    json.dump(done, f)
+                os.replace(manifest_path + ".tmp", manifest_path)
+        log(f"[pipeline] layer {j + 1}/{n_layers} done "
+            f"({qcfg.method}/{qcfg.hessian}, {qcfg.wbits}-bit)")
+    return params, results
+
+
+def pack_results(params, results, qcfg: QuantConfig):
+    """Assemble packed QuantizedTensor stacks from per-layer CalibResults.
+
+    Replaces each layers/<name>/kernel stack with a stacked QuantizedTensor
+    (arrays gain a leading L dim; static meta shared)."""
+    names = sorted(layer_kernel_paths(params))
+    n_layers = layer_kernel_paths(params)[names[0]].shape[0]
+    params = jax.tree.map(lambda x: x, params)
+    for n in names:
+        per_layer = []
+        for j in range(n_layers):
+            r = results[(j, n)].calib
+            if r is None:
+                raise ValueError(f"no packable CalibResult for {j}:{n}")
+            qt = qformat.make_quantized(
+                r.q, r.scales, r.zeros, qcfg.wbits, qcfg.group_size,
+                (r.q.shape[0], r.q.shape[1]), r.out_rows, r.out_cols,
+                r.out_vals.astype(jnp.bfloat16),
+                stats_bits=qcfg.stats_bits, stats_group=qcfg.stats_group)
+            per_layer.append(qt)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+        parts = n.split("/")
+        node = params["layers"]
+        for p in parts[:-1]:
+            node = node[p]
+        node[parts[-1]]["kernel"] = stacked
+    return params

@@ -1,0 +1,248 @@
+"""Quantized-weight storage format: bit-packing, double-quantized stats, outliers.
+
+Layout conventions (all relative to a linear kernel ``W`` of shape
+``(d_in, d_out)`` applied as ``y = x @ W``):
+
+* quantization groups tile the **contraction** axis (d_in), group size ``gs``;
+  grid is asymmetric uniform: ``w ~= scale * (q - zero)``, ``q in [0, 2^b - 1]``.
+* packing is little-endian along d_in:
+    - b in {1, 2, 4, 8}: ``8/b`` values per byte -> packed ``(d_in*b/8, d_out)`` uint8
+    - b == 3: two bit-planes (2-bit plane + 1-bit plane), ``q = lo2 + 4*hi1``
+* first-level stats (scale, zero) per (group, d_out) are *themselves* quantized
+  (SpQR second round, paper Fig. 3 step 7): ``stats_bits`` uniform grid over
+  ``stats_group`` consecutive groups, fp second-level scale/zero.
+* outliers: fixed-capacity COO ``(rows, cols, vals)``; ``vals`` are *additive*
+  corrections on top of the dequantized grid (grid holds round(zero) there), so
+  the fused matmul path is ``x @ deq(Q) + scatter_add``.
+
+Everything here is pure jnp so it can run inside jit on any backend; the
+Pallas kernels in ``repro.kernels.dequant_matmul`` consume the same layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PACKABLE = (1, 2, 3, 4, 8)
+
+
+# --------------------------------------------------------------------------
+# bit packing (jnp, vectorized)
+# --------------------------------------------------------------------------
+
+def _pack_plane(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack q (d_in, d_out) with values < 2**bits into uint8 along axis 0."""
+    per = 8 // bits
+    d_in, d_out = q.shape
+    assert d_in % per == 0, f"d_in={d_in} not divisible by {per} (b={bits})"
+    q = q.astype(jnp.uint8).reshape(d_in // per, per, d_out)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits)[None, :, None]
+    return jnp.sum(q << shifts, axis=1).astype(jnp.uint8)
+
+
+def _unpack_plane(p: jnp.ndarray, bits: int, d_in: int) -> jnp.ndarray:
+    per = 8 // bits
+    mask = jnp.uint8(2 ** bits - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits)[None, :, None]
+    vals = (p[:, None, :] >> shifts) & mask
+    return vals.reshape(per * p.shape[0], p.shape[-1])[:d_in]
+
+
+def pack(q: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, ...]:
+    """Pack integer codes -> tuple of uint8 planes."""
+    assert bits in PACKABLE
+    if bits == 3:
+        lo = q & 0x3
+        hi = (q >> 2) & 0x1
+        return (_pack_plane(lo, 2), _pack_plane(hi, 1))
+    return (_pack_plane(q, bits),)
+
+
+def unpack(planes: Tuple[jnp.ndarray, ...], bits: int, d_in: int) -> jnp.ndarray:
+    assert bits in PACKABLE
+    if bits == 3:
+        lo = _unpack_plane(planes[0], 2, d_in)
+        hi = _unpack_plane(planes[1], 1, d_in)
+        return (lo + (hi << 2)).astype(jnp.uint8)
+    return _unpack_plane(planes[0], bits, d_in)
+
+
+# --------------------------------------------------------------------------
+# double-quantized statistics (SpQR second round)
+# --------------------------------------------------------------------------
+
+def quantize_stats(stats: jnp.ndarray, bits: int, group: int):
+    """Quantize per-group stats (G, d_out) along axis 0 in blocks of ``group``.
+
+    Returns (codes uint8, s2_scale, s2_zero) with block shape (G//group, d_out).
+    """
+    G, d_out = stats.shape
+    pad = (-G) % group
+    if pad:
+        stats = jnp.concatenate(
+            [stats, jnp.repeat(stats[-1:], pad, axis=0)], axis=0)
+    blk = stats.reshape(-1, group, d_out)
+    lo = blk.min(axis=1)
+    hi = blk.max(axis=1)
+    qmax = 2 ** bits - 1
+    scale = jnp.maximum((hi - lo) / qmax, 1e-9)
+    zero = -lo / scale
+    codes = jnp.clip(jnp.round(blk / scale[:, None] + zero[:, None]), 0, qmax)
+    return codes.astype(jnp.uint8), scale, zero
+
+
+def dequantize_stats(codes, s2_scale, s2_zero, G: int):
+    vals = (codes.astype(s2_scale.dtype) - s2_zero[:, None]) * s2_scale[:, None]
+    return vals.reshape(-1, vals.shape[-1])[:G]
+
+
+# --------------------------------------------------------------------------
+# QuantizedTensor pytree
+# --------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["planes", "q_scales", "ss_scale", "ss_zero",
+                      "q_zeros", "zz_scale", "zz_zero",
+                      "out_rows", "out_cols", "out_vals",
+                      "resid_planes", "resid_scales"],
+         meta_fields=["bits", "group_size", "shape", "stats_bits",
+                      "stats_group", "dtype"])
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed low-bit weight for a linear kernel (d_in, d_out)."""
+    planes: Tuple[jnp.ndarray, ...]       # packed uint8 code planes
+    q_scales: jnp.ndarray                 # (G//sg, sg-blocked) codes uint8
+    ss_scale: jnp.ndarray                 # second-level scale for scales
+    ss_zero: jnp.ndarray
+    q_zeros: jnp.ndarray                  # codes for zeros
+    zz_scale: jnp.ndarray
+    zz_zero: jnp.ndarray
+    out_rows: jnp.ndarray                 # (cap,) int32, d_in index
+    out_cols: jnp.ndarray                 # (cap,) int32, d_out index
+    out_vals: jnp.ndarray                 # (cap,) additive corrections
+    resid_planes: Optional[Tuple[jnp.ndarray, ...]]  # BiLLM residual binary
+    resid_scales: Optional[jnp.ndarray]
+    bits: int
+    group_size: int
+    shape: Tuple[int, int]
+    stats_bits: int
+    stats_group: int
+    dtype: str
+
+    # -- reconstruction -----------------------------------------------------
+    @property
+    def n_groups(self) -> int:
+        return self.shape[0] // self.group_size
+
+    def scales_zeros(self):
+        G = self.n_groups
+        scales = dequantize_stats(self.q_scales, self.ss_scale, self.ss_zero, G)
+        zeros = dequantize_stats(self.q_zeros, self.zz_scale, self.zz_zero, G)
+        return scales, zeros
+
+    def dequantize(self) -> jnp.ndarray:
+        """Full-precision reconstruction W_hat (d_in, d_out)."""
+        d_in, d_out = self.shape
+        q = unpack(self.planes, self.bits, d_in).astype(jnp.float32)
+        scales, zeros = self.scales_zeros()
+        q = q.reshape(self.n_groups, self.group_size, d_out)
+        w = (q - zeros[:, None, :]) * scales[:, None, :]
+        w = w.reshape(d_in, d_out)
+        if self.resid_planes is not None:
+            rb = unpack(self.resid_planes, 1, d_in).astype(jnp.float32)
+            w = w + (rb * 2.0 - 1.0) * self.resid_scales  # sign * alpha
+        w = w.at[self.out_rows, self.out_cols].add(self.out_vals)
+        return w.astype(self.dtype)
+
+    def storage_bits(self) -> float:
+        """Actual average bits per weight element (paper "Avg Bits").
+        Works on layer/expert-stacked tensors (leading dims included)."""
+        n = self.shape[0] * self.shape[1]
+        for d in self.planes[0].shape[:-2]:     # stack dims
+            n *= d
+        total = 0
+        for p in self.planes:
+            total += p.size * 8
+        for arr in (self.q_scales, self.q_zeros):
+            total += arr.size * self.stats_bits     # logical 3-bit storage
+        for arr in (self.ss_scale, self.ss_zero, self.zz_scale, self.zz_zero):
+            total += arr.size * 16
+        total += self.out_vals.size * (16 + 32)      # fp16 value + packed index
+        if self.resid_planes is not None:
+            for p in self.resid_planes:
+                total += p.size * 8
+            total += self.resid_scales.size * 16
+        return total / n
+
+
+def make_quantized(q_codes, scales, zeros, bits, group_size, shape,
+                   out_rows, out_cols, out_vals, stats_bits=3, stats_group=16,
+                   dtype="bfloat16", resid_signs=None, resid_scales=None
+                   ) -> QuantizedTensor:
+    """Assemble a QuantizedTensor from calibration outputs."""
+    planes = pack(q_codes, bits)
+    qs, ss, sz = quantize_stats(scales, stats_bits, stats_group)
+    qz, zs, zz = quantize_stats(zeros, stats_bits, stats_group)
+    # second-level stats are stored (and counted) as 16-bit floats
+    ss, sz, zs, zz = (t.astype(jnp.bfloat16) for t in (ss, sz, zs, zz))
+    rp = None
+    if resid_signs is not None:
+        rp = pack(((resid_signs > 0)).astype(jnp.uint8), 1)
+    return QuantizedTensor(
+        planes=planes, q_scales=qs, ss_scale=ss, ss_zero=sz,
+        q_zeros=qz, zz_scale=zs, zz_zero=zz,
+        out_rows=out_rows.astype(jnp.int32), out_cols=out_cols.astype(jnp.int32),
+        out_vals=out_vals,
+        resid_planes=rp, resid_scales=resid_scales,
+        bits=bits, group_size=group_size, shape=tuple(shape),
+        stats_bits=stats_bits, stats_group=stats_group, dtype=dtype)
+
+
+def abstract_quantized(d_in: int, d_out: int, bits: int, group_size: int,
+                       outlier_capacity: float = 0.005, stats_bits=3,
+                       stats_group=16, dtype="bfloat16",
+                       residual: bool = False) -> QuantizedTensor:
+    """ShapeDtypeStruct skeleton of a QuantizedTensor (for dry-run lowering)."""
+    sds = jax.ShapeDtypeStruct
+    G = d_in // group_size
+    GB = -(-G // stats_group)
+    cap = max(int(outlier_capacity * d_in * d_out), 8)
+    if bits == 3:
+        planes = (sds((d_in // 4, d_out), jnp.uint8),
+                  sds((d_in // 8, d_out), jnp.uint8))
+    else:
+        planes = (sds((d_in * bits // 8, d_out), jnp.uint8),)
+    rp, rs = None, None
+    if residual:
+        rp = (sds((d_in // 8, d_out), jnp.uint8),)
+        rs = sds((d_in, d_out), jnp.bfloat16)
+    return QuantizedTensor(
+        planes=planes,
+        q_scales=sds((GB, stats_group, d_out), jnp.uint8),
+        ss_scale=sds((GB, d_out), jnp.bfloat16),
+        ss_zero=sds((GB, d_out), jnp.bfloat16),
+        q_zeros=sds((GB, stats_group, d_out), jnp.uint8),
+        zz_scale=sds((GB, d_out), jnp.bfloat16),
+        zz_zero=sds((GB, d_out), jnp.bfloat16),
+        out_rows=sds((cap,), jnp.int32),
+        out_cols=sds((cap,), jnp.int32),
+        out_vals=sds((cap,), jnp.bfloat16),
+        resid_planes=rp, resid_scales=rs,
+        bits=bits, group_size=group_size, shape=(d_in, d_out),
+        stats_bits=stats_bits, stats_group=stats_group, dtype=dtype)
+
+
+def dequantize_any(k):
+    """Dense reconstruction of a (possibly layer/expert-stacked) tensor."""
+    if not isinstance(k, QuantizedTensor):
+        return k
+    extra = k.planes[0].ndim - 2
+    fn = QuantizedTensor.dequantize
+    for _ in range(extra):
+        fn = jax.vmap(fn)
+    return fn(k)

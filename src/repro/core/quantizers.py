@@ -1,0 +1,135 @@
+"""Grid quantizers: asymmetric uniform (RTN), binary, BiLLM split/residual binary.
+
+All functions operate on blocks of a kernel ``W (d_in, d_out)`` with groups
+tiling the contraction (d_in) axis, matching ``repro.core.qformat``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Grid(NamedTuple):
+    scale: jnp.ndarray   # (..., d_out)
+    zero: jnp.ndarray    # (..., d_out)
+    bits: int
+
+    @property
+    def qmax(self):
+        return 2 ** self.bits - 1
+
+
+def fit_grid(w: jnp.ndarray, bits: int, mask=None) -> Grid:
+    """Min/max asymmetric grid over axis -2 (the group axis).
+
+    ``mask`` (same shape as w, 1=include) lets SpQR exclude detected outliers
+    from the grid fit so inliers get full resolution.
+    """
+    if mask is None:
+        lo = w.min(axis=-2)
+        hi = w.max(axis=-2)
+    else:
+        big = jnp.asarray(jnp.finfo(w.dtype).max, w.dtype)
+        lo = jnp.where(mask > 0, w, big).min(axis=-2)
+        hi = jnp.where(mask > 0, w, -big).max(axis=-2)
+        # all-outlier group: fall back to 0-span grid at 0
+        none = (mask.sum(axis=-2) == 0)
+        lo = jnp.where(none, 0.0, lo)
+        hi = jnp.where(none, 0.0, hi)
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, 0.0)
+    qmax = 2 ** bits - 1
+    scale = jnp.maximum((hi - lo) / qmax, 1e-9)
+    zero = jnp.clip(jnp.round(-lo / scale), 0, qmax)
+    return Grid(scale.astype(jnp.float32), zero.astype(jnp.float32), bits)
+
+
+def quantize(w: jnp.ndarray, grid: Grid) -> jnp.ndarray:
+    """Round w onto the grid -> integer codes."""
+    q = jnp.round(w / grid.scale + grid.zero)
+    return jnp.clip(q, 0, grid.qmax)
+
+
+def dequantize(q: jnp.ndarray, grid: Grid) -> jnp.ndarray:
+    return (q - grid.zero) * grid.scale
+
+
+def rtn_quantize(w: jnp.ndarray, bits: int, group_size: int):
+    """Plain round-to-nearest with group quantization (paper baseline "RTN").
+
+    Returns (codes (d_in,d_out) int, scales (G,d_out), zeros (G,d_out), w_hat).
+    """
+    d_in, d_out = w.shape
+    G = d_in // group_size
+    wg = w.reshape(G, group_size, d_out)
+    grid = fit_grid(wg, bits)
+    q = quantize(wg, Grid(grid.scale[:, None], grid.zero[:, None], bits))
+    w_hat = dequantize(q, Grid(grid.scale[:, None], grid.zero[:, None], bits))
+    return (q.reshape(d_in, d_out).astype(jnp.uint8), grid.scale, grid.zero,
+            w_hat.reshape(d_in, d_out))
+
+
+# --------------------------------------------------------------------------
+# binary quantizers (BiLLM-style building blocks)
+# --------------------------------------------------------------------------
+
+def binary_alpha(w: jnp.ndarray, mask=None, axis=-2):
+    """Optimal per-column binary scale alpha = mean |w| over the group."""
+    aw = jnp.abs(w)
+    if mask is None:
+        return aw.mean(axis=axis)
+    s = (aw * mask).sum(axis=axis)
+    n = jnp.maximum(mask.sum(axis=axis), 1.0)
+    return s / n
+
+
+def residual_binarize(w: jnp.ndarray):
+    """BiLLM residual approximation for salient weights: two binary terms.
+
+    w ~= a1*sign(w) + a2*sign(w - a1*sign(w)).  Returns (w_hat, s1, a1, s2, a2).
+    """
+    a1 = binary_alpha(w)
+    s1 = jnp.where(w >= 0, 1.0, -1.0)
+    r = w - a1 * s1
+    a2 = binary_alpha(r)
+    s2 = jnp.where(r >= 0, 1.0, -1.0)
+    return a1 * s1 + a2 * s2, s1, a1, s2, a2
+
+
+def split_binarize(w: jnp.ndarray, n_splits: int = 16):
+    """BiLLM bell-shaped splitting for non-salient weights.
+
+    Searches a break point p* in |w| that splits the group into small/large
+    magnitude sets, each binarized with its own alpha; minimizes l2 error.
+    Returns (w_hat, best_p, alphas).  Shapes: w (..., group, d_out).
+    """
+    aw = jnp.abs(w)
+    amax = aw.max(axis=-2, keepdims=True)
+    # candidate break points: fractions of max |w|
+    fracs = jnp.linspace(0.05, 0.95, n_splits)
+
+    def err_for(frac):
+        p = amax * frac
+        small = (aw <= p).astype(w.dtype)
+        a_s = binary_alpha(w, small)
+        a_l = binary_alpha(w, 1.0 - small)
+        sg = jnp.where(w >= 0, 1.0, -1.0)
+        w_hat = sg * jnp.where(small > 0, a_s[..., None, :], a_l[..., None, :])
+        return ((w - w_hat) ** 2).sum(axis=-2), frac
+
+    errs = []
+    for i in range(n_splits):
+        e, _ = err_for(fracs[i])
+        errs.append(e)
+    errs = jnp.stack(errs)                      # (n_splits, ..., d_out)
+    best = jnp.argmin(errs, axis=0)             # (..., d_out)
+    best_frac = fracs[best]
+    p = amax * best_frac[..., None, :]
+    small = (aw <= p).astype(w.dtype)
+    a_s = binary_alpha(w, small)
+    a_l = binary_alpha(w, 1.0 - small)
+    sg = jnp.where(w >= 0, 1.0, -1.0)
+    w_hat = sg * jnp.where(small > 0, a_s[..., None, :], a_l[..., None, :])
+    return w_hat, best_frac, (a_s, a_l)

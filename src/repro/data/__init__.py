@@ -1,0 +1,3 @@
+from repro.data.pipeline import (SyntheticCorpus, DataIterator, make_calib_set)
+
+__all__ = ["SyntheticCorpus", "DataIterator", "make_calib_set"]

@@ -1,0 +1,104 @@
+"""Synthetic corpus + deterministic sharded data iterator.
+
+Offline stand-in for the paper's C4/RedPajama/WikiText2 loaders (DESIGN.md §7).
+The corpus is a Zipf-weighted first-order Markov chain with document
+boundaries — enough structure that a toy LM trains to a meaningful
+distribution, so quantization-distortion orderings (RTN vs OPTQ vs SpQR vs
+OAC) are measurable.
+
+Determinism contract (fault tolerance / elastic scaling):
+  batch = f(seed, split, global_step, shard_id, num_shards)
+with *stateless* indexing — any host can materialize any shard of any step,
+so restarts/reshards never need a data-state exchange beyond the step counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+_SPLIT_SALT = {"train": 0x1, "valid": 0x2, "calib": 0x3, "test": 0x4}
+
+
+@dataclasses.dataclass
+class SyntheticCorpus:
+    vocab: int
+    seq_len: int
+    seed: int = 0
+    branching: int = 24     # out-degree of the Markov chain
+    doc_len: int = 512      # expected document length (boundary resets)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        V = self.vocab
+        # Zipfian stationary-ish distribution
+        ranks = np.arange(1, V + 1)
+        self.unigram = (1.0 / ranks ** 1.1)
+        self.unigram /= self.unigram.sum()
+        # sparse random transition structure: each token -> `branching`
+        # successors with Zipf-weighted probabilities
+        self.succ = rng.integers(0, V, size=(V, self.branching))
+        w = rng.dirichlet(np.ones(self.branching) * 0.5, size=V)
+        self.succ_cum = np.cumsum(w, axis=1)
+
+    def sample(self, rng: np.random.Generator, batch: int) -> np.ndarray:
+        V, S = self.vocab, self.seq_len
+        toks = np.empty((batch, S), np.int64)
+        cur = rng.choice(V, size=batch, p=self.unigram)
+        boundary_p = 1.0 / self.doc_len
+        for t in range(S):
+            toks[:, t] = cur
+            u = rng.random(batch)
+            nxt_idx = (u[:, None] < self.succ_cum[cur]).argmax(axis=1)
+            cur = self.succ[cur, nxt_idx]
+            # document boundaries resample from the unigram
+            reset = rng.random(batch) < boundary_p
+            if reset.any():
+                cur[reset] = rng.choice(V, size=int(reset.sum()),
+                                        p=self.unigram)
+        return toks.astype(np.int32)
+
+    def batch(self, split: str, step: int, batch_size: int,
+              shard_id: int = 0, num_shards: int = 1) -> Dict[str, np.ndarray]:
+        assert batch_size % num_shards == 0
+        per = batch_size // num_shards
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + _SPLIT_SALT[split]) ^
+            (step * 2_654_435_761 + shard_id) & 0x7FFFFFFF)
+        return {"tokens": self.sample(rng, per)}
+
+
+@dataclasses.dataclass
+class DataIterator:
+    """Stateful view over the stateless corpus; `state` goes in checkpoints."""
+    corpus: SyntheticCorpus
+    split: str
+    batch_size: int
+    shard_id: int = 0
+    num_shards: int = 1
+    step: int = 0
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self):
+        b = self.corpus.batch(self.split, self.step, self.batch_size,
+                              self.shard_id, self.num_shards)
+        self.step += 1
+        return b
+
+    @property
+    def state(self):
+        return {"step": self.step}
+
+    def restore(self, state):
+        self.step = int(state["step"])
+        return self
+
+
+def make_calib_set(corpus: SyntheticCorpus, n: int, batch: int = 1
+                   ) -> Dict[str, np.ndarray]:
+    """The paper's calibration set: n sequences stacked (n, seq_len)."""
+    out = [corpus.batch("calib", i, batch)["tokens"] for i in range(n)]
+    return {"tokens": np.concatenate(out, axis=0)}

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: VMEM-resident OPTQ block calibration step.
+
+GPTQ's sequential quantize -> error -> rank-1 update loop is memory-latency
+bound on GPUs (the "lazy batch" trick exists to fight HBM churn).  TPU
+adaptation (DESIGN.md §3): one quantization group (B consecutive contraction
+rows) and a (bn)-wide tile of output columns are pinned in VMEM together
+with the (B, B) local Cholesky block; the whole sequential loop runs
+on-chip and writes Q / E / W_hat back once.  The grid is embarrassingly
+parallel over output-column tiles; cross-block propagation (one MXU matmul
+per block) happens in ops.py / solver.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(w_ref, u_ref, s_ref, z_ref, m_ref, q_ref, e_ref, h_ref, *,
+            bits: int):
+    B, bn = w_ref.shape
+    qmax = float(2 ** bits - 1)
+    scale = s_ref[0, :]
+    zero = z_ref[0, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (B, bn), 0)
+
+    def body(i, W):
+        w_i = W[i, :]
+        q_i = jnp.clip(jnp.round(w_i / scale + zero), 0.0, qmax)
+        dq = (q_i - zero) * scale
+        o_i = m_ref[i, :] > 0
+        dq_eff = jnp.where(o_i, w_i, dq)
+        u_ii = u_ref[i, i]
+        err = (w_i - dq_eff) / u_ii
+        upd = u_ref[i, :][:, None] * err[None, :]
+        W = W - jnp.where(rows > i, upd, 0.0)
+        q_ref[i, :] = q_i.astype(jnp.float32)
+        e_ref[i, :] = err
+        h_ref[i, :] = dq_eff
+        return W
+
+    jax.lax.fori_loop(0, B, body, w_ref[...], unroll=False)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bn", "interpret"))
+def calib_block_kernel(W, U, scale, zero, omask, *, bits, bn=256,
+                       interpret=False):
+    """One OPTQ group step.  W (B, N); U (B, B); scale/zero (N,); omask (B, N).
+
+    Returns (Q (B,N) f32 codes, E (B,N) errors, W_hat (B,N)).
+    """
+    B, N = W.shape
+    bn = min(bn, N)
+    assert N % bn == 0, (N, bn)
+    grid = (N // bn,)
+    kern = functools.partial(_kernel, bits=bits)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bn), lambda j: (0, j)),
+            pl.BlockSpec((B, B), lambda j: (0, 0)),
+            pl.BlockSpec((1, bn), lambda j: (0, j)),
+            pl.BlockSpec((1, bn), lambda j: (0, j)),
+            pl.BlockSpec((B, bn), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, bn), lambda j: (0, j)),
+            pl.BlockSpec((B, bn), lambda j: (0, j)),
+            pl.BlockSpec((B, bn), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(W, U, scale[None, :], zero[None, :], omask)

@@ -1,0 +1,23 @@
+"""Public op: one OPTQ group-block calibration step (kernel or oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.calib_update import kernel as _k
+from repro.kernels.calib_update import ref as _r
+
+
+def calib_block(W, U, scale, zero, omask, *, bits, force_kernel=False,
+                interpret=False):
+    """Returns (Q uint8, E, W_hat) for one (B, N) group tile."""
+    on_tpu = jax.default_backend() == "tpu"
+    if force_kernel or on_tpu:
+        q, e, h = _k.calib_block_kernel(
+            W.astype(jnp.float32), U.astype(jnp.float32),
+            scale.astype(jnp.float32), zero.astype(jnp.float32),
+            omask.astype(jnp.float32), bits=bits,
+            interpret=interpret or not on_tpu)
+        return q.astype(jnp.uint8), e, h
+    return _r.block_step_ref(W.astype(jnp.float32), U.astype(jnp.float32),
+                             scale, zero, omask, bits)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for one OPTQ block step (matches solver.calibrate's inner
+loop): quantize B consecutive contraction rows of a (B, bn) tile with the
+group grid, propagating the OBS error within the block.
+
+Inputs:
+  W   (B, bn)  current weight tile (one quant group)
+  U   (B, B)   the local upper-Cholesky block of H^-1
+  scale, zero (bn,) the group grid (precomputed, outliers excluded)
+  omask (B, bn) 1.0 where the weight is an outlier (kept exact)
+Outputs: (Q codes uint8, E errors, W_hat tile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_step_ref(W, U, scale, zero, omask, bits: int):
+    B, bn = W.shape
+    qmax = 2 ** bits - 1
+
+    def col(carry, i):
+        Wb, Q, E, Wh = carry
+        w_i = Wb[i]
+        q_i = jnp.clip(jnp.round(w_i / scale + zero), 0, qmax)
+        dq = (q_i - zero) * scale
+        o_i = omask[i] > 0
+        dq_eff = jnp.where(o_i, w_i, dq)
+        err = (w_i - dq_eff) / U[i, i]
+        upd = U[i][:, None] * err[None, :]
+        row_mask = (jnp.arange(B) > i)[:, None]
+        Wb = Wb - jnp.where(row_mask, upd, 0.0)
+        return (Wb, Q.at[i].set(q_i.astype(jnp.uint8)), E.at[i].set(err),
+                Wh.at[i].set(dq_eff)), None
+
+    init = (W, jnp.zeros((B, bn), jnp.uint8), jnp.zeros((B, bn), W.dtype),
+            jnp.zeros((B, bn), W.dtype))
+    (Wb, Q, E, Wh), _ = jax.lax.scan(col, init, jnp.arange(B))
+    return Q, E, Wh

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused group-dequant (2/3/4/8-bit packed) matmul.
+
+The serving hot-spot for OAC-quantized checkpoints: streams packed uint8
+code planes HBM->VMEM, unpacks to the MXU input dtype in VREGs, applies the
+per-(group, column) scale/zero, and accumulates ``x @ W_deq`` on the MXU —
+the bf16 weight tile never exists in HBM.
+
+Tiling: grid (M/bm, N/bn, K/bk); K blocks are multiples of the quant group;
+the f32 accumulator lives in the output VMEM block across the K loop
+(``dimension_semantics=(parallel, parallel, arbitrary)``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_block(refs, bits: int, bk: int):
+    """uint8 plane block(s) -> (bk, bn) int32 codes."""
+    if bits == 3:
+        lo = _unpack_plane(refs[0][...], 2)
+        hi = _unpack_plane(refs[1][...], 1)
+        return lo + (hi << 2)
+    return _unpack_plane(refs[0][...], bits)
+
+
+def _unpack_plane(p, bits: int):
+    """p (rows, bn) uint8, little-endian along rows -> (rows*8/bits, bn)."""
+    per = 8 // bits
+    rows, bn = p.shape
+    x = p.astype(jnp.int32)                      # (rows, bn)
+    shifts = (jnp.arange(per, dtype=jnp.int32) * bits)[None, :, None]
+    vals = (x[:, None, :] >> shifts) & (2 ** bits - 1)
+    return vals.reshape(rows * per, bn)
+
+
+def _kernel(x_ref, *refs, bits, group_size, out_dtype):
+    n_planes = 2 if bits == 3 else 1
+    planes = refs[:n_planes]
+    s_ref, z_ref, o_ref = refs[n_planes:]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bk = x_ref.shape[1]
+    bn = o_ref.shape[1]
+    codes = _unpack_block(planes, bits, bk).astype(jnp.float32)  # (bk, bn)
+    gb = bk // group_size
+    q = codes.reshape(gb, group_size, bn)
+    w = (q - z_ref[...][:, None, :]) * s_ref[...][:, None, :]
+    w = w.reshape(bk, bn).astype(x_ref.dtype)
+    o_ref[...] += jax.lax.dot(x_ref[...], w,
+                              preferred_element_type=jnp.float32)
+
+
+def _plane_rows(bits: int):
+    if bits == 3:
+        return (4, 8)     # 2-bit plane: 4 vals/byte; 1-bit plane: 8 vals/byte
+    return (8 // bits,)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm",
+                                             "bn", "bk", "interpret"))
+def dequant_matmul_kernel(x, planes, scales, zeros, *, bits, group_size,
+                          bm=128, bn=256, bk=512, interpret=False):
+    """x (M, K) x packed (K, N) -> (M, N) f32.
+
+    planes: tuple of uint8 arrays ((K*b/8, N)) per qformat packing.
+    scales/zeros: (K//gs, N) f32 (already double-dequantized).
+    """
+    M, K = x.shape
+    N = scales.shape[1]
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    bk = max((bk // group_size) * group_size, group_size)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    grid = (M // bm, N // bn, K // bk)
+
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))]
+    for per in _plane_rows(bits):
+        in_specs.append(
+            pl.BlockSpec((bk // per, bn), lambda i, j, k: (k, j)))
+    gb = bk // group_size
+    in_specs.append(pl.BlockSpec((gb, bn), lambda i, j, k: (k, j)))
+    in_specs.append(pl.BlockSpec((gb, bn), lambda i, j, k: (k, j)))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group_size=group_size,
+                          out_dtype=jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, *planes, scales, zeros)

@@ -1,0 +1,83 @@
+"""Public op: y = x @ W_quant (+ COO outlier correction).
+
+Dispatch:
+  * TPU: the Pallas kernel (packed planes stream HBM->VMEM, see kernel.py);
+  * otherwise (CPU container, dry-run lowering): a BLOCKWISE jnp path that
+    mirrors the kernel's tiling — each N-tile of W is unpacked transiently
+    inside a scan body, so the bf16 weight matrix never materializes in HBM.
+    This keeps the dry-run roofline honest about the packed-weight traffic.
+
+The SpQR outlier correction ``y[:, col] += x[:, row] * val`` is a fixed-
+capacity COO scatter applied after the matmul (additive convention of
+qformat).  Stacked QuantizedTensors (leading layer/expert dims) are handled
+by the callers slicing before apply (scan) or vmapping.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qformat import QuantizedTensor, unpack
+from repro.kernels.dequant_matmul import kernel as _k
+
+_N_BLOCK = 1024
+
+
+def _outlier_correction(x2, qt: QuantizedTensor, y):
+    """x2 (M, K); y (M, N) += scatter-add of COO corrections."""
+    xa = x2[:, qt.out_rows]                         # (M, cap)
+    upd = xa * qt.out_vals.astype(x2.dtype)[None, :]
+    return y.at[:, qt.out_cols].add(upd.astype(y.dtype))
+
+
+def _jnp_blockwise(x2, qt: QuantizedTensor):
+    K, N = qt.shape
+    nb = max(N // _N_BLOCK, 1)
+    while N % nb:
+        nb -= 1
+    bn = N // nb
+    scales, zeros = qt.scales_zeros()
+
+    def block(_, bi):
+        planes_b = tuple(
+            jax.lax.dynamic_slice_in_dim(p, bi * bn, bn, axis=1)
+            for p in qt.planes)
+        s_b = jax.lax.dynamic_slice_in_dim(scales, bi * bn, bn, axis=1)
+        z_b = jax.lax.dynamic_slice_in_dim(zeros, bi * bn, bn, axis=1)
+        codes = unpack(planes_b, qt.bits, K).astype(jnp.float32)
+        q = codes.reshape(qt.n_groups, qt.group_size, bn)
+        w = ((q - z_b[:, None, :]) * s_b[:, None, :]).reshape(K, bn)
+        if qt.resid_planes is not None:
+            rb = unpack(tuple(
+                jax.lax.dynamic_slice_in_dim(p, bi * bn, bn, axis=1)
+                for p in qt.resid_planes), 1, K).astype(jnp.float32)
+            rs = jax.lax.dynamic_slice_in_dim(qt.resid_scales, bi * bn, bn,
+                                              axis=1)
+            w = w + (rb * 2.0 - 1.0) * rs
+        return None, x2 @ w.astype(x2.dtype)
+
+    _, ys = jax.lax.scan(block, None, jnp.arange(nb))
+    # ys (nb, M, bn) -> (M, N)
+    return jnp.moveaxis(ys, 0, 1).reshape(x2.shape[0], N)
+
+
+def dequant_matmul(x, qt: QuantizedTensor, *, force_kernel: bool = False,
+                   interpret: bool = False):
+    """x (..., K) @ packed (K, N) -> (..., N) in x.dtype."""
+    lead = x.shape[:-1]
+    K, N = qt.shape
+    x2 = x.reshape(-1, K)
+    on_tpu = jax.default_backend() == "tpu"
+    if force_kernel or on_tpu:
+        scales, zeros = qt.scales_zeros()
+        M = x2.shape[0]
+        bm = M if M < 128 else 128
+        y = _k.dequant_matmul_kernel(
+            x2, qt.planes, scales.astype(jnp.float32),
+            zeros.astype(jnp.float32), bits=qt.bits,
+            group_size=qt.group_size, bm=bm,
+            interpret=interpret or not on_tpu)
+    else:
+        y = _jnp_blockwise(x2, qt)
+    y = _outlier_correction(x2, qt, y)
+    return y.reshape(*lead, N).astype(x.dtype)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused group-dequant matmul.
+
+y = x @ dequant(codes, scales, zeros) with groups tiling the contraction dim.
+Outlier COO correction is applied OUTSIDE the kernel (see ops.py) and is
+therefore not part of this oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_ref(codes, scales, zeros, group_size: int):
+    """codes (K, N) uint8 -> W (K, N) f32; scales/zeros (K//gs, N)."""
+    K, N = codes.shape
+    G = K // group_size
+    q = codes.astype(jnp.float32).reshape(G, group_size, N)
+    w = (q - zeros[:, None, :]) * scales[:, None, :]
+    return w.reshape(K, N)
+
+
+def dequant_matmul_ref(x, codes, scales, zeros, group_size: int):
+    """x (M, K) @ dequant(codes) -> (M, N) f32."""
+    w = dequant_ref(codes, scales, zeros, group_size)
+    return x.astype(jnp.float32) @ w

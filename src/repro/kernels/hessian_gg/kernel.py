@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: symmetric rank-k update H += G G^T (OAC phase 1).
+
+The output-adaptive Hessian (paper eq. 14/22) is symmetric, so only the
+lower-triangular blocks need computing — the grid is the flattened triangle
+T = I*(I+1)/2 of (bi x bi) output tiles, decoded back to (i, j) inside the
+index maps.  This halves MXU work vs the naive d_in^2 d_out matmul; ops.py
+mirrors the result.  The contraction (d_out) dim is the innermost
+``arbitrary`` grid axis accumulating into the output VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tri_ij(t):
+    """Triangle index t -> (i, j), j <= i, row-major over the triangle."""
+    tf = t.astype(jnp.float32)
+    i = jnp.floor((jnp.sqrt(8.0 * tf + 1.0) - 1.0) / 2.0).astype(jnp.int32)
+    # guard float rounding at triangle boundaries
+    base = (i * (i + 1)) // 2
+    i = jnp.where(base > t, i - 1, i)
+    i = jnp.where((i + 1) * (i + 2) // 2 <= t, i + 1, i)
+    j = t - (i * (i + 1)) // 2
+    return i, j
+
+
+def _kernel(gi_ref, gj_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        gi_ref[...], gj_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bk", "interpret"))
+def gg_tri_kernel(G, *, bi=256, bk=512, interpret=False):
+    """G (D, d_out) -> lower-triangle blocks of G @ G^T, rest zeros."""
+    D, d_out = G.shape
+    bi = min(bi, D)
+    bk = min(bk, d_out)
+    assert D % bi == 0 and d_out % bk == 0, (D, d_out, bi, bk)
+    nI = D // bi
+    T = nI * (nI + 1) // 2
+    grid = (T, d_out // bk)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bk), lambda t, k: (_tri_ij(t)[0], k)),
+            pl.BlockSpec((bi, bk), lambda t, k: (_tri_ij(t)[1], k)),
+        ],
+        out_specs=pl.BlockSpec((bi, bi), lambda t, k: _tri_ij(t)),
+        out_shape=jax.ShapeDtypeStruct((D, D), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(G, G)

@@ -1,0 +1,35 @@
+"""Public op: H += G G^T using the triangular kernel on TPU.
+
+The kernel fills the lower-triangular blocks; this wrapper mirrors them into
+the full symmetric matrix and accumulates.  Non-TPU backends use the plain
+einsum oracle (XLA's gemm is already optimal there and the dry-run counts
+its FLOPs faithfully).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hessian_gg import kernel as _k
+from repro.kernels.hessian_gg import ref as _r
+
+
+def _mirror(L, bi):
+    """Lower-block-triangular L -> full symmetric (diag blocks kept once)."""
+    D = L.shape[0]
+    mask = jnp.tril(jnp.ones((D, D), bool))
+    Lt = jnp.where(mask, L, 0.0)
+    return Lt + jnp.where(mask & ~jnp.eye(D, dtype=bool), Lt, 0.0).T
+
+
+def gg_update(G, H=None, *, force_kernel=False, interpret=False, bi=256):
+    on_tpu = jax.default_backend() == "tpu"
+    if not (force_kernel or on_tpu):
+        return _r.gg_ref(G, H)
+    D = G.shape[0]
+    bi = min(bi, D)
+    while D % bi:
+        bi //= 2
+    tri = _k.gg_tri_kernel(G, bi=bi, interpret=interpret or not on_tpu)
+    full = _mirror(tri, bi)
+    return full if H is None else H + full

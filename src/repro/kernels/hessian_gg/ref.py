@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the symmetric Hessian accumulation H += G G^T."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gg_ref(G, H=None):
+    """G (d_in, d_out) -> H (d_in, d_in) += G @ G^T (fp32)."""
+    Gf = G.astype(jnp.float32)
+    out = Gf @ Gf.T
+    return out if H is None else H + out

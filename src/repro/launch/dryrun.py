@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod, 2x16x16 multi-pod),
+  2. builds the pjit'd step (train_step for train shapes, prefill/serve
+     otherwise) with full sharding specs,
+  3. ``.lower(*abstract_args).compile()`` — no device allocation,
+  4. records ``compiled.memory_analysis()`` (proves it fits) and
+     ``cost_analysis()`` + HLO collective bytes (feeds §Roofline).
+
+Results land in artifacts/dryrun/<cell>.json; EXPERIMENTS.md §Dry-run and the
+roofline benchmark read from there.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import SHAPES_BY_NAME, cells, get_config, skipped_cells  # noqa: E402
+from repro.dist.steps import build_step                                     # noqa: E402
+from repro.launch.mesh import make_production_mesh                          # noqa: E402
+from repro.roofline.analysis import analyze_lowered                         # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             save: bool = True, verbose: bool = True, quantized: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    kw = {}
+    if quantized and shape.kind == "decode":
+        from repro.serving.quantized import abstract_quantized_params
+        kw["quantized_params_sds"] = abstract_quantized_params(cfg)
+    with jax.set_mesh(mesh):
+        jitted, abstract_args, ctx = build_step(cfg, shape, mesh, **kw)
+        lowered = jitted.lower(*abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem_obj = compiled.memory_analysis()
+    mem = {a: getattr(mem_obj, a) for a in dir(mem_obj)
+           if a.endswith("_in_bytes") and isinstance(getattr(mem_obj, a), int)}
+    cost = compiled.cost_analysis()
+    roof = analyze_lowered(lowered, compiled, cfg, shape, mesh)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "quantized": quantized,
+        "attn_modes": [ctx.attn_train_mode, ctx.attn_decode_mode],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "cost": {k: cost[k] for k in sorted(cost)
+                                if isinstance(cost[k], (int, float))},
+        "roofline": roof,
+    }
+    if verbose:
+        gb = mem.get("argument_size_in_bytes", 0) / 2**30
+        tmp = mem.get("temp_size_in_bytes", 0) / 2**30
+        total = (mem.get("argument_size_in_bytes", 0)
+                 + mem.get("temp_size_in_bytes", 0)
+                 + mem.get("output_size_in_bytes", 0)
+                 - mem.get("alias_size_in_bytes", 0)) / 2**30
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}"
+              f"{' [w2]' if quantized else ''}: OK "
+              f"args={gb:.2f}GiB temp={tmp:.2f}GiB "
+              f"total~{total:.2f}GiB/dev compile={t_compile:.0f}s "
+              f"bottleneck={roof['bottleneck']}", flush=True)
+        print(f"  memory_analysis: {mem}", flush=True)
+        print(f"  flops={roof['hlo_flops']:.3e} "
+              f"bytes={roof['hlo_bytes']:.3e} "
+              f"coll_bytes={roof['collective_bytes']:.3e}", flush=True)
+    if save:
+        os.makedirs(ART, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{rec['mesh']}" + \
+            ("__w2" if quantized else "")
+        with open(os.path.join(ART, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quantized", action="store_true",
+                    help="serve_step with 2-bit packed weights (decode cells)")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        todo = [(c.name, s.name) for c, s in cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in todo:
+        try:
+            run_cell(arch, shape, multi_pod=args.multi_pod,
+                     quantized=args.quantized)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)[:200]))
+            if not args.continue_on_error:
+                sys.exit(1)
+    for a, s, r in skipped_cells():
+        print(f"[dryrun] SKIP {a} x {s}: {r}")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", f)
+        sys.exit(1)
+    print(f"[dryrun] all {len(todo)} cells compiled OK "
+          f"({'multi-pod 2x16x16' if args.multi_pod else 'single-pod 16x16'})")
+
+
+if __name__ == "__main__":
+    main()

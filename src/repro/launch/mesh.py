@@ -1,0 +1,21 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run driver must set XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model); the ``pod`` axis
+    extends data parallelism across the inter-pod DCN/ICI links."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever local devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

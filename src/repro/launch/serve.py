@@ -1,0 +1,45 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--wbits 2]``.
+
+Builds a (reduced) model, optionally RTN-quantizes it to packed low-bit
+storage, and serves a demo batch of requests through the engine.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import QuantConfig
+from repro.models import build_model
+from repro.serving.engine import Engine
+from repro.serving.quantized import quantize_params_rtn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="toy-llama")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--wbits", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    if args.wbits < 16:
+        params = quantize_params_rtn(
+            params, QuantConfig(wbits=args.wbits, group_size=32))
+        print(f"[serve] packed weights to w{args.wbits}")
+    eng = Engine(cfg, params, max_batch=args.requests, capacity=128)
+    rng = np.random.default_rng(0)
+    rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
+                     max_tokens=args.max_tokens)
+          for _ in range(args.requests)]
+    eng.run()
+    for r in rs:
+        print(f"[serve] req {r.rid}: {r.out}")
+
+
+if __name__ == "__main__":
+    main()

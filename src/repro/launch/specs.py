@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run lowering).
+
+No device allocation — everything here is abstract.  ``input_specs`` covers
+the train/prefill batch; ``decode_specs`` covers the serve_step operands
+(token, KV cache at seq_len occupancy, position scalar).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, act_dtype=jnp.bfloat16):
+    """Batch pytree of ShapeDtypeStructs for a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        F = cfg.n_frontend_tokens
+        return {"tokens": SDS((B, S - F), jnp.int32),
+                "frontend": SDS((B, F, cfg.d_model), act_dtype)}
+    if cfg.family == "audio":
+        return {"tokens": SDS((B, S), jnp.int32),
+                "frontend": SDS((B, S, cfg.d_model), act_dtype)}
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 cache_dtype=jnp.bfloat16, act_dtype=jnp.bfloat16):
+    """(tokens, cache, pos) ShapeDtypeStructs for one serve_step.
+
+    The cache has capacity seq_len and is prefilled to seq_len-1; the step
+    appends the incoming token and attends over the full window."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    cache = model.init_cache(B, S, dtype=cache_dtype, abstract=True)
+    if cfg.family == "audio":
+        tokens = SDS((B, 1, cfg.d_model), act_dtype)  # stub frame embedding
+    else:
+        tokens = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return tokens, cache, pos
+
+
+def concrete_batch(cfg: ModelConfig, B: int, S: int, key=None, dtype=jnp.float32):
+    """Small concrete batch for smoke tests."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.family == "vlm":
+        F = cfg.n_frontend_tokens
+        return {"tokens": jax.random.randint(key, (B, S - F), 0, cfg.vocab),
+                "frontend": jax.random.normal(key, (B, F, cfg.d_model),
+                                              dtype) * 0.02}
+    if cfg.family == "audio":
+        return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+                "frontend": jax.random.normal(key, (B, S, cfg.d_model),
+                                              dtype) * 0.02}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}

@@ -1,0 +1,45 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant training loop on the local devices (CPU smoke / a
+real TPU slice — the same code path; the dry-run driver validates the
+production-mesh lowering).  Reduced configs via --smoke.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import TrainConfig
+from repro.data import DataIterator, SyntheticCorpus
+from repro.models import build_model
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="toy-llama")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=args.seq, seed=7)
+    it = DataIterator(corpus, "train", args.batch)
+    tcfg = TrainConfig(steps=args.steps, lr=args.lr, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=max(args.steps // 4, 1),
+                       grad_compression=args.grad_compression)
+    params, losses = train(m, params, it, tcfg)
+    print(f"[train] done: first={losses[0]:.4f} last={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

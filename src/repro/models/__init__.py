@@ -1,0 +1,9 @@
+"""Model zoo public API."""
+from repro.models.transformer import Model
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)
+
+
+__all__ = ["Model", "build_model"]

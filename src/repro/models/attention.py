@@ -1,0 +1,315 @@
+"""GQA attention: chunked-causal (train/prefill) and cached decode.
+
+Memory discipline: the (Sq x Skv) score matrix is never fully materialized —
+queries are processed in chunks via ``lax.scan`` (TPU: each chunk's scores
+fit VMEM; XLA pipelines the chunks).  GQA is computed grouped
+(``q (B,S,KV,rep,Dh)``) so KV heads are never repeated in memory.
+
+Decode supports two layouts:
+  * dense: scores over the full cache (KV-head-sharded when divisible);
+  * partial: returns (unnormalized out, max, sumexp) per KV shard so the
+    distribution layer can combine across a KV-length-sharded cache
+    (flash-decoding style) — used when head counts don't divide the TP axis
+    and for long-context cells.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.linear_init(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias,
+                            dtype=dtype),
+        "wk": L.linear_init(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias,
+                            dtype=dtype),
+        "wv": L.linear_init(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias,
+                            dtype=dtype),
+        "wo": L.linear_init(ks[3], cfg.n_heads * hd, d, dtype=dtype),
+    }
+
+
+def qkv_project(p, x, cfg, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.linear(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = L.linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.pos == "rope":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _pick_chunk(S, target=512):
+    if S <= target:
+        return S
+    c = target
+    while S % c:
+        c //= 2
+    return max(c, 1)
+
+
+def causal_attention(q, k, v, *, window: int = 0, q_offset=0,
+                     q_chunk: int = 256, kv_chunk: int = 1024):
+    """Flash-style double-blocked causal attention (online softmax).
+
+    q (B,Sq,H,Dh); k,v (B,Skv,KV,Dh).  Query i attends keys j with
+    j <= i + q_offset (and i+q_offset-j < window when window>0).  Scores
+    exist only per (q_chunk x kv_chunk) block — the O(Sq*Skv) matrix never
+    reaches HBM, which turns 32k-prefill from score-traffic-bound to
+    compute-bound (EXPERIMENTS.md §Perf).  Off-causal blocks are masked, not
+    skipped (block-skipping needs dynamic trip counts that break reverse-mode
+    AD; the Pallas splash kernel is the real-TPU answer).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    rep = H // KV
+    scale = Dh ** -0.5
+    qg = (q * scale).reshape(B, Sq, KV, rep, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    Cq = _pick_chunk(Sq, q_chunk)
+    Ck = _pick_chunk(Skv, kv_chunk)
+
+    def q_body(_, qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * Cq, Cq, axis=1)
+        qpos = q_offset + qi * Cq + jnp.arange(Cq)
+
+        def kv_body(carry, kj):
+            o, m, l = carry
+            kc = jax.lax.dynamic_slice_in_dim(kf, kj * Ck, Ck, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, kj * Ck, Ck, axis=1)
+            kpos = kj * Ck + jnp.arange(Ck)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qc, kc)
+            msk = kpos[None, :] <= qpos[:, None]
+            if window:
+                msk &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            o = o * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p, vc.astype(jnp.float32))
+            return (o, m_new, l), None
+
+        # derive carries from qc so they inherit shard_map's varying-axis
+        # typing (fresh jnp.zeros is "unvarying" and fails the scan carry
+        # check when this runs inside the seq_shard shard_map)
+        o0 = jnp.moveaxis(qc, 1, 3) * 0.0             # (B,KV,rep,Cq,Dh)
+        m0 = o0[..., 0] + NEG_INF
+        l0 = o0[..., 0]
+        (o, m, l), _ = jax.lax.scan(kv_body, (o0, m0, l0),
+                                    jnp.arange(Skv // Ck))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return None, o.astype(v.dtype)                # (B,KV,rep,Cq,Dh)
+
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(Sq // Cq))
+    # outs (nq, B, KV, rep, Cq, Dh) -> (B, Sq, H, Dh)
+    o = jnp.moveaxis(outs, 0, 3)                      # (B,KV,rep,nq,Cq,Dh)
+    o = jnp.moveaxis(o.reshape(B, KV, rep, Sq, Dh), 3, 1)
+    return o.reshape(B, Sq, H, Dh)
+
+
+# ------------------------------------------------------------------ decode
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, Lc, KV, Dh)
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray   # (Lc,) absolute position stored in each slot (-1 empty)
+
+
+def init_cache(B, capacity, kv_heads, head_dim, dtype=jnp.bfloat16):
+    return KVCache(
+        k=jnp.zeros((B, capacity, kv_heads, head_dim), dtype),
+        v=jnp.zeros((B, capacity, kv_heads, head_dim), dtype),
+        slot_pos=jnp.full((capacity,), -1, jnp.int32))
+
+
+def cache_write(cache: KVCache, k_new, v_new, pos):
+    """Append KV for one token at absolute position ``pos`` (ring buffer)."""
+    cap = cache.k.shape[1]
+    slot = pos % cap
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    sp = jax.lax.dynamic_update_slice_in_dim(
+        cache.slot_pos, pos[None].astype(jnp.int32), slot, axis=0)
+    return KVCache(k, v, sp)
+
+
+def cache_prefill(cache: KVCache, k_all, v_all, start=0):
+    """Bulk-write S tokens (positions start..start+S-1); S <= capacity."""
+    S = k_all.shape[1]
+    cap = cache.k.shape[1]
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_all.astype(cache.k.dtype), start % cap, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_all.astype(cache.v.dtype), start % cap, axis=1)
+    sp = jax.lax.dynamic_update_slice_in_dim(
+        cache.slot_pos, (start + jnp.arange(S)).astype(jnp.int32),
+        start % cap, axis=0)
+    return KVCache(k, v, sp)
+
+
+def _decode_scores(q, cache: KVCache, pos, window):
+    B, one, H, Dh = q.shape
+    KV = cache.k.shape[2]
+    rep = H // KV
+    qg = (q[:, 0] * Dh ** -0.5).reshape(B, KV, rep, Dh)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
+                   cache.k.astype(jnp.float32))
+    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos)
+    if window:
+        valid &= (pos - cache.slot_pos) < window
+    return jnp.where(valid[None, None, None], s, NEG_INF)
+
+
+def decode_attention(q, cache: KVCache, pos, window: int = 0):
+    """Dense decode: q (B,1,H,Dh) against the full cache -> (B,1,H,Dh)."""
+    B, _, H, Dh = q.shape
+    s = _decode_scores(q, cache, pos, window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(cache.v.dtype), cache.v)
+    return o.reshape(B, 1, H, Dh)
+
+
+def decode_attention_partial(q, cache: KVCache, pos, window: int = 0):
+    """Flash-decoding partial: softmax stats for cross-shard combination.
+
+    Returns (o_unnorm (B,H,Dh) f32, m (B,H), l (B,H)); combine as
+    ``o = psum(o_unnorm * exp(m - M)) / psum(l * exp(m - M))`` with
+    ``M = pmax(m)``.
+    """
+    B, _, H, Dh = q.shape
+    KV = cache.k.shape[2]
+    rep = H // KV
+    s = _decode_scores(q, cache, pos, window)        # (B,KV,rep,Lc)
+    m = s.max(axis=-1)
+    e = jnp.exp(s - m[..., None])
+    l = e.sum(axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", e, cache.v.astype(jnp.float32))
+    return (o.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))
+
+
+# --------------------------------------------------------------------------
+# distribution-aware dispatchers (consult repro.dist.ctx; see DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+def train_attention(q, k, v, *, window: int = 0):
+    """Mode-dispatched causal attention for train/prefill.
+
+    grouped   : KV heads divide tp -> shard KV heads (GQA-grouped einsum).
+    repeated  : Q heads divide tp (KV doesn't) -> materialize repeated KV,
+                shard flat Q heads (shard boundaries stay KV-group aligned).
+    seq_shard : neither divides (qwen2 12H/2KV, qwen2.5 40H/8KV) ->
+                shard_map: queries sequence-sharded over tp, KV all-gathered;
+                zero redundant FLOPs, collectives = one KV all-gather/layer.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist import ctx as dctx
+    c = dctx.get()
+    if c is None:
+        return causal_attention(q, k, v, window=window)
+    b = c.batch_spec
+
+    def wsc(t):
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(c.mesh, P(b, None, c.tp, None)))
+
+    if c.attn_train_mode == "grouped":
+        return causal_attention(wsc(q), wsc(k), wsc(v), window=window)
+    if c.attn_train_mode == "repeated":
+        rep = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        return causal_attention(wsc(q), wsc(k), wsc(v), window=window)
+    # seq_shard
+    B, Sq = q.shape[:2]
+
+    def local(ql, kl, vl):
+        off = jax.lax.axis_index(c.tp) * ql.shape[1]
+        kf = jax.lax.all_gather(kl, c.tp, axis=1, tiled=True)
+        vf = jax.lax.all_gather(vl, c.tp, axis=1, tiled=True)
+        return causal_attention(ql, kf, vf, window=window, q_offset=off)
+
+    bspec = b if (B % c.dp_size == 0 and b is not None) else None
+    return jax.shard_map(
+        local, mesh=c.mesh,
+        in_specs=(P(bspec, c.tp, None, None),) * 3,
+        out_specs=P(bspec, c.tp, None, None))(q, k, v)
+
+
+def serve_attention_write(q, k_new, v_new, cache: KVCache, pos, *,
+                          window: int = 0):
+    """Mode-dispatched decode attention WITH the cache append fused in.
+
+    dense : KV heads divide tp -> cache sharded on KV heads, plain softmax;
+            the append is a (local) dynamic-update-slice.
+    flash : KV-length-parallel (flash-decoding): cache sharded on the length
+            dim over tp; the owning shard appends locally inside the
+            shard_map (keeps the update in-place — a GSPMD-level DUS on the
+            length-sharded cache was measured to copy the whole cache), then
+            per-shard partial softmax + logsumexp combine.  Used when head
+            counts don't divide tp, and for long-context cells.
+
+    Returns (o (B,1,H,Dh), new KVCache).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import ctx as dctx
+    c = dctx.get()
+    if c is None or c.attn_decode_mode == "dense":
+        cache = cache_write(cache, k_new, v_new, pos)
+        return decode_attention(q, cache, pos, window), cache
+    B = q.shape[0]
+    bspec = c.batch_spec if B % c.dp_size == 0 else None
+
+    def local(ql, knl, vnl, kl, vl, spl, posl):
+        cap_l = kl.shape[1]
+        cap_total = cap_l * c.tp_size
+        slot = posl % cap_total
+        my = jax.lax.axis_index(c.tp)
+        start = my * cap_l
+        mine = (slot >= start) & (slot < start + cap_l)
+        off = jnp.clip(slot - start, 0, cap_l - 1)
+        cur_k = jax.lax.dynamic_slice_in_dim(kl, off, 1, axis=1)
+        cur_v = jax.lax.dynamic_slice_in_dim(vl, off, 1, axis=1)
+        kl = jax.lax.dynamic_update_slice_in_dim(
+            kl, jnp.where(mine, knl.astype(kl.dtype), cur_k), off, axis=1)
+        vl = jax.lax.dynamic_update_slice_in_dim(
+            vl, jnp.where(mine, vnl.astype(vl.dtype), cur_v), off, axis=1)
+        cur_sp = jax.lax.dynamic_slice_in_dim(spl, off, 1, axis=0)
+        spl = jax.lax.dynamic_update_slice_in_dim(
+            spl, jnp.where(mine, posl[None].astype(jnp.int32), cur_sp),
+            off, axis=0)
+        o, m, l = decode_attention_partial(
+            ql, KVCache(kl, vl, spl), posl, window)
+        M = jax.lax.pmax(m, c.tp)
+        w = jnp.exp(m - M)
+        o = jax.lax.psum(o * w[..., None], c.tp)
+        l = jax.lax.psum(l * w, c.tp)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return out[:, None].astype(vl.dtype), kl, vl, spl
+
+    o, kk, vv, sp = jax.shard_map(
+        local, mesh=c.mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, None, None, None), P(bspec, None, None, None),
+                  P(bspec, c.tp, None, None), P(bspec, c.tp, None, None),
+                  P(c.tp), P()),
+        out_specs=(P(bspec, None, None, None),
+                   P(bspec, c.tp, None, None), P(bspec, c.tp, None, None),
+                   P(c.tp)))(
+        q, k_new, v_new, cache.k, cache.v, cache.slot_pos, pos)
+    return o, KVCache(kk, vv, sp)

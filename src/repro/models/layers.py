@@ -1,0 +1,145 @@
+"""Shared neural layers: norms, linear (quantization-aware), RoPE, embeddings.
+
+Parameter convention: nested dicts of arrays; every dense projection is a
+``{"kernel": (d_in, d_out)[, "bias": (d_out,)]}`` dict applied as
+``y = x @ kernel + bias``.  A kernel leaf may be replaced by a
+``repro.core.qformat.QuantizedTensor`` — ``linear()`` dispatches to the fused
+dequant matmul, which is how OAC-quantized checkpoints are served.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qformat import QuantizedTensor
+
+
+# ---------------------------------------------------------------- init utils
+
+def uniform_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def linear_init(key, d_in, d_out, bias=False, dtype=jnp.float32, scale=None):
+    p = {"kernel": uniform_init(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------- apply fns
+
+def linear(p, x, compute_dtype=None):
+    """y = x @ kernel (+ bias); kernel may be a QuantizedTensor."""
+    k = p["kernel"]
+    if isinstance(k, QuantizedTensor):
+        from repro.kernels.dequant_matmul import ops as dq_ops
+        y = dq_ops.dequant_matmul(x, k)
+    else:
+        if compute_dtype is not None:
+            k = k.astype(compute_dtype)
+            x = x.astype(compute_dtype)
+        y = x @ k
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_init(kind, d, dtype=jnp.float32):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:            # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------- positions
+
+def rope(x, positions, theta: float):
+    """x (..., S, H, Dh); positions (..., S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal(positions, d, dtype=jnp.float32):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------- mlps
+
+def mlp_init(key, cfg, d_ff=None, dtype=jnp.float32):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"wi": linear_init(ks[0], d, f, dtype=dtype),
+                "wg": linear_init(ks[1], d, f, dtype=dtype),
+                "wo": linear_init(ks[2], f, d, dtype=dtype)}
+    return {"wi": linear_init(ks[0], d, f, dtype=dtype),
+            "wo": linear_init(ks[2], f, d, dtype=dtype)}
+
+
+def mlp(p, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x)
+    elif kind == "geglu":
+        h = jax.nn.gelu(linear(p["wg"], x), approximate=True) * linear(p["wi"], x)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(linear(p["wi"], x)))
+    else:  # gelu
+        h = jax.nn.gelu(linear(p["wi"], x), approximate=True)
+    return linear(p["wo"], h)
+
+
+# ---------------------------------------------------------------- embedding
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def unembed(p_embed, p_head, h, tied: bool):
+    if tied:
+        return h @ p_embed["table"].T.astype(h.dtype)
+    return linear(p_head, h)

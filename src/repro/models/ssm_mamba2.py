@@ -1,0 +1,194 @@
+"""Mamba2 block (SSD chunked scan) — the zamba2-7b backbone layer.
+
+Training/prefill uses the SSD block decomposition (intra-chunk quadratic +
+inter-chunk state recurrence, chunk length cfg.ssm.chunk); decode is the O(1)
+recurrent step carrying (conv_state, ssm_state).  n_groups=1: B/C shared
+across heads (zamba2).
+
+Sharding note (DESIGN.md §4): the canonical fused ``in_proj`` is split into
+separate z/x/B/C/dt projections so the big ones (z, x: d_model -> expand*d)
+TP-shard head-aligned over the ``model`` axis while the tiny B/C/dt
+projections stay replicated; the depthwise conv is likewise split into a
+head-sharded ``conv_x`` and a replicated ``conv_bc``.  SSM state is then
+sharded over heads with zero cross-shard traffic inside the scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, conv_ch)  [x | B | C] pre-activation
+    ssm: jnp.ndarray    # (B, nH, P, N) fp32
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nH = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nH, conv_ch
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nH, conv_ch = dims(cfg)
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": L.linear_init(ks[0], d, d_in, dtype=dtype),
+        "in_x": L.linear_init(ks[1], d, d_in, dtype=dtype),
+        "in_B": L.linear_init(ks[2], d, gn, dtype=dtype),
+        "in_C": L.linear_init(ks[3], d, gn, dtype=dtype),
+        "in_dt": L.linear_init(ks[4], d, nH, dtype=dtype),
+        "conv_x": jax.random.normal(ks[5], (s.d_conv, d_in), dtype) * 0.1,
+        "conv_bc": jax.random.normal(ks[6], (s.d_conv, 2 * gn), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nH).astype(dtype)),
+        "D": jnp.ones((nH,), dtype),
+        "dt_bias": jnp.zeros((nH,), dtype) + 0.5,
+        "norm": L.rmsnorm_init(d_in, dtype),
+        "out_proj": L.linear_init(ks[7], d_in, d, dtype=dtype),
+    }
+
+
+def _conv_scan(xBC, w, b):
+    """Causal depthwise conv (small window) via shifted sums; xBC (B,S,C)."""
+    K = w.shape[0]
+    out = xBC * w[-1]
+    for i in range(1, K):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, :xBC.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, A, Bc, Cc, chunk):
+    """SSD scan.  x (B,S,nH,P); dt (B,S,nH); A (nH)<0; Bc/Cc (B,S,N) (groups
+    broadcast).  Returns y (B,S,nH,P) and final state (B,nH,P,N)."""
+    from repro.dist import ctx as dctx
+    Bsz, S, nH, P = x.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+    # pin the head dim to tp so the big (B,nc,Q,Q,H) intra-chunk tensors stay
+    # head-sharded (112 heads / 16 = 7 local for zamba2; measured 30 GiB
+    # replicated otherwise)
+    htp = dctx.tp_if(nH)
+    x = dctx.wsc(x, "b", None, htp, None)
+    dt = dctx.wsc(dt, "b", None, htp)
+    xc = x.reshape(Bsz, nc, Q, nH, P)
+    dtc = dt.reshape(Bsz, nc, Q, nH)
+    Bcc = Bc.reshape(Bsz, nc, Q, N)
+    Ccc = Cc.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A[None, None, None, :]                  # (B,nc,Q,H) (negative)
+    cum = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    # intra-chunk: Lmat[i,j] = exp(cum_i - cum_j) for i >= j.  The mask goes
+    # INSIDE the exp (where around exp(+big) poisons gradients with NaN)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    cb = jnp.einsum("bcin,bcjn->bcij", Ccc, Bcc)       # (B,nc,Q,Q)
+    w_ij = cb[..., None] * Lmat * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xc)
+
+    # chunk summary states: sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn",
+                        decay_to_end, dtc, Bcc, xc)    # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                                # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bsz, nH, P, N), jnp.float32)
+    h_fin, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)              # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Ccc, jnp.exp(cum), h_prevs.astype(Ccc.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S, nH, P)
+    return y, h_fin
+
+
+def _project(p, u, cfg):
+    """z, x, B, C, dt projections (the split-TP layout)."""
+    z = L.linear(p["in_z"], u)
+    xr = L.linear(p["in_x"], u)
+    Bc = L.linear(p["in_B"], u)
+    Cc = L.linear(p["in_C"], u)
+    dt = L.linear(p["in_dt"], u)
+    return z, xr, Bc, Cc, dt
+
+
+def mamba_apply(p, u, cfg):
+    """Train/prefill forward.  u (B,S,D) -> (y (B,S,D), final MambaState)."""
+    s = cfg.ssm
+    d_in, nH, conv_ch = dims(cfg)
+    B, S, D = u.shape
+    gn = s.n_groups * s.d_state
+    z, xr, Bc, Cc, dt = _project(p, u, cfg)
+    pre_x, pre_bc = xr, jnp.concatenate([Bc, Cc], axis=-1)
+    xr = _conv_scan(xr, p["conv_x"], p["conv_b"][:d_in])
+    BCc = _conv_scan(pre_bc, p["conv_bc"], p["conv_b"][d_in:])
+    Bc, Cc = jnp.split(BCc, [gn], axis=-1)
+    x = xr.reshape(B, S, nH, s.head_dim)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_fin = _ssd_chunked(x.astype(jnp.float32), dt.astype(jnp.float32),
+                            A, Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                            s.chunk)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+    y = L.norm(p["norm"], y * jax.nn.silu(z))
+    out = L.linear(p["out_proj"], y)
+    # conv state holds the PRE-activation inputs of the last K-1 steps
+    pre = jnp.concatenate([pre_x, pre_bc], axis=-1)
+    K = s.d_conv
+    if S >= K - 1:
+        conv_state = pre[:, S - (K - 1):, :]
+    else:
+        conv_state = jnp.pad(pre, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, MambaState(conv_state, h_fin)
+
+
+def mamba_step(p, u, state: MambaState, cfg):
+    """Decode step.  u (B,1,D) -> (y (B,1,D), new state)."""
+    s = cfg.ssm
+    d_in, nH, conv_ch = dims(cfg)
+    B = u.shape[0]
+    gn = s.n_groups * s.d_state
+    z, xr, Bc, Cc, dt = _project(p, u[:, 0:1], cfg)
+    z, xr, Bc, Cc, dt = z[:, 0], xr[:, 0], Bc[:, 0], Cc[:, 0], dt[:, 0]
+    pre = jnp.concatenate([xr, Bc, Cc], axis=-1)       # (B, conv_ch)
+    window = jnp.concatenate([state.conv, pre[:, None]], axis=1)  # (B,K,ch)
+    w_full = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    xBC = jnp.einsum("bkc,kc->bc", window, w_full) + p["conv_b"]
+    xBC = jax.nn.silu(xBC)
+    xr, Bc, Cc = jnp.split(xBC, [d_in, d_in + gn], axis=-1)
+    x = xr.reshape(B, nH, s.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None])                          # (B,nH)
+    h = state.ssm * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bc.astype(jnp.float32), x)
+    y = jnp.einsum("bn,bhpn->bhp", Cc.astype(jnp.float32), h)
+    y = y + x * p["D"][None, :, None]
+    y = y.reshape(B, d_in).astype(u.dtype)
+    y = L.norm(p["norm"], y * jax.nn.silu(z))
+    out = L.linear(p["out_proj"], y)[:, None]
+    new_conv = window[:, 1:]
+    return out, MambaState(new_conv, h)

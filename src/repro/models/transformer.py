@@ -1,0 +1,644 @@
+"""Unified model: one class covering all 10 assigned families.
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) so compile
+time is depth-independent — required for 96-layer nemotron on the dry-run.
+
+Stack layouts:
+  * uniform: every layer identical -> single scan.
+  * grouped-local (gemma3): groups of (global_every-1) sliding-window layers
+    + 1 global layer; local layers get ring-buffer KV caches of length
+    ``local_window`` (a large serving-memory win), globals get full caches.
+  * hybrid (zamba2): groups of ``shared_attn_every`` Mamba2 layers + one
+    invocation of a weight-shared attention block (per-invocation input
+    projection concatenates the residual stream with the embedding stream).
+  * ssm (rwkv6): uniform RWKV6 blocks.
+
+Batch dict: {"tokens": (B,S) int32[, "frontend": (B,F,d) or (B,S,d),
+"loss_mask": (B,S)]}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rwkv6 as R
+from repro.models import ssm_mamba2 as S
+
+
+def _layer_init(key, cfg, dtype, is_global=True):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+         "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+         "attn": A.attn_init(ks[0], cfg, dtype)}
+    if cfg.family == "moe" and cfg.moe is not None:
+        p["moe"] = M.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg, dtype=dtype)
+    return p
+
+
+def _constrain_hidden(x):
+    """Residual-stream sharding constraint (batch over dp; optionally the
+    sequence dim over tp = Megatron-style sequence parallelism, which also
+    bounds the remat-saved activations)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist import ctx as dctx
+    c = dctx.get()
+    if c is None:
+        return x
+    spec = [c.batch_spec] + [None] * (x.ndim - 1)
+    if c.hidden_seq_shard and x.ndim == 3 and x.shape[1] % c.tp_size == 0 \
+            and x.shape[1] > 1:
+        spec[1] = c.tp
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(c.mesh, P(*spec)))
+
+
+def _maybe_remat(fn):
+    from repro.dist import ctx as dctx
+    c = dctx.get()
+    return jax.checkpoint(fn) if (c is not None and c.remat) else fn
+
+
+def _scan_with_state(body, x, params_stack, state_stack, length):
+    """Scan over a layer stack, carrying `state_stack` (KV caches / SSM
+    states) through the loop CARRY with in-place dynamic updates.
+
+    Passing caches as scan xs/ys double-buffers them (ys is a fresh stacked
+    allocation — 2x cache memory per decode step); carry buffers alias
+    in-place through the while loop.  body(x, layer_params, state_i) ->
+    (x, new_state_i)."""
+    if length == 0:
+        return x, state_stack
+
+    def f(carry, inp):
+        xc, st = carry
+        lp, i = inp
+        st_i = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            st)
+        xc, st_new = body(xc, lp, st_i)
+        st = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), i, 0), st, st_new)
+        return (xc, st), None
+
+    (x, state_stack), _ = jax.lax.scan(
+        f, (x, state_stack), (params_stack, jnp.arange(length)))
+    return x, state_stack
+
+
+def _layer_apply(p, x, cfg, *, positions, window, kv=None, pos=None,
+                 mode="train"):
+    """One transformer layer.  mode: train/prefill use full-seq attention;
+    decode uses the cache.  Returns (x, new_kv or (k,v))."""
+    x = _constrain_hidden(x)
+    h = L.norm(p["ln1"], x)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, positions)
+    if mode == "decode":
+        o, kv = A.serve_attention_write(q, k, v, kv, pos, window=window)
+        new_kv = kv
+    else:
+        o = A.train_attention(q, k, v, window=window)
+        new_kv = (k, v)
+    B, Sq = x.shape[:2]
+    o = o.reshape(B, Sq, -1)
+    x = x + L.linear(p["attn"]["wo"], o)
+    h = L.norm(p["ln2"], x)
+    if "moe" in p:
+        x = x + M.moe_apply(p["moe"], h, cfg)
+    else:
+        x = x + L.mlp(p["mlp"], h, cfg.mlp)
+    return x, new_kv
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------------------------------------------------------- init
+    def init(self, key, dtype=jnp.float32):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: Dict[str, Any] = {"embed": L.embed_init(ks[0], cfg.vocab,
+                                                        cfg.d_model, dtype)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.linear_init(ks[1], cfg.d_model, cfg.vocab,
+                                              dtype=dtype)
+        params["final_norm"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+
+        if cfg.family == "ssm":
+            def one(k):
+                return R.rwkv_init(k, cfg, dtype)
+            params["layers"] = jax.vmap(one)(
+                jax.random.split(ks[2], cfg.n_layers))
+        elif cfg.family == "hybrid":
+            k = cfg.shared_attn_every
+            ng, tail = cfg.n_layers // k, cfg.n_layers % k
+            def one(kk):
+                return S.mamba_init(kk, cfg, dtype)
+            params["groups"] = jax.vmap(
+                lambda kk: jax.vmap(one)(jax.random.split(kk, k)))(
+                    jax.random.split(ks[2], ng))
+            if tail:
+                params["tail"] = jax.vmap(one)(jax.random.split(ks[3], tail))
+            # weight-shared attention block + per-invocation in-proj
+            params["shared"] = _layer_init(ks[4], cfg, dtype)
+            params["shared_in"] = jax.vmap(
+                lambda kk: L.linear_init(kk, 2 * cfg.d_model, cfg.d_model,
+                                         dtype=dtype))(
+                jax.random.split(ks[5], ng))
+        elif self._grouped_local():
+            ge = cfg.global_every
+            ng, tail = cfg.n_layers // ge, cfg.n_layers % ge
+            def one(kk, g):
+                return _layer_init(kk, cfg, dtype, is_global=g)
+            params["groups"] = {
+                "local": jax.vmap(lambda kk: jax.vmap(
+                    lambda k2: one(k2, False))(jax.random.split(kk, ge - 1)))(
+                        jax.random.split(ks[2], ng)),
+                "global": jax.vmap(lambda kk: one(kk, True))(
+                    jax.random.split(ks[3], ng)),
+            }
+            if tail:
+                params["tail"] = jax.vmap(lambda kk: one(kk, False))(
+                    jax.random.split(ks[4], tail))
+        else:
+            params["layers"] = jax.vmap(
+                lambda kk: _layer_init(kk, cfg, dtype))(
+                jax.random.split(ks[2], cfg.n_layers))
+        return params
+
+    def abstract_params(self, dtype=jnp.float32):
+        return jax.eval_shape(lambda k: self.init(k, dtype),
+                              jax.random.PRNGKey(0))
+
+    def _grouped_local(self):
+        return self.cfg.local_window > 0 and self.cfg.global_every > 0
+
+    # ------------------------------------------------------------- embed/out
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = batch["frontend"]                        # (B,S,d) frames
+        elif cfg.family == "vlm":
+            fe = batch["frontend"]                       # (B,F,d)
+            te = L.embed(params["embed"], batch["tokens"])  # (B,S-F,d)
+            x = jnp.concatenate([fe.astype(te.dtype), te], axis=1)
+        else:
+            x = L.embed(params["embed"], batch["tokens"])
+        return x
+
+    def _logits(self, params, h):
+        from repro.dist import ctx as dctx
+        cfg = self.cfg
+        h = L.norm(params["final_norm"], h)
+        logits = L.unembed(params["embed"], params.get("lm_head"), h,
+                           cfg.tie_embeddings)
+        # keep logits vocab-sharded over tp — without this, GSPMD replicates
+        # the (huge) unembedding and the CE-loss intermediates (measured on
+        # gemma3: 5.25 GiB table x31 copies; see EXPERIMENTS.md §Perf).
+        # Non-divisible vocabs (granite 49155) shard the sequence dim instead.
+        vspec = dctx.tp_if(cfg.vocab)
+        sspec = dctx.tp_if(logits.shape[1]) if vspec is None else None
+        logits = dctx.wsc(logits, "b", sspec, vspec)
+        return L.softcap(logits, cfg.logit_softcap)
+
+    # ---------------------------------------------------------------- apply
+    def apply(self, params, batch, capture: bool = False):
+        """Full-sequence forward -> (logits (B,S,V), aux)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        B, Stot, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(Stot)[None], (B, Stot))
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(positions, cfg.d_model, x.dtype)
+        aux: Dict[str, Any] = {}
+
+        if cfg.family == "ssm":
+            st0 = R.init_state(B, cfg, x.dtype)
+
+            def body(xc, lp):
+                xc = _constrain_hidden(xc)
+                xc, _ = R.rwkv_block(lp, xc, cfg, st0)
+                return xc, None
+            x, _ = jax.lax.scan(_maybe_remat(body), x, params["layers"])
+        elif cfg.family == "hybrid":
+            x = self._hybrid_forward(params, x, positions, mode="train")[0]
+        elif self._grouped_local():
+            x = self._grouped_forward(params, x, positions)
+        else:
+            def body(xc, lp):
+                xc2, _ = _layer_apply(lp, xc, cfg, positions=positions,
+                                      window=0)
+                ys = self._capture_grams(lp, xc, positions) if capture else None
+                return xc2, ys
+
+            x, caps = jax.lax.scan(_maybe_remat(body), x, params["layers"])
+            if capture:
+                aux["xtx"] = caps
+        logits = self._logits(params, x)
+        return logits, aux
+
+    def _capture_grams(self, lp, x_in, positions):
+        """Gram matrices sum x x^T of every linear input in this layer
+        (output-agnostic Hessians for the OPTQ/SpQR baselines).  Recomputes
+        the layer's intermediates from x_in (toy-scale calibration only)."""
+        cfg = self.cfg
+
+        def gram(t):
+            f = t.reshape(-1, t.shape[-1]).astype(jnp.float32)
+            return f.T @ f
+
+        h1 = L.norm(lp["ln1"], x_in)
+        caps = {"attn_in": gram(h1)}
+        q, k, v = A.qkv_project(lp["attn"], h1, cfg, positions)
+        o = A.causal_attention(q, k, v, window=0)
+        B, Sq = x_in.shape[:2]
+        o = o.reshape(B, Sq, -1)
+        caps["wo_in"] = gram(o)
+        x_mid = x_in + L.linear(lp["attn"]["wo"], o)
+        h2 = L.norm(lp["ln2"], x_mid)
+        caps["mlp_in"] = gram(h2)
+        if "mlp" in lp:
+            if "wg" in lp["mlp"]:
+                act = jax.nn.silu if cfg.mlp == "swiglu" else \
+                    (lambda t: jax.nn.gelu(t, approximate=True))
+                hmid = act(L.linear(lp["mlp"]["wg"], h2)) * \
+                    L.linear(lp["mlp"]["wi"], h2)
+            else:
+                hm = L.linear(lp["mlp"]["wi"], h2)
+                hmid = jnp.square(jax.nn.relu(hm)) if cfg.mlp == "relu2" \
+                    else jax.nn.gelu(hm, approximate=True)
+            caps["mlp_out_in"] = gram(hmid)
+        return caps
+
+    # ---------------------------------------------- grouped-local forward
+    def _grouped_forward(self, params, x, positions):
+        cfg = self.cfg
+        w = cfg.local_window
+
+        def local_body(xc, lp):
+            xc, _ = _layer_apply(lp, xc, cfg, positions=positions, window=w)
+            return xc, None
+
+        def group_body(xc, gp):
+            xc, _ = jax.lax.scan(_maybe_remat(local_body), xc, gp["local"])
+            xc, _ = _layer_apply(gp["global"], xc, cfg, positions=positions,
+                                 window=0)
+            return xc, None
+
+        x, _ = jax.lax.scan(_maybe_remat(group_body), x, params["groups"])
+        if "tail" in params:
+            x, _ = jax.lax.scan(_maybe_remat(local_body), x, params["tail"])
+        return x
+
+    # ---------------------------------------------------- hybrid forward
+    def _hybrid_forward(self, params, x, positions, mode, caches=None,
+                        pos=None):
+        cfg = self.cfg
+        x0 = x  # embedding stream fed to every shared-attn invocation
+
+        def mamba_train(xc, lp):
+            xc = _constrain_hidden(xc)
+            y, st2 = S.mamba_apply(lp, xc, cfg)
+            return xc + y, st2
+
+        def mamba_decode(xc, lp, st):
+            y, st2 = S.mamba_step(lp, xc, st, cfg)
+            return xc + y, st2
+
+        new_states = {}
+        k = cfg.shared_attn_every
+
+        if mode == "decode":
+            def group_body(xc, gpin, st):
+                gp, gin = gpin
+                mst, kv = st
+                xc, msts = _scan_with_state(mamba_decode, xc, gp, mst, k)
+                a_in = L.linear(gin, jnp.concatenate([xc, x0], axis=-1))
+                a_out, kv = _layer_apply(params["shared"], a_in, cfg,
+                                         positions=positions, window=0,
+                                         kv=kv, pos=pos, mode="decode")
+                xc = xc + (a_out - a_in)  # _layer_apply adds its residual
+                return xc, (msts, kv)
+
+            ng = cfg.n_layers // k
+            x, (mg, kvs) = _scan_with_state(
+                group_body, x, (params["groups"], params["shared_in"]),
+                (caches["mamba_g"], caches["kv"]), ng)
+            new_states["mamba_g"] = mg
+            new_states["kv"] = kvs
+            if "tail" in params:
+                x, mt = _scan_with_state(mamba_decode, x, params["tail"],
+                                         caches["mamba_t"],
+                                         cfg.n_layers % k)
+                new_states["mamba_t"] = mt
+        else:
+            def group_body(xc, inp):
+                gp, gin = inp
+                xc, _ = jax.lax.scan(mamba_train, xc, gp)
+                a_in = L.linear(gin, jnp.concatenate([xc, x0], axis=-1))
+                a_out, _ = _layer_apply(params["shared"], a_in, cfg,
+                                        positions=positions, window=0)
+                xc = xc + (a_out - a_in)
+                return xc, None
+
+            x, _ = jax.lax.scan(_maybe_remat(group_body), x,
+                                (params["groups"], params["shared_in"]))
+            if "tail" in params:
+                def tail_body(xc, lp):
+                    return mamba_train(xc, lp)
+                x, _ = jax.lax.scan(_maybe_remat(tail_body), x,
+                                    params["tail"])
+        return x, new_states
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        """Next-token CE (the paper's L_CE; frontend positions masked)."""
+        cfg = self.cfg
+        logits, _ = self.apply(params, batch)
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            F = logits.shape[1] - tokens.shape[1]
+            logits = logits[:, F:]                     # text positions only
+        # sharding-friendly CE: no gather over the (tp-sharded) vocab dim —
+        # the one-hot mask fuses into the reduction (no (B,S,V) materializes)
+        lg = logits[:, :-1].astype(jnp.float32)
+        tgt = tokens[:, 1:]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        vocab_iota = jnp.arange(lg.shape[-1], dtype=tgt.dtype)
+        tgt_logit = jnp.sum(
+            jnp.where(vocab_iota[None, None, :] == tgt[..., None], lg, 0.0),
+            axis=-1)
+        nll = lse - tgt_logit
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            m = mask[:, 1:].astype(jnp.float32)
+            return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+        return nll.mean()
+
+    # ---------------------------------------------------------------- cache
+    def init_cache(self, B, capacity, dtype=jnp.bfloat16, abstract=False):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+
+        def mk(*shape, dt=dtype):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dt)
+            return jnp.zeros(shape, dt)
+
+        def kv(n, cap):
+            sp = jnp.full((n, cap), -1, jnp.int32) if not abstract else \
+                jax.ShapeDtypeStruct((n, cap), jnp.int32)
+            return A.KVCache(mk(n, B, cap, cfg.n_kv_heads, hd),
+                             mk(n, B, cap, cfg.n_kv_heads, hd), sp)
+
+        if cfg.family == "ssm":
+            Lh = cfg.n_layers
+            H = cfg.d_model // cfg.rwkv.head_size
+            return {"state": R.RWKVState(
+                mk(Lh, B, H, cfg.rwkv.head_size, cfg.rwkv.head_size,
+                   dt=jnp.float32),
+                mk(Lh, B, cfg.d_model), mk(Lh, B, cfg.d_model))}
+        if cfg.family == "hybrid":
+            k = cfg.shared_attn_every
+            ng, tail = cfg.n_layers // k, cfg.n_layers % k
+            d_in, nH, conv_ch = S.dims(cfg)
+            s = cfg.ssm
+            out = {"mamba_g": S.MambaState(
+                mk(ng, k, B, s.d_conv - 1, conv_ch),
+                mk(ng, k, B, nH, s.head_dim, s.d_state, dt=jnp.float32)),
+                "kv": kv(ng, capacity)}
+            if tail:
+                out["mamba_t"] = S.MambaState(
+                    mk(tail, B, s.d_conv - 1, conv_ch),
+                    mk(tail, B, nH, s.head_dim, s.d_state, dt=jnp.float32))
+            return out
+        if self._grouped_local():
+            ge = cfg.global_every
+            ng, tail = cfg.n_layers // ge, cfg.n_layers % ge
+            wcap = min(capacity, cfg.local_window)
+            lsp = jnp.full((ng, ge - 1, wcap), -1, jnp.int32) if not abstract \
+                else jax.ShapeDtypeStruct((ng, ge - 1, wcap), jnp.int32)
+            out = {"local": A.KVCache(
+                mk(ng, ge - 1, B, wcap, cfg.n_kv_heads, hd),
+                mk(ng, ge - 1, B, wcap, cfg.n_kv_heads, hd), lsp),
+                "global": kv(ng, capacity)}
+            if tail:
+                out["tail"] = kv(tail, wcap)
+            return out
+        return {"kv": kv(cfg.n_layers, capacity)}
+
+    # --------------------------------------------------------------- decode
+    def decode_step(self, params, tokens, cache, pos):
+        """One serving step: tokens (B,1) -> (logits (B,1,V), new cache).
+
+        ``pos`` is the absolute position of the incoming token (cache holds
+        positions < pos)."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            # frames arrive as embeddings even in decode (stub frontend)
+            x = tokens if tokens.ndim == 3 else \
+                L.embed(params["embed"], tokens)
+        else:
+            x = L.embed(params["embed"], tokens)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(pos, (B, 1))
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(positions, cfg.d_model, x.dtype)
+
+        if cfg.family == "ssm":
+            def body(xc, lp, st):
+                return R.rwkv_block(lp, xc, cfg, st)
+            # rwkv_block consumes (B,S,d); S=1 works through the scan
+            x, states = _scan_with_state(body, x, params["layers"],
+                                         cache["state"], cfg.n_layers)
+            new_cache = {"state": states}
+        elif cfg.family == "hybrid":
+            x, ns = self._hybrid_forward(params, x, positions, mode="decode",
+                                         caches=cache, pos=pos)
+            new_cache = ns
+        elif self._grouped_local():
+            x, new_cache = self._grouped_decode(params, x, positions, cache,
+                                                pos)
+        else:
+            def body(xc, lp, kvc):
+                return _layer_apply(lp, xc, cfg, positions=positions,
+                                    window=0, kv=kvc, pos=pos, mode="decode")
+            x, kvs = _scan_with_state(body, x, params["layers"],
+                                      cache["kv"], cfg.n_layers)
+            new_cache = {"kv": kvs}
+        return self._logits(params, x), new_cache
+
+    def _grouped_decode(self, params, x, positions, cache, pos):
+        cfg = self.cfg
+        w = cfg.local_window
+        ge = cfg.global_every
+
+        def local_body(xc, lp, kvc):
+            return _layer_apply(lp, xc, cfg, positions=positions,
+                                window=w, kv=kvc, pos=pos, mode="decode")
+
+        def group_body(xc, gp, st):
+            lkv, gkv = st
+            xc, lkv2 = _scan_with_state(local_body, xc, gp["local"], lkv,
+                                        ge - 1)
+            xc, gkv2 = _layer_apply(gp["global"], xc, cfg,
+                                    positions=positions, window=0, kv=gkv,
+                                    pos=pos, mode="decode")
+            return xc, (lkv2, gkv2)
+
+        ng = cfg.n_layers // ge
+        x, (lkvs, gkvs) = _scan_with_state(
+            group_body, x, params["groups"],
+            (cache["local"], cache["global"]), ng)
+        new_cache = {"local": lkvs, "global": gkvs}
+        if "tail" in params:
+            x, tkv = _scan_with_state(local_body, x, params["tail"],
+                                      cache["tail"], cfg.n_layers % ge)
+            new_cache["tail"] = tkv
+        return x, new_cache
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params, batch, cache):
+        """Full-prompt forward that also fills the KV caches.
+
+        Implemented as apply() for the hidden states plus bulk cache writes;
+        returns (logits of last position, cache, n_prompt)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        B, Stot, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(Stot)[None], (B, Stot))
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(positions, cfg.d_model, x.dtype)
+
+        if cfg.family == "ssm":
+            def body(xc, lp, st):
+                return R.rwkv_block(lp, xc, cfg, st)
+            x, states = _scan_with_state(body, x, params["layers"],
+                                         cache["state"], cfg.n_layers)
+            new_cache = {"state": states}
+        elif cfg.family == "hybrid":
+            x, ns = self._hybrid_prefill(params, x, positions, cache)
+            new_cache = ns
+        elif self._grouped_local():
+            x, new_cache = self._grouped_prefill(params, x, positions, cache)
+        else:
+            def body(xc, lp, kvc):
+                h = L.norm(lp["ln1"], xc)
+                q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
+                kv2 = A.cache_prefill(kvc, k, v)
+                o = A.train_attention(q, k, v, window=0)
+                xc = xc + L.linear(lp["attn"]["wo"],
+                                   o.reshape(B, Stot, -1))
+                h = L.norm(lp["ln2"], xc)
+                if "moe" in lp:
+                    xc = xc + M.moe_apply(lp["moe"], h, cfg)
+                else:
+                    xc = xc + L.mlp(lp["mlp"], h, cfg.mlp)
+                return xc, kv2
+            x, kvs = _scan_with_state(body, x, params["layers"],
+                                      cache["kv"], cfg.n_layers)
+            new_cache = {"kv": kvs}
+        logits = self._logits(params, x[:, -1:])
+        return logits, new_cache, Stot
+
+    def _grouped_prefill(self, params, x, positions, cache):
+        cfg = self.cfg
+        B, Stot, _ = x.shape
+        w = cfg.local_window
+
+        def fill_local(lp, xc, kvc):
+            h = L.norm(lp["ln1"], xc)
+            q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
+            # ring cache keeps only the last min(Stot, wcap) positions at
+            # slot = pos % wcap (matching cache_write's ring discipline)
+            wcap = kvc.k.shape[1]
+            n = min(Stot, wcap)
+            start = Stot - n
+            parr = (start + jnp.arange(n)).astype(jnp.int32)
+            slots = parr % wcap
+            kv2 = A.KVCache(
+                kvc.k.at[:, slots].set(k[:, -n:].astype(kvc.k.dtype)),
+                kvc.v.at[:, slots].set(v[:, -n:].astype(kvc.v.dtype)),
+                kvc.slot_pos.at[slots].set(parr))
+            o = A.train_attention(q, k, v, window=w)
+            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1))
+            h = L.norm(lp["ln2"], xc)
+            xc = xc + L.mlp(lp["mlp"], h, cfg.mlp)
+            return xc, kv2
+
+        def fill_global(lp, xc, kvc):
+            h = L.norm(lp["ln1"], xc)
+            q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
+            kv2 = A.cache_prefill(kvc, k, v)
+            o = A.train_attention(q, k, v, window=0)
+            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1))
+            h = L.norm(lp["ln2"], xc)
+            xc = xc + L.mlp(lp["mlp"], h, cfg.mlp)
+            return xc, kv2
+
+        def local_body2(xc, lp, kvc):
+            return fill_local(lp, xc, kvc)
+
+        ge = cfg.global_every
+
+        def group_body(xc, gp, st):
+            lkv, gkv = st
+            xc, lkv2 = _scan_with_state(local_body2, xc, gp["local"], lkv,
+                                        ge - 1)
+            xc, gkv2 = fill_global(gp["global"], xc, gkv)
+            return xc, (lkv2, gkv2)
+
+        x, (lkvs, gkvs) = _scan_with_state(
+            group_body, x, params["groups"],
+            (cache["local"], cache["global"]), cfg.n_layers // ge)
+        new_cache = {"local": lkvs, "global": gkvs}
+        if "tail" in params:
+            x, tkv = _scan_with_state(local_body2, x, params["tail"],
+                                      cache["tail"], cfg.n_layers % ge)
+            new_cache["tail"] = tkv
+        return x, new_cache
+
+    def _hybrid_prefill(self, params, x, positions, cache):
+        cfg = self.cfg
+        x0 = x
+
+        def mamba_body(xc, lp):
+            y, st = S.mamba_apply(lp, xc, cfg)
+            return xc + y, st
+
+        kk = cfg.shared_attn_every
+
+        def group_body(xc, gpin, st):
+            gp, gin = gpin
+            _, gkv = st
+            xc, msts = jax.lax.scan(mamba_body, xc, gp)
+            a_in = L.linear(gin, jnp.concatenate([xc, x0], axis=-1))
+            h = L.norm(params["shared"]["ln1"], a_in)
+            q, k, v = A.qkv_project(params["shared"]["attn"], h, cfg,
+                                    positions)
+            kv2 = A.cache_prefill(gkv, k, v)
+            o = A.train_attention(q, k, v, window=0)
+            a = a_in + L.linear(params["shared"]["attn"]["wo"],
+                                o.reshape(x.shape[0], x.shape[1], -1))
+            h = L.norm(params["shared"]["ln2"], a)
+            a = a + L.mlp(params["shared"]["mlp"], h, cfg.mlp)
+            return xc + (a - a_in), (msts, kv2)
+
+        x, (mg, kvs) = _scan_with_state(
+            group_body, x, (params["groups"], params["shared_in"]),
+            (cache["mamba_g"], cache["kv"]), cfg.n_layers // kk)
+        new_cache = {"mamba_g": mg, "kv": kvs}
+        if "tail" in params:
+            x, mt = jax.lax.scan(mamba_body, x, params["tail"])
+            new_cache["mamba_t"] = mt
+        return x, new_cache

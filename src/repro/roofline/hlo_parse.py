@@ -1,0 +1,212 @@
+"""HLO text analyzer with while-loop trip-count multipliers.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, which under-counts
+scan-over-layers models by ~n_layers x (verified empirically).  This module
+walks the optimized, SPMD-partitioned HLO text, multiplies loop bodies by
+their trip counts (XLA's ``known_trip_count`` backend config, with a
+condition-constant fallback), and reports:
+
+  * matmul FLOPs (dot) — the MFU-convention compute count,
+  * HBM bytes (operand + output sizes of top-level instructions; post-fusion
+    this approximates true traffic),
+  * collective bytes by op kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), from output sizes.
+
+Operand shapes are resolved through a per-computation symbol table (the
+jax-0.8 HLO printer does not inline operand types).  All numbers are PER
+DEVICE (the partitioned module is the per-device program); multiply by chip
+count for global figures.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES = ("parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "iota", "while",
+               "conditional", "call")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "op", "out_shapes", "args", "line")
+
+    def __init__(self, name, op, out_shapes, args, line):
+        self.name, self.op = name, op
+        self.out_shapes, self.args, self.line = out_shapes, args, line
+
+
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z]\d*[a-z0-9]*\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$")
+
+
+def parse(hlo: str):
+    """-> (computations {name: [Instr]}, entry_name)."""
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        ls = raw.strip()
+        if ls.endswith("{") and "->" in ls and not ls.startswith(("%ROOT",)):
+            head = ls.split("(")[0].strip()
+            toks = head.split()
+            if toks and (toks[0] == "ENTRY" or toks[0].startswith("%")
+                         or len(toks) == 1):
+                name = toks[1] if toks[0] == "ENTRY" else toks[0]
+                cur = name.lstrip("%")
+                comps[cur] = []
+                if toks[0] == "ENTRY":
+                    entry = cur
+                continue
+        if ls.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(ls)
+        if m:
+            name, type_str, op, rest = m.groups()
+            args = rest.split("), ")[0] if "), " in rest else rest.rstrip(")")
+            comps[cur].append(Instr(name, op, _shape_list(type_str),
+                                    _NAME_RE.findall(args), ls))
+    return comps, entry
+
+
+def _fusion_is_inplace_update(line: str, comps, out_shapes) -> bool:
+    """True when the fusion is an in-place buffer update: its body contains a
+    dynamic-update-slice/scatter whose result has the fusion's output dims
+    (converts may wrap the root — compare dims, not dtypes)."""
+    m = re.search(r"calls=%?([\w\.\-]+)", line)
+    if not m or not out_shapes:
+        return False
+    out_dims = out_shapes[0][1]
+    for ins in comps.get(m.group(1), []):
+        if ins.op in ("dynamic-update-slice", "scatter") and \
+                ins.out_shapes and ins.out_shapes[0][1] == out_dims:
+            return True
+    return False
+
+
+def _trip_count(line: str, cond_instrs) -> int:
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for ins in cond_instrs or []:
+        for mm in re.finditer(r"constant\((\d+)\)", ins.line):
+            v = int(mm.group(1))
+            if 1 < v < 10_000_000:
+                best = max(best, v)
+    return best
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps, entry = parse(hlo)
+    result = defaultdict(float)
+    on_stack = set()
+
+    def visit(comp: str, mult: float, count_bytes: bool):
+        if comp not in comps or comp in on_stack:
+            return
+        on_stack.add(comp)
+        sym = {i.name: i.out_shapes for i in comps[comp]}
+        for ins in comps[comp]:
+            op, line = ins.op, ins.line
+            if op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                trips = _trip_count(line, comps.get(mc.group(1)) if mc else [])
+                if mb:
+                    visit(mb.group(1), mult * trips, count_bytes)
+                continue
+            if op in ("call", "fusion"):
+                m = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", line)
+                if m:
+                    visit(m.group(1), mult, False)   # FLOPs only
+            if op == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if mbr:
+                    for b in mbr.group(1).split(","):
+                        visit(b.strip().lstrip("%"), mult, count_bytes)
+                continue
+            if op == "dot":
+                out_n = 1.0
+                for dt, dims in ins.out_shapes[:1]:
+                    for d in dims:
+                        out_n *= d
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                contract = 1.0
+                if cm and ins.args:
+                    lhs = sym.get(ins.args[0])
+                    if lhs:
+                        dims = lhs[0][1]
+                        for idx in (cm.group(1).split(",")
+                                    if cm.group(1) else []):
+                            i = int(idx)
+                            if i < len(dims):
+                                contract *= dims[i]
+                result["flops"] += mult * 2.0 * out_n * contract
+            for ck in COLLECTIVES:
+                if op == ck or op == ck + "-start":
+                    b = _bytes_of(ins.out_shapes)
+                    result["collective_bytes"] += mult * b
+                    result[f"coll::{ck}"] += mult * b
+                    break
+            if count_bytes and op not in _SKIP_BYTES:
+                if op in ("dynamic-update-slice", "scatter"):
+                    # in-place updates: traffic ~= 2x the update payload
+                    # (read-modify-write of the touched slice), NOT the full
+                    # buffer the HLO type suggests
+                    upd = ins.args[1] if len(ins.args) > 1 else None
+                    b = 2 * _bytes_of(sym.get(upd, [])) if upd else 0.0
+                elif op == "fusion" and _fusion_is_inplace_update(
+                        line, comps, ins.out_shapes):
+                    # fusion whose root is a DUS: skip the pass-through
+                    # buffer (largest operand) and the full-size output
+                    opb = sorted((_bytes_of(sym[a]) for a in ins.args
+                                  if a in sym), reverse=True)
+                    b = 2.0 * sum(opb[1:]) if len(opb) > 1 else 0.0
+                else:
+                    b = _bytes_of(ins.out_shapes)
+                    for a in ins.args:
+                        if a in sym:
+                            b += _bytes_of(sym[a])
+                result["hbm_bytes"] += mult * b
+        on_stack.discard(comp)
+
+    if entry:
+        visit(entry, 1.0, True)
+    result.setdefault("flops", 0.0)
+    result.setdefault("hbm_bytes", 0.0)
+    result.setdefault("collective_bytes", 0.0)
+    return dict(result)

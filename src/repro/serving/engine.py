@@ -1,0 +1,105 @@
+"""Batched serving engine: static batching with bulk prefill + lockstep decode.
+
+Requests are grouped into cohorts of equal prompt length (padding-free),
+prefilled in one jit'd bulk pass, then decoded in lockstep — one jit'd
+decode_step advances the whole batch per tick; finished slots keep decoding
+into a discard buffer until the cohort drains (the standard static-batching
+serving pattern; per-slot-position continuous batching needs per-row cache
+clocks and is noted as future work in DESIGN.md).
+
+Works with dense or OAC-quantized params for every assigned architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_tokens: int = 32
+    temperature: float = 0.0
+    eos: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 capacity: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.capacity = capacity
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self.model.prefill)
+        self._next_rid = 0
+
+    def submit(self, prompt, **kw) -> Request:
+        r = Request(self._next_rid, np.asarray(prompt, np.int32), **kw)
+        self._next_rid += 1
+        self.queue.append(r)
+        return r
+
+    def _next_cohort(self) -> List[Request]:
+        by_len = defaultdict(list)
+        for r in self.queue:
+            by_len[len(r.prompt)].append(r)
+        best = max(by_len.values(), key=len)[:self.max_batch]
+        for r in best:
+            self.queue.remove(r)
+        return best
+
+    def _run_cohort(self, cohort: List[Request]):
+        B = len(cohort)
+        S = len(cohort[0].prompt)
+        prompts = jnp.asarray(np.stack([r.prompt for r in cohort]))
+        cache = self.model.init_cache(B, self.capacity, dtype=jnp.float32)
+        logits, cache, n = self._prefill(self.params,
+                                         {"tokens": prompts}, cache)
+        logits = logits[:, 0]
+        pos = S
+        budget = max(r.max_tokens for r in cohort)
+        for _ in range(min(budget, self.capacity - S - 1)):
+            nxt = np.zeros(B, np.int32)
+            for i, r in enumerate(cohort):
+                if r.done:
+                    continue
+                if r.temperature > 0:
+                    self.key, sub = jax.random.split(self.key)
+                    t = int(jax.random.categorical(
+                        sub, logits[i] / r.temperature))
+                else:
+                    t = int(jnp.argmax(logits[i]))
+                r.out.append(t)
+                nxt[i] = t
+                if (r.eos is not None and t == r.eos) or \
+                        len(r.out) >= r.max_tokens:
+                    r.done = True
+            if all(r.done for r in cohort):
+                break
+            lg, cache = self._decode(self.params, jnp.asarray(nxt)[:, None],
+                                     cache, jnp.asarray(pos))
+            logits = lg[:, 0]
+            pos += 1
+        for r in cohort:
+            r.done = True
+            self.finished[r.rid] = r
+
+    def run(self):
+        while self.queue:
+            self._run_cohort(self._next_cohort())
+        return self

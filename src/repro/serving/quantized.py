@@ -1,0 +1,89 @@
+"""Quantized-checkpoint serving: convert/abstract params with packed weights.
+
+``quantize_params_rtn`` converts any arch's param tree (works on stacked
+layer/expert kernels via vmap) — the zero-calibration path used to exercise
+serving.  OAC/SpQR-calibrated packing goes through
+``core.pipeline.pack_results``.  ``abstract_quantized_params`` builds the
+ShapeDtypeStruct tree for dry-run lowering of w2/w3/w4 serve steps.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import qformat
+from repro.core import quantizers as qz
+from repro.models import build_model
+
+# keep these in fp16/bf16: embeddings, lm head (paper keeps them fp16), and
+# anything that is not a 2-D matmul kernel
+_SKIP = ("embed", "lm_head")
+
+
+def _is_quant_leaf(path: str) -> bool:
+    return path.endswith("kernel") and not any(s in path for s in _SKIP)
+
+
+def _quantize_leaf(w, qcfg: QuantConfig):
+    """w (..., d_in, d_out) -> stacked QuantizedTensor (leading dims vmapped)."""
+    if w.ndim > 2:
+        fn = partial(_quantize_leaf, qcfg=qcfg)
+        return jax.vmap(fn)(w)
+    if w.shape[0] % qcfg.group_size or w.shape[0] < 2 * qcfg.group_size:
+        return w  # tiny / misaligned projections stay high precision
+    q, scales, zeros, _ = qz.rtn_quantize(w, qcfg.wbits, qcfg.group_size)
+    cap = max(int(qcfg.outlier_capacity * w.size), 8)
+    zr = jnp.zeros((cap,), jnp.int32)
+    return qformat.make_quantized(
+        q, scales, zeros, qcfg.wbits, qcfg.group_size, w.shape,
+        zr, zr, jnp.zeros((cap,), jnp.bfloat16),
+        stats_bits=qcfg.stats_bits, stats_group=qcfg.stats_group)
+
+
+def quantize_params_rtn(params, qcfg: QuantConfig):
+    """Replace every eligible kernel with a packed QuantizedTensor (RTN)."""
+    from repro import utils
+
+    def convert(path, leaf):
+        if _is_quant_leaf(path) and hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            return _quantize_leaf(leaf, qcfg)
+        return leaf
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [convert(utils.path_str(p), v) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_quantized_params(cfg: ModelConfig,
+                              qcfg: QuantConfig = QuantConfig(wbits=2)):
+    """ShapeDtypeStruct param tree with packed kernels (dry-run serving)."""
+    model = build_model(cfg)
+    sds = model.abstract_params(jnp.bfloat16)
+    from repro import utils
+
+    def convert(path, leaf):
+        if not (_is_quant_leaf(path) and leaf.ndim >= 2):
+            return leaf
+        d_in, d_out = leaf.shape[-2:]
+        if d_in % qcfg.group_size or d_in < 2 * qcfg.group_size:
+            return leaf
+        qt = qformat.abstract_quantized(
+            d_in, d_out, qcfg.wbits, qcfg.group_size,
+            outlier_capacity=qcfg.outlier_capacity,
+            stats_bits=qcfg.stats_bits, stats_group=qcfg.stats_group)
+        stack = leaf.shape[:-2]
+        if stack:
+            def add_stack(x):
+                return jax.ShapeDtypeStruct(stack + x.shape, x.dtype)
+            qt = jax.tree.map(add_stack, qt)
+        return qt
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(sds)
+    leaves = [convert(utils.path_str(p), v) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+dequantize_any = qformat.dequantize_any

@@ -1,0 +1,97 @@
+"""Atomic, mesh-agnostic checkpoints (npz + JSON manifest).
+
+Checkpoints store full (unsharded) arrays keyed by pytree path, so a restore
+can re-shard onto ANY mesh — this is what makes elastic scaling work: a job
+that loses a pod restarts on the smaller mesh and `restore` lays the same
+arrays out under the new sharding (see train/loop.py and tests).
+
+Write protocol: write to `<dir>/tmp.<step>`, fsync, atomic-rename to
+`step_<n>`, update `latest` marker last.  A crash at any point leaves either
+the old or the new checkpoint intact, never a torn one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import utils
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    return {k: np.asarray(v) for k, v in utils.tree_paths(tree).items()}
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray], strict=True):
+    paths = utils.tree_paths(template)
+    missing = set(paths) - set(flat)
+    if missing and strict:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    flat_tpl, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = [flat.get(utils.path_str(p), tpl) for p, tpl in flat_tpl]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
+         keep: int = 3):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k.replace("/", "|"): v for k, v in flat.items()})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "extra": extra or {}}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(os.path.join(ckpt_dir, "latest.tmp"),
+               os.path.join(ckpt_dir, "latest"))
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    marker = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(marker):
+        return None
+    name = open(marker).read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, template, step: Optional[int] = None,
+            shardings=None, strict: bool = True) -> Tuple[Any, dict]:
+    """Restore into `template`'s structure; lay out per `shardings` if given
+    (a pytree of NamedSharding matching template) — the elastic-rescale path.
+    strict=False keeps template leaves for keys absent from the checkpoint
+    (schema-evolution tolerance)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat = {k.replace("|", "/"): data[k] for k in data.files}
+    tree = _unflatten_into(template, flat, strict=strict)
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, meta

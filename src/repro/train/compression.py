@@ -1,0 +1,54 @@
+"""Gradient compression: int8 all-reduce with error feedback.
+
+At 1000+ node scale the gradient all-reduce competes with FSDP all-gathers
+for ICI/DCN bandwidth; 4x compression of the gradient reduce is a standard
+mitigation.  Implementation: per-leaf max-abs int8 quantization, all-gather
+of int8 shards + local dequant-sum (overflow-safe, unlike int8 ring
+all-reduce), with an error-feedback residual carried in the optimizer state
+so the compression bias vanishes over steps (Karimireddy et al., 2019).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-compressed sum over a shard_map axis.
+
+    all-gathers int8 payloads (N*d bytes vs ring-psum's ~2*d*4 bytes when
+    N <= 8; for larger N, combine with a reduce-scatter first — documented
+    trade-off) and dequant-sums locally."""
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)              # (N, ...) int8
+    ss = jax.lax.all_gather(scale, axis_name)          # (N,)
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=1)
+
+
+def ef_compress(grads, residuals):
+    """Error feedback: g' = Q(g + e); e' = (g + e) - g'. Returns (g', e')."""
+    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+    leaves_e = jax.tree_util.tree_leaves(residuals)
+    gs, es = [], []
+    for g, e in zip(leaves_g, leaves_e):
+        t = g + e
+        q, s = quantize_int8(t)
+        dq = dequantize_int8(q, s).astype(g.dtype)
+        gs.append(dq)
+        es.append((t - dq).astype(g.dtype))
+    return (jax.tree_util.tree_unflatten(treedef, gs),
+            jax.tree_util.tree_unflatten(treedef, es))
+
+
+def init_residuals(params):
+    return jax.tree.map(jnp.zeros_like, params)

@@ -1,0 +1,58 @@
+"""Optimizers (AdamW / SGD) with grad clipping — self-contained (no optax)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: object
+    v: object
+
+
+def adamw_init(params):
+    z = lambda: jax.tree.map(jnp.zeros_like, params)
+    return AdamState(jnp.zeros((), jnp.int32), z(), z())
+
+
+def clip_by_global_norm(grads, max_norm):
+    g2 = sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def warmup_cosine(lr, warmup, total):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        wu = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return lr * wu * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return sched
+
+
+def adamw_update(grads, state: AdamState, params, *, lr_sched, b1=0.9,
+                 b2=0.95, eps=1e-8, weight_decay=0.01, grad_clip=1.0):
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    step = state.step + 1
+    lr = lr_sched(step)
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, mi, vi):
+        u = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        return p - lr * (u + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamState(step, m, v), {"grad_norm": gnorm, "lr": lr}
+
+
+def sgd_update(grads, params, lr):
+    """Paper App. G: plain SGD is used for the gradient computations — the
+    OAC pipeline itself never steps the optimizer; provided for completeness."""
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)

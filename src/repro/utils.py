@@ -1,0 +1,63 @@
+"""Small shared utilities: pytree paths, dtype helpers, timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_paths(tree):
+    """Return {'/a/b/c': leaf} for a nested pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        out[path_str(path)] = leaf
+    return out
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):        # GetAttrKey (registered dataclasses)
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p).strip("."))
+    return "/" + "/".join(parts)
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "shape"))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+class Stopwatch:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def lap(self) -> float:
+        t = time.perf_counter()
+        dt, self.t0 = t - self.t0, t
+        return dt
+
+
+def block_all(tree):
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, tree)
+    return tree

@@ -1,0 +1,95 @@
+"""The paper's core math, validated against exact autograd quantities.
+
+1. Fisher identity (paper eq. 12 / Appendix A): for a trained binomial
+   logistic regression, E[(g g^T)] over y ~ P_w(y|x) equals the exact CE
+   Hessian E[x pi(1-pi) x^T].
+2. eq. 13/14: the aggregated row-wise Hessian sum_j G_j^T G_j equals G^T G.
+3. GPTQ factor identities used by eq. 3/4.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hessian as hess
+
+
+def _logreg_data(n=4000, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(d,)) * 0.7)
+    x = jnp.asarray(rng.normal(size=(n, d)))
+    return w, x
+
+
+def test_fisher_identity_logistic_regression():
+    """E_y[g g^T] == x pi(1-pi) x^T exactly, per-sample (paper eq. 12)."""
+    w, x = _logreg_data()
+    pi = jax.nn.sigmoid(x @ w)
+
+    def ce(w, xi, yi):
+        p = jax.nn.sigmoid(xi @ w)
+        return -(yi * jnp.log(p + 1e-12) + (1 - yi) * jnp.log(1 - p + 1e-12))
+
+    # E_{y|x}[g g^T]: binary y has closed-form expectation
+    g1 = jax.vmap(lambda xi: jax.grad(ce)(w, xi, 1.0))(x)   # (n,d)
+    g0 = jax.vmap(lambda xi: jax.grad(ce)(w, xi, 0.0))(x)
+    Egg = jnp.einsum("n,ni,nj->ij", pi, g1, g1) + \
+        jnp.einsum("n,ni,nj->ij", 1 - pi, g0, g0)
+    # exact Hessian sum_i x_i pi(1-pi) x_i^T (eq. 11/18)
+    Hex = jnp.einsum("ni,n,nj->ij", x, pi * (1 - pi), x)
+    np.testing.assert_allclose(np.asarray(Egg), np.asarray(Hex),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fisher_sampled_converges():
+    """Empirical (1/N) sum g g^T with sampled labels approaches the Hessian."""
+    w, x = _logreg_data(n=60000, d=6, seed=1)
+    rng = np.random.default_rng(2)
+    pi = jax.nn.sigmoid(x @ w)
+    y = jnp.asarray(rng.random(x.shape[0]) < np.asarray(pi), jnp.float32)
+    g = x * (pi - y)[:, None]                     # eq. 10
+    H_emp = (g.T @ g) / x.shape[0]
+    H_exact = jnp.einsum("ni,n,nj->ij", x, pi * (1 - pi), x) / x.shape[0]
+    rel = float(jnp.linalg.norm(H_emp - H_exact) / jnp.linalg.norm(H_exact))
+    assert rel < 0.05, rel
+
+
+def test_rowwise_aggregation_identity():
+    """sum_j G_{j,:}^T G_{j,:} == G^T G (paper eq. 14 / Fig. 4)."""
+    rng = np.random.default_rng(3)
+    G = jnp.asarray(rng.normal(size=(12, 7)))
+    agg = sum(jnp.outer(G[j], G[j]) for j in range(G.shape[0]))
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(G.T @ G),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cholesky_inv_upper_identities():
+    rng = np.random.default_rng(4)
+    A = jnp.asarray(rng.normal(size=(16, 16)))
+    H = A @ A.T + 0.5 * jnp.eye(16)
+    U = hess.cholesky_inv_upper(H)
+    Hinv = jnp.linalg.inv(H)
+    # U upper triangular with H^-1 = U^T U
+    np.testing.assert_allclose(np.asarray(jnp.tril(U, -1)), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(U.T @ U), np.asarray(Hinv),
+                               rtol=1e-3, atol=1e-5)
+    # [H^-1]_{00} == U[0,0]^2 (saliency denominator, eq. 4, first pivot)
+    np.testing.assert_allclose(float(U[0, 0] ** 2), float(Hinv[0, 0]),
+                               rtol=1e-4)
+
+
+def test_regularize_eq21():
+    H = jnp.diag(jnp.asarray([1.0, 3.0]))
+    Hr = hess.regularize(H, 0.5)
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(Hr)),
+                               [1.0 + 1.0, 3.0 + 1.0])
+
+
+def test_hinv_diag():
+    rng = np.random.default_rng(5)
+    A = jnp.asarray(rng.normal(size=(10, 10)))
+    H = A @ A.T + jnp.eye(10)
+    d = hess.hinv_diag(H, 0.0)
+    np.testing.assert_allclose(np.asarray(d),
+                               np.diag(np.linalg.inv(np.asarray(H))),
+                               rtol=1e-3)

@@ -1,0 +1,117 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hessian as hess
+from repro.core import qformat
+from repro.kernels.calib_update import ops as cal_ops
+from repro.kernels.calib_update import ref as cal_ref
+from repro.kernels.dequant_matmul import kernel as dq_kernel
+from repro.kernels.dequant_matmul import ops as dq_ops
+from repro.kernels.dequant_matmul import ref as dq_ref
+from repro.kernels.hessian_gg import ops as gg_ops
+from repro.kernels.hessian_gg import ref as gg_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("shape", [(8, 128, 64), (16, 256, 128)])
+def test_dequant_matmul_bits_sweep(bits, shape):
+    M, K, N = shape
+    gs = 64
+    codes = jnp.asarray(RNG.integers(0, 2 ** bits, (K, N)), jnp.uint8)
+    planes = qformat.pack(codes, bits)
+    scales = jnp.asarray(RNG.random((K // gs, N), np.float32)) + 0.1
+    zeros = jnp.asarray(
+        RNG.integers(0, 2 ** bits, (K // gs, N)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(M, K)).astype(np.float32))
+    want = dq_ref.dequant_matmul_ref(x, codes, scales, zeros, gs)
+    got = dq_kernel.dequant_matmul_kernel(
+        x, planes, scales, zeros, bits=bits, group_size=gs,
+        bm=8, bn=64, bk=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4,
+        atol=float(jnp.abs(want).max()) * 1e-5)
+
+
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_dequant_matmul_dtypes(xdtype):
+    M, K, N, gs, bits = 8, 128, 64, 64, 2
+    codes = jnp.asarray(RNG.integers(0, 4, (K, N)), jnp.uint8)
+    planes = qformat.pack(codes, bits)
+    scales = jnp.asarray(RNG.random((K // gs, N), np.float32)) + 0.1
+    zeros = jnp.ones((K // gs, N), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(M, K))).astype(xdtype)
+    want = dq_ref.dequant_matmul_ref(x.astype(jnp.float32), codes, scales,
+                                     zeros, gs)
+    got = dq_kernel.dequant_matmul_kernel(
+        x, planes, scales, zeros, bits=bits, group_size=gs,
+        bm=8, bn=64, bk=64, interpret=True)
+    tol = 1e-5 if xdtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=float(jnp.abs(want).max()) * tol)
+
+
+def test_dequant_op_full_path_with_outliers():
+    from repro.core import solver
+    K, N, gs = 128, 96, 32
+    W = jnp.asarray(RNG.normal(size=(K, N)).astype(np.float32)) * 0.1
+    X = jnp.asarray(RNG.normal(size=(256, K)).astype(np.float32))
+    r = solver.calibrate(W, X.T @ X, bits=2, group_size=gs, alpha=0.1,
+                         tau=0.5, outlier_capacity=0.01)
+    qt = qformat.make_quantized(r.q, r.scales, r.zeros, 2, gs, W.shape,
+                                r.out_rows, r.out_cols, r.out_vals,
+                                dtype="float32")
+    x = jnp.asarray(RNG.normal(size=(4, K)).astype(np.float32))
+    dense = x @ qt.dequantize()
+    for path in ("fallback", "kernel"):
+        got = dq_ops.dequant_matmul(x, qt, force_kernel=(path == "kernel"),
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape,bi", [((64, 32), 32), ((128, 96), 64),
+                                      ((256, 64), 64), ((192, 48), 64)])
+def test_hessian_gg_sweep(shape, bi):
+    D, dout = shape
+    G = jnp.asarray(RNG.normal(size=(D, dout)).astype(np.float32))
+    H0 = jnp.asarray(RNG.normal(size=(D, D)).astype(np.float32))
+    want = gg_ref.gg_ref(G, H0)
+    got = gg_ops.gg_update(G, H0, force_kernel=True, interpret=True, bi=bi)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hessian_gg_triangle_decode():
+    from repro.kernels.hessian_gg.kernel import _tri_ij
+    # triangle index decoding must be exact for all t
+    nI = 23
+    t = 0
+    for i in range(nI):
+        for j in range(i + 1):
+            ii, jj = _tri_ij(jnp.asarray(t))
+            assert (int(ii), int(jj)) == (i, j), (t, i, j)
+            t += 1
+
+
+@pytest.mark.parametrize("B,N,bits", [(32, 64, 2), (64, 128, 3), (64, 256, 4)])
+def test_calib_update_sweep(B, N, bits):
+    W = jnp.asarray(RNG.normal(size=(B, N)).astype(np.float32))
+    X = jnp.asarray(RNG.normal(size=(4 * B, B)).astype(np.float32))
+    U = hess.cholesky_inv_upper(hess.regularize(X.T @ X, 0.1))
+    scale = jnp.asarray(RNG.random(N).astype(np.float32)) * 0.2 + 0.05
+    zero = jnp.asarray(
+        RNG.integers(0, 2 ** bits, N).astype(np.float32))
+    omask = jnp.asarray((RNG.random((B, N)) < 0.02).astype(np.float32))
+    qr, er, hr = cal_ref.block_step_ref(W, U, scale, zero, omask, bits)
+    qk, ek, hk = cal_ops.calib_block(W, U, scale, zero, omask, bits=bits,
+                                     force_kernel=True, interpret=True)
+    assert (qr == qk).all()
+    np.testing.assert_allclose(np.asarray(ek), np.asarray(er), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,120 @@
+"""Per-arch reduced-config smoke tests: forward + one train step on CPU,
+asserting output shapes and no NaNs — plus decode==apply consistency (the
+serving-path correctness invariant)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_IDS, get_smoke
+from repro.configs.base import TrainConfig
+from repro.models import build_model
+from repro.train import optimizer as opt
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32, key=KEY):
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    b = {"tokens": tok}
+    if cfg.family == "vlm":
+        F = cfg.n_frontend_tokens
+        b = {"tokens": tok[:, : S - F],
+             "frontend": jax.random.normal(key, (B, F, cfg.d_model)) * 0.02}
+    if cfg.family == "audio":
+        b["frontend"] = jax.random.normal(key, (B, S, cfg.d_model)) * 0.02
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_IDS)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_smoke(arch)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    B, S = 2, 32
+    logits, _ = m.apply(params, _batch(cfg, B, S))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_IDS)
+def test_one_train_step(arch):
+    cfg = get_smoke(arch)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    batch = _batch(cfg)
+    loss0, grads = jax.value_and_grad(m.loss)(params, batch)
+    assert not bool(jnp.isnan(loss0))
+    gnorm = sum(float(jnp.abs(g).sum())
+                for g in jax.tree_util.tree_leaves(grads))
+    assert gnorm > 0, "gradients must flow to every family"
+    state = opt.adamw_init(params)
+    sched = opt.warmup_cosine(1e-3, 1, 10)
+    params2, state, _ = opt.adamw_update(grads, state, params,
+                                         lr_sched=sched)
+    loss1 = m.loss(params2, batch)
+    assert not bool(jnp.isnan(loss1))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_IDS)
+def test_decode_matches_apply(arch):
+    cfg = get_smoke(arch)
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    m = build_model(cfg)
+    params = m.init(KEY)
+    B, S = 2, 33
+    tok = jax.random.randint(jax.random.fold_in(KEY, 1), (B, S), 0, cfg.vocab)
+    fe = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (B, S, cfg.d_model)) * 0.05
+    F = cfg.n_frontend_tokens
+
+    def mk(s):
+        b = {"tokens": tok[:, :s]}
+        if cfg.family == "vlm":
+            b = {"tokens": tok[:, : s - F], "frontend": fe[:, :F]}
+        if cfg.family == "audio":
+            b["frontend"] = fe[:, :s]
+        return b
+
+    full, _ = m.apply(params, mk(S))
+    cache = m.init_cache(B, S + 4, dtype=jnp.float32)
+    _, cache, _ = m.prefill(params, mk(S - 1), cache)
+    dec_in = fe[:, S - 1:S] if cfg.family == "audio" else (
+        tok[:, S - 1 - F:S - F] if cfg.family == "vlm" else tok[:, S - 1:S])
+    lg, _ = m.decode_step(params, dec_in, cache, jnp.asarray(S - 1))
+    diff = float(jnp.abs(lg[:, 0] - full[:, -1]).max())
+    assert diff < 1e-4, diff
+
+
+def test_gemma_local_cache_is_windowed():
+    """The grouped-local stack must allocate ring caches of window length."""
+    cfg = get_smoke("gemma3-27b")
+    m = build_model(cfg)
+    cache = m.init_cache(2, 64, dtype=jnp.float32)
+    assert cache["local"].k.shape[-3] == cfg.local_window
+    assert cache["global"].k.shape[-3] == 64
+
+
+def test_sliding_window_masks_old_tokens():
+    """A local-attention model must ignore tokens beyond the window."""
+    cfg = get_smoke("gemma3-27b")
+    cfg = dataclasses.replace(cfg, n_layers=3, global_every=3, vocab=64,
+                              local_window=4)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    tok = jax.random.randint(KEY, (1, 24), 0, 64)
+    lg1, _ = m.apply(params, {"tokens": tok})
+    # perturb a token far outside every window of the last position
+    tok2 = tok.at[0, 2].set((tok[0, 2] + 7) % 64)
+    lg2, _ = m.apply(params, {"tokens": tok2})
+    # global layer still sees it -> logits differ; but if we make ALL layers
+    # local, the last position must be unaffected
+    cfg3 = dataclasses.replace(cfg, n_layers=2, global_every=3)
+    m3 = build_model(cfg3)
+    p3 = m3.init(KEY)
+    a, _ = m3.apply(p3, {"tokens": tok})
+    b, _ = m3.apply(p3, {"tokens": tok2})
+    assert float(jnp.abs(a[0, -1] - b[0, -1]).max()) < 1e-5

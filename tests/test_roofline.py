@@ -1,0 +1,78 @@
+"""HLO analyzer fidelity: trip-count multipliers and collective parsing must
+be exact on closed-form modules (the roofline table depends on this)."""
+import subprocess
+import sys
+import os
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code, n=8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout
+
+
+def test_scan_flops_exact():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.roofline import hlo_parse
+        def f(x, ws):
+            y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+            return y
+        x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+        comp = jax.jit(f).lower(x, ws).compile()
+        r = hlo_parse.analyze(comp.as_text())
+        exp = 2 * 128 * 256 * 256 * 12
+        assert abs(r["flops"] - exp) / exp < 1e-6, (r["flops"], exp)
+        print("EXACT")
+    """)
+    assert "EXACT" in out
+
+
+def test_nested_scan_multiplies():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.roofline import hlo_parse
+        def inner(x, ws):
+            y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+            return y
+        def outer(x, ws2):
+            y, _ = jax.lax.scan(lambda c, ws: (inner(c, ws), None), x, ws2)
+            return y
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        ws2 = jax.ShapeDtypeStruct((5, 3, 64, 64), jnp.float32)
+        comp = jax.jit(outer).lower(x, ws2).compile()
+        r = hlo_parse.analyze(comp.as_text())
+        exp = 2 * 64 * 64 * 64 * 15
+        assert abs(r["flops"] - exp) / exp < 1e-6, (r["flops"], exp)
+        print("NESTED")
+    """)
+    assert "NESTED" in out
+
+
+def test_collectives_counted_per_device():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.roofline import hlo_parse
+        mesh = jax.make_mesh((8,), ("d",))
+        def f(x):
+            return jax.lax.with_sharding_constraint(
+                x.sum(0, keepdims=True) + 0.0,
+                NamedSharding(mesh, P()))
+        x = jax.ShapeDtypeStruct((8, 1024), jnp.float32)
+        xs = NamedSharding(mesh, P("d", None))
+        comp = jax.jit(f, in_shardings=(xs,)).lower(x).compile()
+        r = hlo_parse.analyze(comp.as_text())
+        # one all-reduce (or equivalent) of a (1,1024) f32 = 4096 B
+        assert 0 < r["collective_bytes"] <= 4096 * 8, r
+        print("COLL", r["collective_bytes"])
+    """)
+    assert "COLL" in out

@@ -1,0 +1,162 @@
+"""Data pipeline determinism, checkpoint atomicity/resume, fault-tolerant
+training, gradient compression, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data import DataIterator, SyntheticCorpus
+from repro.models import build_model
+from repro.serving.engine import Engine
+from repro.train import checkpoint as ckpt
+from repro.train import compression as comp
+from repro.train.loop import train
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+
+
+# ------------------------------------------------------------------- data
+def test_data_shard_determinism():
+    c = SyntheticCorpus(vocab=64, seq_len=16, seed=1)
+    full = c.batch("train", 5, 8)["tokens"]
+    # sharded fetches must tile the same global batch
+    sh = [c.batch("train", 5, 8, shard_id=i, num_shards=2)["tokens"]
+          for i in range(2)]
+    assert sh[0].shape == (4, 16)
+    # deterministic across calls
+    again = c.batch("train", 5, 8)["tokens"]
+    np.testing.assert_array_equal(full, again)
+    # different steps/splits differ
+    assert not np.array_equal(full, c.batch("train", 6, 8)["tokens"])
+    assert not np.array_equal(full, c.batch("valid", 5, 8)["tokens"])
+
+
+def test_iterator_state_restore():
+    c = SyntheticCorpus(vocab=64, seq_len=16, seed=1)
+    it = DataIterator(c, "train", 4)
+    a = [next(it)["tokens"] for _ in range(3)]
+    state = it.state
+    b1 = next(it)["tokens"]
+    it2 = DataIterator(c, "train", 4).restore(state)
+    b2 = next(it2)["tokens"]
+    np.testing.assert_array_equal(b1, b2)
+
+
+def test_corpus_is_learnable():
+    """Markov structure: bigram entropy must be far below unigram entropy."""
+    c = SyntheticCorpus(vocab=64, seq_len=256, seed=0)
+    toks = c.batch("train", 0, 8)["tokens"]
+    # empirical check: successor sets are small
+    succ = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            succ.setdefault(int(a), set()).add(int(b))
+    avg_branch = np.mean([len(v) for v in succ.values()])
+    assert avg_branch < 40, avg_branch  # vocab 64, branching 24 + resets
+
+
+# -------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree, extra={"data": {"step": s}},
+                  keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    got, meta = ckpt.restore(str(tmp_path), tree)
+    assert meta["extra"]["data"]["step"] == 4
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    # gc kept only 2
+    steps = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert len(steps) == 2
+
+
+def test_train_resume_equals_uninterrupted(tmp_path):
+    m = build_model(CFG)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=16, seed=2)
+
+    def fresh():
+        return m.init(jax.random.PRNGKey(0))
+
+    tcfg = TrainConfig(steps=8, ckpt_every=3, ckpt_dir=str(tmp_path / "a"),
+                       lr=1e-3, warmup=2)
+    p_full, _ = train(m, fresh(), DataIterator(corpus, "train", 4), tcfg,
+                      log=lambda *a: None)
+
+    # interrupted run: preemption at step 5, then restart
+    tcfg2 = TrainConfig(steps=8, ckpt_every=3, ckpt_dir=str(tmp_path / "b"),
+                        lr=1e-3, warmup=2)
+
+    class Boom(Exception):
+        pass
+
+    def injector(s):
+        if s == 5:
+            raise Boom()
+
+    with pytest.raises(Boom):
+        train(m, fresh(), DataIterator(corpus, "train", 4), tcfg2,
+              log=lambda *a: None, fault_injector=injector)
+    p_res, _ = train(m, fresh(), DataIterator(corpus, "train", 4), tcfg2,
+                     log=lambda *a: None)
+    for a, b in zip(jax.tree_util.tree_leaves(p_full),
+                    jax.tree_util.tree_leaves(p_res)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# -------------------------------------------------------------- compression
+def test_int8_error_feedback_unbiased_over_steps():
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    residual = jnp.zeros_like(g_true)
+    acc = jnp.zeros_like(g_true)
+    for _ in range(50):
+        (gq,), (residual,) = comp.ef_compress((g_true,), (residual,))
+        acc = acc + gq
+    # error feedback: accumulated compressed grads converge to the truth
+    rel = float(jnp.linalg.norm(acc / 50 - g_true) /
+                jnp.linalg.norm(g_true))
+    assert rel < 0.02, rel
+
+
+def test_int8_quant_roundtrip_bounded():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(128,)).astype(np.float32)) * 3
+    q, s = comp.quantize_int8(x)
+    back = comp.dequantize_int8(q, s)
+    assert float(jnp.abs(back - x).max()) <= float(s) * 0.51
+
+
+# ------------------------------------------------------------------ serving
+def test_engine_batches_and_finishes():
+    m = build_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(CFG, params, max_batch=3, capacity=48)
+    rs = [eng.submit(np.arange(1, 9), max_tokens=4) for _ in range(4)]
+    rs.append(eng.submit(np.arange(1, 5), max_tokens=3))
+    eng.run()
+    assert all(r.done for r in rs)
+    assert all(len(r.out) >= 3 for r in rs)
+    # greedy decode is deterministic given equal prompts
+    assert rs[0].out == rs[1].out
+
+
+def test_engine_matches_manual_greedy():
+    m = build_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    prompt = np.arange(1, 9)
+    eng = Engine(CFG, params, max_batch=1, capacity=48)
+    r = eng.submit(prompt, max_tokens=3)
+    eng.run()
+    # manual: full forward, greedy next token
+    toks = list(prompt)
+    for _ in range(3):
+        lg, _ = m.apply(params, {"tokens": jnp.asarray([toks])})
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    assert r.out == toks[len(prompt):]
