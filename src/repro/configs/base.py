@@ -182,6 +182,14 @@ class QuantConfig:
     act_order: bool = False
     grad_dtype: str = "float32"    # float32 | bfloat16 (App. C.1)
     hessian_reduction: str = "sum" # sum (eq. 22) | mean (eq. 14)
+    # OAC phase-1 gradient source:
+    #   precompute : one backward sweep of the full-precision model yields
+    #                G for EVERY layer per sample (the paper's complexity
+    #                reduction — N backwards total, and the Fisher is not
+    #                polluted by the quantization noise of earlier blocks)
+    #   sequential : per-block grads on the already-quantized prefix
+    #                (GPTQ-style error propagation; N*L backwards)
+    oac_grads: str = "precompute"
     n_calib: int = 128
     calib_seq: int = 2048
     solver_block: int = 128        # OPTQ column block size

@@ -1,11 +1,14 @@
 """OAC pipeline (paper Algorithm 1): block-wise Hessian estimation + calibration.
 
-Per transformer block (= layer index in the scanned stack):
-  Phase 1: forward the *current* model (earlier blocks already quantized) on N
-           calibration samples, backprop the output CE loss, accumulate
-           ``H_oac = sum_i G[i] G[i]^T`` for every linear kernel in the block
-           (paper eq. 22).  Gradients are taken w.r.t. ONLY this block's
-           kernels (others frozen), exactly as the paper batches per block.
+  Phase 1: accumulate ``H_oac = sum_i G[i] G[i]^T`` per linear kernel
+           (paper eq. 22).  Default (``oac_grads="precompute"``): ONE
+           backward sweep of the full-precision model per calibration
+           sample yields G for every layer at once — the paper's
+           complexity reduction (N backwards total), and the Fisher is
+           not polluted by the quantization noise of already-quantized
+           blocks.  ``oac_grads="sequential"`` instead recomputes each
+           block's grads on the current partially-quantized model
+           (GPTQ-style error propagation; N*L backwards).
   Phase 2: calibrate each kernel with the chosen Hessian-based method
            (spqr / optq / billm / rtn), substituting H_oac (or the
            output-agnostic ``sum x x^T`` for the baselines).
@@ -34,6 +37,7 @@ from repro.core import billm as bl
 from repro.core import hessian as hess
 from repro.core import qformat
 from repro.core import solver
+from repro.dist import ctx as dctx
 
 # capture-key mapping for output-agnostic (l2) Hessians
 L2_KEY = {
@@ -52,13 +56,18 @@ def layer_kernel_paths(params) -> Dict[str, jnp.ndarray]:
     return out
 
 
-def _set_layer_kernel(params, name, j, value):
-    parts = name.split("/")
+def _kernel_node(params, name):
+    """The {'kernel': ...} dict for stacked kernel ``name`` under 'layers'."""
     node = params["layers"]
-    for p in parts[:-1]:
+    for p in name.split("/"):
         node = node[p]
-    leaf = node[parts[-1]]["kernel"]
-    node[parts[-1]]["kernel"] = leaf.at[j].set(value.astype(leaf.dtype))
+    return node
+
+
+def _set_layer_kernel(params, name, j, value):
+    node = _kernel_node(params, name)
+    leaf = node["kernel"]
+    node["kernel"] = leaf.at[j].set(value.astype(leaf.dtype))
     return params
 
 
@@ -66,10 +75,66 @@ def _get_layer_kernels(params, j):
     return {n: leaf[j] for n, leaf in layer_kernel_paths(params).items()}
 
 
+def _sample_chunks(batches, dist_ctx):
+    """Yield the calibration set in dp_size-sample chunks (1 without ctx)."""
+    N = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    step = dist_ctx.dp_size if dist_ctx is not None else 1
+    for i in range(0, N, step):
+        yield jax.tree.map(lambda x: x[i:i + step], batches)
+
+
+def _fisher_accumulate(loss_of, kernels0, batches, *, reduction, dist_ctx,
+                       stacked):
+    """Chunked ``H = sum_i G[i] G[i]^T`` over per-sample grads (eq. 22).
+
+    ``kernels0`` are the kernels differentiated by ``loss_of`` —
+    ``stacked=True`` when they carry a leading layer dim.  With
+    ``dist_ctx`` samples are processed ``dp_size`` at a time with the
+    sample axis sharded over the data axes — per-sample grads stay
+    per-sample (vmap), only the outer-product sum crosses devices.
+    """
+    names = sorted(kernels0)
+    # einsum over the sample axis, keyed on (stacked, has expert dim)
+    base = 1 if stacked else 0
+    specs = {base + 3: ("nio,njo->ij", "nlio,nljo->lij")[base],
+             base + 4: ("neio,nejo->eij", "nleio,nlejo->leij")[base]}
+
+    def per_sample(batch1):
+        b = jax.tree.map(lambda x: x[None], batch1)
+        return jax.grad(loss_of)(kernels0, b)
+
+    @jax.jit
+    def accumulate(H, chunk):
+        with dctx.use(dist_ctx):
+            if dist_ctx is not None:  # sample axis over dp
+                chunk = jax.tree.map(lambda x: dctx.wsc(x, "b"), chunk)
+            g = jax.vmap(per_sample)(chunk)
+            for n in names:
+                G = g[n].astype(jnp.float32)
+                H[n] = H[n] + jnp.einsum(specs[G.ndim], G, G)
+        return H
+
+    H = {n: jnp.zeros(k.shape[:-1] + (k.shape[-2],), jnp.float32)
+         for n, k in kernels0.items()}
+    for b in _sample_chunks(batches, dist_ctx):
+        H = accumulate(H, b)
+    if reduction == "mean":
+        N = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        H = {n: v / N for n, v in H.items()}
+    return H
+
+
+def _grad_cast(grad_dtype):
+    return (lambda t: utils.cast_tree(t, jnp.bfloat16)) \
+        if grad_dtype == "bfloat16" else (lambda t: t)
+
+
 def oac_hessians_for_layer(model, params, batches, j, *,
-                           grad_dtype="float32", reduction="sum"):
-    """Phase 1 for one block: per-sample grads of only block j's kernels."""
-    names = sorted(layer_kernel_paths(params))
+                           grad_dtype="float32", reduction="sum",
+                           dist_ctx=None):
+    """Phase 1, sequential mode: per-sample grads of only block j's kernels
+    on the current (partially quantized) model."""
+    cast = _grad_cast(grad_dtype)
 
     def insert(p, kern):
         p = jax.tree.map(lambda x: x, p)  # shallow copy of dict structure
@@ -77,50 +142,53 @@ def oac_hessians_for_layer(model, params, batches, j, *,
             _set_layer_kernel(p, n, j, v)
         return p
 
-    block0 = _get_layer_kernels(params, j)
-    cast = (lambda t: utils.cast_tree(t, jnp.bfloat16)) \
-        if grad_dtype == "bfloat16" else (lambda t: t)
-
     def loss_of(kern, batch):
         return model.loss(insert(cast(params), cast(kern)), batch)
 
-    @jax.jit
-    def accumulate(H, batch):
-        g = jax.grad(loss_of)(block0, batch)
-        for n in names:
-            G = g[n].astype(jnp.float32)
-            if G.ndim == 2:
-                H[n] = H[n] + G @ G.T
-            else:  # (E, d_in, d_out) expert stack
-                H[n] = H[n] + jnp.einsum("eio,ejo->eij", G, G)
-        return H
-
-    H = {}
-    for n in names:
-        k = block0[n]
-        shp = (k.shape[0], k.shape[0]) if k.ndim == 2 else \
-            (k.shape[0], k.shape[1], k.shape[1])
-        H[n] = jnp.zeros(shp, jnp.float32)
-    N = jax.tree_util.tree_leaves(batches)[0].shape[0]
-    for i in range(N):
-        b = jax.tree.map(lambda x: x[i:i + 1], batches)
-        H = accumulate(H, b)
-    if reduction == "mean":
-        H = {n: v / N for n, v in H.items()}
-    return H
+    return _fisher_accumulate(loss_of, _get_layer_kernels(params, j),
+                              batches, reduction=reduction,
+                              dist_ctx=dist_ctx, stacked=False)
 
 
-def l2_hessians(model, params, batches):
-    """Output-agnostic Hessians for all layers via forward captures."""
+def oac_hessians_all_layers(model, params, batches, *, grad_dtype="float32",
+                            reduction="sum", dist_ctx=None):
+    """Phase 1, precompute mode: all layers' Hessians from shared backwards.
+
+    One backward pass per calibration sample gives the gradient of EVERY
+    stacked kernel simultaneously; accumulating per-layer outer products
+    costs nothing extra.  Returns {name: (L, d_in, d_in)} (experts:
+    (L, E, d_in, d_in))."""
+    cast = _grad_cast(grad_dtype)
+
+    def insert_all(p, kern):
+        p = jax.tree.map(lambda x: x, p)
+        for n, v in kern.items():
+            _kernel_node(p, n)["kernel"] = v
+        return p
+
+    def loss_of(kern, batch):
+        return model.loss(insert_all(cast(params), cast(kern)), batch)
+
+    return _fisher_accumulate(loss_of, layer_kernel_paths(params), batches,
+                              reduction=reduction, dist_ctx=dist_ctx,
+                              stacked=True)
+
+
+def l2_hessians(model, params, batches, *, dist_ctx=None):
+    """Output-agnostic Hessians for all layers via forward captures.
+
+    The captured grams already sum over batch rows, so with ``dist_ctx``
+    whole dp-sharded chunks go through one forward each."""
     @jax.jit
     def one(batch):
-        _, aux = model.apply(params, batch, capture=True)
+        with dctx.use(dist_ctx):
+            if dist_ctx is not None:
+                batch = jax.tree.map(lambda x: dctx.wsc(x, "b"), batch)
+            _, aux = model.apply(params, batch, capture=True)
         return aux["xtx"]
 
-    N = jax.tree_util.tree_leaves(batches)[0].shape[0]
     acc = None
-    for i in range(N):
-        b = jax.tree.map(lambda x: x[i:i + 1], batches)
+    for b in _sample_chunks(batches, dist_ctx):
         x = one(b)
         acc = x if acc is None else jax.tree.map(jnp.add, acc, x)
     return acc  # {capture_key: (L, d, d)}
@@ -155,11 +223,18 @@ def _calibrate_kernel(W, H, qcfg: QuantConfig):
 
 def quantize_model(model, params, batches, qcfg: QuantConfig, *,
                    sequential: bool = True, ckpt_dir: Optional[str] = None,
-                   log: Callable = print):
+                   dist_ctx=None, log: Callable = print):
     """Run Algorithm 1 over a uniform-stacked model.
+
+    ``dist_ctx`` (optional ``repro.dist.ctx.DistCtx``) shards the Phase-1
+    calibration forward/backward over the mesh's data axes; the per-kernel
+    Phase-2 solves are unchanged (they are tiny relative to Phase 1).
 
     Returns (params with fake-quant weights, {(<layer>, <name>): LayerResult}).
     """
+    if qcfg.oac_grads not in ("precompute", "sequential"):
+        raise ValueError(f"unknown oac_grads {qcfg.oac_grads!r}; "
+                         "expected 'precompute' or 'sequential'")
     params = jax.tree.map(lambda x: x, params)
     names = sorted(layer_kernel_paths(params))
     n_layers = layer_kernel_paths(params)[names[0]].shape[0]
@@ -174,19 +249,34 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
             log(f"[pipeline] resuming: {len(done)} layer-kernels done")
 
     l2_caps = None
+    H_all = None
+    any_todo = any(f"{j}:{n}" not in done
+                   for j in range(n_layers) for n in names)
+    if qcfg.method != "rtn" and qcfg.hessian == "oac" and any_todo \
+            and qcfg.oac_grads == "precompute":
+        # precompute BEFORE any per-layer restore so a resumed run sees the
+        # same (full-precision) model as the uninterrupted one; park the
+        # (L, d, d) stacks in host memory — keeping every layer's Hessian
+        # device-resident through Phase 2 is O(L d^2) of HBM
+        H_all = jax.tree.map(np.asarray, oac_hessians_all_layers(
+            model, params, batches, grad_dtype=qcfg.grad_dtype,
+            reduction=qcfg.hessian_reduction, dist_ctx=dist_ctx))
     for j in range(n_layers):
         needs_h = qcfg.method != "rtn"
         H_blk = None
         todo = [n for n in names if f"{j}:{n}" not in done]
         if needs_h and qcfg.hessian == "oac" and todo:
-            H_blk = oac_hessians_for_layer(
-                model, params, batches, j, grad_dtype=qcfg.grad_dtype,
-                reduction=qcfg.hessian_reduction)
+            if H_all is not None:
+                H_blk = {n: H_all[n][j] for n in names}
+            else:
+                H_blk = oac_hessians_for_layer(
+                    model, params, batches, j, grad_dtype=qcfg.grad_dtype,
+                    reduction=qcfg.hessian_reduction, dist_ctx=dist_ctx)
         if needs_h and qcfg.hessian == "l2" and todo and (
                 sequential or l2_caps is None):
             # sequential error propagation: captures reflect the already-
             # quantized earlier blocks (SpQR/OPTQ-faithful)
-            l2_caps = l2_hessians(model, params, batches)
+            l2_caps = l2_hessians(model, params, batches, dist_ctx=dist_ctx)
         for n in names:
             key = f"{j}:{n}"
             W = _get_layer_kernels(params, j)[n]
@@ -256,9 +346,5 @@ def pack_results(params, results, qcfg: QuantConfig):
                 stats_bits=qcfg.stats_bits, stats_group=qcfg.stats_group)
             per_layer.append(qt)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
-        parts = n.split("/")
-        node = params["layers"]
-        for p in parts[:-1]:
-            node = node[p]
-        node[parts[-1]]["kernel"] = stacked
+        _kernel_node(params, n)["kernel"] = stacked
     return params

@@ -1,0 +1,36 @@
+"""``repro.dist`` — the single public distribution API.
+
+Read side (model code): ``repro.dist.ctx`` — ambient ``DistCtx`` via
+``get()``/``use()`` plus the ``wsc``/``tp_if`` constraint helpers; every
+path degrades to single-device math when no context is active.
+
+Write side (launchers/tests): ``repro.dist.sharding.make_plan(cfg, mesh)``
+-> ``ShardingPlan`` (param/batch/cache layouts + attention-mode choices),
+and ``repro.dist.steps`` for jit'd train/prefill/serve step builders.
+
+Importing the package installs the jax compat shims; the heavier
+submodules (steps pulls in the model zoo) resolve lazily so low-level
+consumers (kernels, compression) can depend on ``repro.dist.compat``
+without dragging the model stack into their import graph.
+
+See DESIGN.md for the contract and the §4 attention dispatch table.
+"""
+import importlib
+
+from repro.dist import compat  # noqa: F401  (installs jax API shims)
+
+_EXPORTS = {
+    "DistCtx": "repro.dist.ctx", "get": "repro.dist.ctx",
+    "use": "repro.dist.ctx", "wsc": "repro.dist.ctx",
+    "tp_if": "repro.dist.ctx",
+    "ShardingPlan": "repro.dist.sharding", "make_plan": "repro.dist.sharding",
+    "build_step": "repro.dist.steps", "build_train_step": "repro.dist.steps",
+}
+
+__all__ = ["compat"] + sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")

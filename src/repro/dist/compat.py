@@ -1,0 +1,57 @@
+"""JAX version compatibility shims for the distribution layer.
+
+The model stack and the dist tests target the modern top-level API
+(``jax.shard_map``, ``jax.set_mesh``, ``jax.make_mesh``).  On older
+jaxlib builds those live under ``jax.experimental`` / the ``Mesh``
+context manager; importing this module installs equivalent top-level
+aliases exactly once so the same source runs on both.
+
+Shim semantics:
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...)`` maps to
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep=False``
+    (the old replication checker predates the varying-axis typing the
+    attention kernels rely on and rejects valid programs).
+  * ``jax.set_mesh(mesh)`` returns the mesh itself — ``Mesh`` has been a
+    context manager since 0.4.x, so ``with jax.set_mesh(m):`` behaves the
+    same way (sets the ambient resource env for the block).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh=None, in_specs=None, out_specs=None, **kw):
+            kw.setdefault("check_rep", False)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = lambda mesh: mesh
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        if not hasattr(pltpu, "CompilerParams") \
+                and hasattr(pltpu, "TPUCompilerParams"):
+            pltpu.CompilerParams = pltpu.TPUCompilerParams
+    except ImportError:  # pallas not built into this jaxlib
+        pass
+
+    if not hasattr(jax, "make_mesh"):  # very old fallback
+        import numpy as np
+        from jax.experimental import mesh_utils
+        from jax.sharding import Mesh
+
+        def make_mesh(shape, axis_names):
+            devs = mesh_utils.create_device_mesh(tuple(shape))
+            return Mesh(np.asarray(devs).reshape(shape), axis_names)
+
+        jax.make_mesh = make_mesh
+
+
+install()

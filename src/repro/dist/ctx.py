@@ -1,0 +1,123 @@
+"""Ambient distribution context: ``DistCtx`` + module-level ``get``/``use``.
+
+This is the read side of the distribution API.  Model code never receives
+a mesh argument — it consults the ambient context at trace time:
+
+    from repro.dist import ctx as dctx
+    c = dctx.get()            # DistCtx or None (single-device fallback)
+    if c is None: ...         # plain single-device math
+
+``DistCtx`` is a frozen value object: the mesh, which axes carry data
+parallelism (``dp``), which axis carries tensor parallelism (``tp``), the
+PartitionSpec entry for batch dims (``batch_spec``), and the attention
+dispatch modes picked by ``repro.dist.sharding.make_plan`` (see DESIGN.md
+§4 for the mode table).  Because it is immutable, variants are cheap:
+``dataclasses.replace(c, attn_decode_mode="dense")``.
+
+The two sharding-constraint helpers keep model code terse:
+
+  * ``wsc(x, *dims)`` — with_sharding_constraint with one token per dim:
+    ``"b"`` -> the ctx batch spec, ``"tp"`` -> the tp axis, ``None`` ->
+    replicated, anything else (an axis name, e.g. from ``tp_if``) passes
+    through.  Tokens whose mesh-axis size does not divide the dim are
+    dropped, and the whole call is the identity when no ctx is active —
+    so model code needs no divisibility or single-device guards.
+  * ``tp_if(dim)`` — the tp axis name when ``dim`` is divisible by
+    ``tp_size`` (and a ctx is active), else None.  Used to build specs
+    that shard "when the math lines up" (vocab, expert, head dims).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.dist import compat  # noqa: F401  (installs jax API shims)
+
+
+def _axis_size(mesh, axes) -> int:
+    """Total size of one axis name or a tuple of axis names."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    """Immutable description of how the current computation is distributed."""
+    mesh: Any
+    dp: Tuple[str, ...] = ("data",)
+    tp: str = "model"
+    # PartitionSpec entry used for batch dims (usually ``dp`` as a tuple;
+    # None -> batch replicated, e.g. when B does not divide dp_size).
+    batch_spec: Any = ("data",)
+    attn_train_mode: str = "grouped"    # grouped | repeated | seq_shard
+    attn_decode_mode: str = "dense"     # dense | flash
+    remat: bool = False
+    hidden_seq_shard: bool = False
+
+    @property
+    def tp_size(self) -> int:
+        return _axis_size(self.mesh, self.tp)
+
+    @property
+    def dp_size(self) -> int:
+        return _axis_size(self.mesh, self.dp)
+
+
+_current: Optional[DistCtx] = None
+
+
+def get() -> Optional[DistCtx]:
+    """The active DistCtx, or None (single-device fallback paths)."""
+    return _current
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[DistCtx]):
+    """Make ``ctx`` the ambient context for the block (re-entrant)."""
+    global _current
+    prev = _current
+    _current = ctx
+    try:
+        yield ctx
+    finally:
+        _current = prev
+
+
+def _resolve(c: DistCtx, token, dim: int):
+    """Token -> PartitionSpec entry, dropping non-divisible shardings."""
+    if token == "b":
+        token = c.batch_spec
+    elif token == "tp":
+        token = c.tp
+    if token is None:
+        return None
+    if dim % _axis_size(c.mesh, token) != 0:
+        return None
+    return token
+
+
+def wsc(x, *dims):
+    """Sharding constraint on ``x``; one token per dim (identity w/o ctx)."""
+    c = get()
+    if c is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = [_resolve(c, t, x.shape[i]) for i, t in enumerate(dims[:x.ndim])]
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(c.mesh, P(*spec)))
+
+
+def tp_if(dim: int) -> Optional[str]:
+    """The tp axis name when ``dim`` shards evenly over it, else None."""
+    c = get()
+    if c is None or c.tp_size <= 1:
+        return None
+    return c.tp if dim % c.tp_size == 0 else None

@@ -1,0 +1,224 @@
+"""Sharding plans: per-architecture layout decisions for a concrete mesh.
+
+``make_plan(cfg, mesh)`` inspects the model config against the mesh and
+returns a ``ShardingPlan`` — the write side of the distribution API.  The
+plan owns every layout decision so model code never sees a mesh:
+
+  * attention dispatch modes (DESIGN.md §4): picked from how the head
+    counts divide the tensor-parallel axis.  Training/prefill:
+    ``grouped`` when KV heads divide tp, ``repeated`` when only Q heads
+    do, ``seq_shard`` when neither does.  Decode: ``dense`` when KV
+    heads divide tp, ``flash`` (KV-length-parallel flash-decoding)
+    otherwise and for long-context cells.
+  * ``param_shardings(params)`` — NamedSharding pytree for the params:
+    matmul kernels TP-shard their output dim (input dim for ``wo``-style
+    contractions so the activation all-reduce is the only collective)
+    and FSDP-shard the complementary dim over the data axes; embeddings
+    vocab-shard; norms/biases/small projections replicate.
+  * ``batch_spec(batch, B)`` — batch pytree layout (leading dim over dp).
+  * ``cache_shardings(cache, ctx)`` — KV/SSM cache layout matching the
+    decode mode (KV heads for ``dense``, cache length for ``flash``).
+  * ``ctx(shape)`` — the frozen ``DistCtx`` the model stack reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.ctx import DistCtx
+
+# decode cells at/above this sequence length use flash decoding even when
+# the KV heads divide tp: sharding the cache length bounds per-chip KV HBM.
+LONG_CONTEXT_FLASH = 131072
+
+
+def _size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+# kernels whose contraction (input) dim is the TP-sharded one: the matmul
+# then produces partial sums and GSPMD inserts a single all-reduce, instead
+# of all-gathering the (tp-sharded) activations first.
+_ROW_SHARDED = ("wo", "out_proj", "cm_value")
+# small projections kept replicated by design (see ssm_mamba2.py docstring).
+_REPLICATED = ("in_B", "in_C", "in_dt", "router")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    cfg: ModelConfig
+    mesh: Any
+    dp: Tuple[str, ...]
+    tp: str
+    attn_train_mode: str
+
+    # ------------------------------------------------------------ derived
+    @property
+    def tp_size(self) -> int:
+        return _size(self.mesh, self.tp)
+
+    @property
+    def dp_size(self) -> int:
+        return _size(self.mesh, self.dp)
+
+    @property
+    def batch_entry(self):
+        """PartitionSpec entry for batch dims (None when there is no dp)."""
+        return self.dp if self.dp else None
+
+    # ---------------------------------------------------------------- ctx
+    def decode_mode(self, shape: Optional[ShapeConfig] = None) -> str:
+        if self.tp_size <= 1:
+            return "dense"        # trivial mesh: no-collective invariant
+        kv = self.cfg.n_kv_heads
+        if kv and kv % self.tp_size != 0:
+            return "flash"
+        if shape is not None and shape.kind == "decode" \
+                and shape.seq_len >= LONG_CONTEXT_FLASH \
+                and shape.seq_len % self.tp_size == 0:
+            return "flash"
+        return "dense"
+
+    def ctx(self, shape: Optional[ShapeConfig] = None) -> DistCtx:
+        kind = shape.kind if shape is not None else "train"
+        b = self.batch_entry
+        if shape is not None and shape.global_batch % self.dp_size != 0:
+            b = None
+        return DistCtx(
+            mesh=self.mesh, dp=self.dp, tp=self.tp, batch_spec=b,
+            attn_train_mode=self.attn_train_mode,
+            attn_decode_mode=self.decode_mode(shape),
+            remat=(kind == "train"),
+            hidden_seq_shard=(kind != "decode"))
+
+    # ------------------------------------------------------------- params
+    def _fits(self, axes, dim: int) -> bool:
+        return axes is not None and dim % _size(self.mesh, axes) == 0
+
+    def _param_spec(self, path: str, shape) -> list:
+        nd = len(shape)
+        spec = [None] * nd
+        if path.endswith("embed/table"):
+            if self._fits(self.tp, shape[0]):
+                spec[0] = self.tp          # vocab-sharded (see _logits)
+            return spec
+        name = path.split("/")[-2] if path.endswith("/kernel") else \
+            path.split("/")[-1]
+        if not (path.endswith("/kernel") or name in ("conv_x",)) or nd < 2:
+            return spec                    # norms / biases / scalars
+        if name in _REPLICATED:
+            return spec
+        if name == "conv_x":               # (..., K, d_in): head-aligned
+            if self._fits(self.tp, shape[-1]):
+                spec[-1] = self.tp
+            return spec
+        if "/moe/" in path and nd >= 3:
+            # expert stacks (..., E, d, f): shard E over tp when divisible,
+            # else the ffn dim; FSDP the model dim over dp (moe.py contract).
+            e_ax, ff_ax = nd - 3, (nd - 1 if name != "wo" else nd - 2)
+            d_ax = nd - 2 if name != "wo" else nd - 1
+            if self._fits(self.tp, shape[e_ax]):
+                spec[e_ax] = self.tp
+            elif self._fits(self.tp, shape[ff_ax]):
+                spec[ff_ax] = self.tp
+            if self._fits(self.dp, shape[d_ax]):
+                spec[d_ax] = self.dp
+            return spec
+        col, row = nd - 1, nd - 2
+        tp_ax, dp_ax = (row, col) if name in _ROW_SHARDED else (col, row)
+        if self._fits(self.tp, shape[tp_ax]):
+            spec[tp_ax] = self.tp
+        if self._fits(self.dp, shape[dp_ax]):
+            spec[dp_ax] = self.dp          # FSDP over the data axes
+        return spec
+
+    def param_shardings(self, params):
+        """NamedSharding pytree matching ``params`` (works on abstract or
+        concrete trees; unrecognized leaves — packed QuantizedTensor
+        planes, stats — replicate)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import utils
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        out = []
+        for p, leaf in flat:
+            spec = self._param_spec(utils.path_str(p), leaf.shape)
+            out.append(NamedSharding(self.mesh, P(*spec)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -------------------------------------------------------------- batch
+    def batch_spec(self, batch, B: int):
+        """NamedSharding pytree for a batch dict (leading dim over dp)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        b = self.batch_entry if B % self.dp_size == 0 else None
+
+        def one(x):
+            return NamedSharding(
+                self.mesh, P(*([b] + [None] * (len(x.shape) - 1))))
+        return jax.tree.map(one, batch)
+
+    # -------------------------------------------------------------- cache
+    def cache_shardings(self, cache, ctx: DistCtx):
+        """NamedSharding pytree for a decode cache, matching the decode
+        mode: ``dense`` shards KV heads, ``flash`` shards cache length."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.models.attention import KVCache
+        b, tp = ctx.batch_spec, self.tp
+        flash = ctx.attn_decode_mode == "flash"
+
+        def kv_like(x):
+            # (stack..., B, cap, KV, hd)
+            nd = len(x.shape)
+            spec = [None] * nd
+            if self._fits(b, x.shape[nd - 4]):
+                spec[nd - 4] = b
+            if flash:
+                spec[nd - 3] = tp if self._fits(tp, x.shape[nd - 3]) else None
+            elif self._fits(tp, x.shape[nd - 2]):
+                spec[nd - 2] = tp
+            return NamedSharding(self.mesh, P(*spec))
+
+        def one(node):
+            if isinstance(node, KVCache):
+                sp_spec = [None] * (node.slot_pos.ndim - 1)
+                sp_spec += [tp if flash and
+                            self._fits(tp, node.slot_pos.shape[-1]) else None]
+                return KVCache(kv_like(node.k), kv_like(node.v),
+                               NamedSharding(self.mesh, P(*sp_spec)))
+            # SSM / RWKV state leaves: head- or channel-shard when aligned
+            def leaf(x):
+                nd = len(x.shape)
+                spec = [None] * nd
+                if nd >= 4 and self._fits(tp, x.shape[-3]):
+                    spec[-3] = tp          # (.., B, nH, P, N) heads
+                elif nd >= 3 and self._fits(tp, x.shape[-1]):
+                    spec[-1] = tp          # (.., B, K-1, conv_ch) channels
+                return NamedSharding(self.mesh, P(*spec))
+            return jax.tree.map(leaf, node)
+
+        return jax.tree.map(one, cache,
+                            is_leaf=lambda n: isinstance(n, KVCache))
+
+
+def make_plan(cfg: ModelConfig, mesh) -> ShardingPlan:
+    """Pick per-architecture layouts for ``cfg`` on ``mesh``."""
+    names = tuple(mesh.axis_names)
+    tp = "model" if "model" in names else names[-1]
+    dp = tuple(a for a in names if a != tp)
+    tp_size = _size(mesh, tp)
+    kv, h = cfg.n_kv_heads, cfg.n_heads
+    if tp_size <= 1 or not h or kv % tp_size == 0:
+        train_mode = "grouped"
+    elif h % tp_size == 0:
+        train_mode = "repeated"
+    else:
+        train_mode = "seq_shard"
+    return ShardingPlan(cfg=cfg, mesh=mesh, dp=dp, tp=tp,
+                        attn_train_mode=train_mode)

@@ -1,0 +1,123 @@
+"""Step builders: jit'd train / prefill / serve steps under a ShardingPlan.
+
+``build_train_step`` is the production train step (donated params +
+optimizer state, bf16 compute over fp32 master params); ``build_step`` is
+the generic entry the dry-run driver lowers for every (arch x shape) cell
+— it dispatches on ``shape.kind`` and returns ``(jitted, abstract_args,
+ctx)`` so callers can either execute the step or ``.lower()`` it with no
+device allocation.
+
+The plan's ``DistCtx`` is entered around the traced body (``dctx.use``),
+so every mode dispatch and sharding constraint inside the model stack
+resolves against the plan while tracing; at run time the context is
+irrelevant (the decisions are baked into the jaxpr).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.dist import ctx as dctx
+from repro.dist.sharding import ShardingPlan, make_plan
+from repro.launch import specs
+from repro.models import build_model
+from repro.train import optimizer as opt
+
+
+def _replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P())
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                     plan: ShardingPlan, tcfg: Optional[TrainConfig] = None):
+    """Donated-arg jit train step.
+
+    ``step(params, opt_state, batch) -> (params', opt_state', loss)`` with
+    in/out shardings pinned to the plan (callers ``device_put`` committed
+    arrays with ``plan.param_shardings`` / ``plan.batch_spec`` so donation
+    can alias buffers).  Loss/grads run in bf16 over fp32 master params.
+    Returns ``(jitted, abstract_args, ctx)``.
+    """
+    tcfg = tcfg or TrainConfig()
+    model = build_model(cfg)
+    ctx = plan.ctx(shape)
+    sched = opt.warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
+
+    def step(params, opt_state, batch):
+        with dctx.use(ctx):
+            def loss_fn(p):
+                return model.loss(utils.cast_tree(p, jnp.bfloat16), batch)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params2, opt2, _ = opt.adamw_update(
+                grads, opt_state, params, lr_sched=sched, b1=tcfg.b1,
+                b2=tcfg.b2, eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+                grad_clip=tcfg.grad_clip)
+        return params2, opt2, loss
+
+    p_sds = model.abstract_params()
+    ps = plan.param_shardings(p_sds)
+    repl = _replicated(plan.mesh)
+    o_sh = opt.AdamState(repl, ps, ps)
+    batch_sds = specs.input_specs(cfg, shape)
+    b_sh = plan.batch_spec(batch_sds, shape.global_batch)
+    jitted = jax.jit(step, donate_argnums=(0, 1),
+                     in_shardings=(ps, o_sh, b_sh),
+                     out_shardings=(ps, o_sh, repl))
+    o_sds = opt.AdamState(jax.ShapeDtypeStruct((), jnp.int32), p_sds, p_sds)
+    return jitted, (p_sds, o_sds, batch_sds), ctx
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               quantized_params_sds=None):
+    """Generic (arch x shape) step for the dry-run driver and launchers.
+
+    train   -> ``build_train_step`` under a fresh plan;
+    prefill -> jit'd bulk prefill (cache donated);
+    decode  -> jit'd serve step (cache donated), optionally over packed
+               ``QuantizedTensor`` params (``quantized_params_sds``).
+
+    Returns ``(jitted, abstract_args, ctx)``.
+    """
+    plan = make_plan(cfg, mesh)
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, plan)
+
+    ctx = plan.ctx(shape)
+    model = build_model(cfg)
+    p_sds = quantized_params_sds if quantized_params_sds is not None \
+        else model.abstract_params(jnp.bfloat16)
+    ps = plan.param_shardings(p_sds)
+    repl = _replicated(mesh)
+    B = shape.global_batch
+
+    if shape.kind == "prefill":
+        batch_sds = specs.input_specs(cfg, shape)
+        cache_sds = model.init_cache(B, shape.seq_len, dtype=jnp.bfloat16,
+                                     abstract=True)
+
+        def prefill_step(params, batch, cache):
+            with dctx.use(ctx):
+                return model.prefill(params, batch, cache)
+
+        jitted = jax.jit(
+            prefill_step, donate_argnums=(2,),
+            in_shardings=(ps, plan.batch_spec(batch_sds, B),
+                          plan.cache_shardings(cache_sds, ctx)))
+        return jitted, (p_sds, batch_sds, cache_sds), ctx
+
+    tok_sds, cache_sds, pos_sds = specs.decode_specs(cfg, shape)
+
+    def serve_step(params, tokens, cache, pos):
+        with dctx.use(ctx):
+            return model.decode_step(params, tokens, cache, pos)
+
+    jitted = jax.jit(
+        serve_step, donate_argnums=(2,),
+        in_shardings=(ps, plan.batch_spec(tok_sds, B),
+                      plan.cache_shardings(cache_sds, ctx), repl))
+    return jitted, (p_sds, tok_sds, cache_sds, pos_sds), ctx

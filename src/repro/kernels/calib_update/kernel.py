@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import repro.dist.compat  # noqa: F401  (aliases pltpu.CompilerParams on older jax)
+
 
 def _kernel(w_ref, u_ref, s_ref, z_ref, m_ref, q_ref, e_ref, h_ref, *,
             bits: int):

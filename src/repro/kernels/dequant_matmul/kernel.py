@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import repro.dist.compat  # noqa: F401  (aliases pltpu.CompilerParams on older jax)
+
 
 def _unpack_block(refs, bits: int, bk: int):
     """uint8 plane block(s) -> (bk, bn) int32 codes."""

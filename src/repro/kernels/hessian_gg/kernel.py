@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import repro.dist.compat  # noqa: F401  (aliases pltpu.CompilerParams on older jax)
+
 
 def _tri_ij(t):
     """Triangle index t -> (i, j), j <= i, row-major over the triangle."""

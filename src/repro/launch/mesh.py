@@ -17,5 +17,6 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever local devices exist (tests / CPU smoke)."""
     n = len(jax.devices())
-    assert n % model == 0
+    assert n % model == 0, \
+        f"model-parallel degree {model} must divide the {n} local devices"
     return jax.make_mesh((n // model, model), ("data", "model"))

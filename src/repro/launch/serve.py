@@ -1,15 +1,21 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [--wbits 2]``.
 
 Builds a (reduced) model, optionally RTN-quantizes it to packed low-bit
-storage, and serves a demo batch of requests through the engine.
+storage, and serves a demo batch of requests through the engine.  With
+``--tp N`` the engine runs under a local (devices/N, N) mesh and a
+``repro.dist`` ShardingPlan, so quantized decode exercises the same
+tensor-parallel layout the production mesh uses.
 """
 import argparse
+import contextlib
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.configs.base import QuantConfig
+from repro.dist.sharding import make_plan
+from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serving.engine import Engine
 from repro.serving.quantized import quantize_params_rtn
@@ -22,6 +28,8 @@ def main():
     ap.add_argument("--wbits", type=int, default=16)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree over local devices")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -31,12 +39,23 @@ def main():
         params = quantize_params_rtn(
             params, QuantConfig(wbits=args.wbits, group_size=32))
         print(f"[serve] packed weights to w{args.wbits}")
-    eng = Engine(cfg, params, max_batch=args.requests, capacity=128)
-    rng = np.random.default_rng(0)
-    rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
-                     max_tokens=args.max_tokens)
-          for _ in range(args.requests)]
-    eng.run()
+
+    plan, mesh_ctx = None, contextlib.nullcontext()
+    if args.tp > 1:
+        mesh = make_host_mesh(model=args.tp)
+        plan = make_plan(cfg, mesh)
+        mesh_ctx = jax.set_mesh(mesh)
+        print(f"[serve] mesh {dict(mesh.shape)} "
+              f"(decode mode: {plan.ctx().attn_decode_mode})")
+
+    with mesh_ctx:
+        eng = Engine(cfg, params, max_batch=args.requests, capacity=128,
+                     plan=plan)
+        rng = np.random.default_rng(0)
+        rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
+                         max_tokens=args.max_tokens)
+              for _ in range(args.requests)]
+        eng.run()
     for r in rs:
         print(f"[serve] req {r.rid}: {r.out}")
 

@@ -8,6 +8,8 @@ serving pattern; per-slot-position continuous batching needs per-row cache
 clocks and is noted as future work in DESIGN.md).
 
 Works with dense or OAC-quantized params for every assigned architecture.
+Pass a ``repro.dist`` ShardingPlan to run prefill/decode under a mesh
+(tensor-parallel serving); without one the engine is single-device.
 """
 from __future__ import annotations
 
@@ -35,7 +37,7 @@ class Request:
 
 class Engine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
-                 capacity: int = 512, seed: int = 0):
+                 capacity: int = 512, seed: int = 0, plan=None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -44,9 +46,27 @@ class Engine:
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self.key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(self.model.decode_step)
-        self._prefill = jax.jit(self.model.prefill)
+        self.ctx = None
+        if plan is not None:
+            from repro.configs.base import ShapeConfig
+            c = plan.ctx(ShapeConfig("serve", capacity, max_batch, "decode"))
+            # cohorts may come up smaller than max_batch, so keep the batch
+            # replicated: only the params/cache layouts (tp) are pinned here
+            self.ctx = dataclasses.replace(c, batch_spec=None)
+            self.params = jax.device_put(params, plan.param_shardings(params))
+        self._decode = jax.jit(self._with_ctx(self.model.decode_step))
+        self._prefill = jax.jit(self._with_ctx(self.model.prefill))
         self._next_rid = 0
+
+    def _with_ctx(self, fn):
+        if self.ctx is None:
+            return fn
+
+        def wrapped(*args):
+            from repro.dist import ctx as dctx
+            with dctx.use(self.ctx):
+                return fn(*args)
+        return wrapped
 
     def submit(self, prompt, **kw) -> Request:
         r = Request(self._next_rid, np.asarray(prompt, np.int32), **kw)
@@ -59,8 +79,9 @@ class Engine:
         for r in self.queue:
             by_len[len(r.prompt)].append(r)
         best = max(by_len.values(), key=len)[:self.max_batch]
-        for r in best:
-            self.queue.remove(r)
+        # single-pass partition (repeated list.remove is O(n^2) in queue len)
+        chosen = {id(r) for r in best}
+        self.queue = [r for r in self.queue if id(r) not in chosen]
         return best
 
     def _run_cohort(self, cohort: List[Request]):

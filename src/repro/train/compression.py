@@ -12,6 +12,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import repro.dist.compat  # noqa: F401  (top-level jax.shard_map/set_mesh
+#                           aliases for callers driving this under a mesh)
+
 
 def quantize_int8(x):
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12

@@ -1,0 +1,114 @@
+"""No-mesh fallback contract: with no ambient DistCtx, every dist-aware
+dispatch path must be EXACTLY the single-device computation — importing
+``repro.dist`` cannot perturb numerics.  Runs on 1 CPU device."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.dist  # noqa: F401  (the import itself must be side-effect free)
+from repro.configs import get_smoke
+from repro.configs.base import ShapeConfig
+from repro.dist import ctx as dctx
+from repro.dist.ctx import DistCtx
+from repro.dist.sharding import make_plan
+from repro.models import attention as A
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_default_ctx_is_none():
+    assert dctx.get() is None
+
+
+def test_use_nests_and_restores():
+    mesh = jax.make_mesh((1,), ("data",))
+    c1 = DistCtx(mesh=mesh, dp=("data",), tp="data", batch_spec=None)
+    with dctx.use(c1):
+        assert dctx.get() is c1
+        with dctx.use(None):
+            assert dctx.get() is None
+        assert dctx.get() is c1
+    assert dctx.get() is None
+    # exception path restores too
+    with pytest.raises(RuntimeError):
+        with dctx.use(c1):
+            raise RuntimeError()
+    assert dctx.get() is None
+
+
+def test_wsc_and_tp_if_are_identity_without_ctx():
+    x = jnp.ones((4, 8))
+    assert dctx.wsc(x, "b", None) is x
+    assert dctx.tp_if(64) is None
+
+
+def test_train_attention_matches_causal_bitwise():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, 16, 4, 8))
+    k = jax.random.normal(k2, (2, 16, 2, 8))
+    v = jax.random.normal(k3, (2, 16, 2, 8))
+    ref = A.causal_attention(q, k, v, window=0)
+    got = A.train_attention(q, k, v, window=0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_serve_attention_write_matches_dense_bitwise():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, 1, 4, 8))
+    kn = jax.random.normal(k2, (2, 1, 2, 8))
+    vn = jax.random.normal(k3, (2, 1, 2, 8))
+    cache = A.init_cache(2, 8, 2, 8, dtype=jnp.float32)
+    pos = jnp.asarray(0)
+    c2 = A.cache_write(cache, kn, vn, pos)
+    ref = A.decode_attention(q, c2, pos)
+    got, got_cache = A.serve_attention_write(q, kn, vn, cache, pos)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    for a, b in zip(got_cache, c2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "granite-moe-1b-a400m"])
+def test_model_numerics_identical_under_trivial_mesh(arch):
+    """apply/prefill/decode on a 1x1 mesh ctx == the no-ctx path exactly:
+    sharding constraints on one device are layout no-ops."""
+    cfg = get_smoke(arch)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    tok = jax.random.randint(jax.random.fold_in(KEY, 1), (2, 17), 0,
+                             cfg.vocab)
+
+    logits0, _ = m.apply(params, {"tokens": tok})
+    cache0 = m.init_cache(2, 24, dtype=jnp.float32)
+    _, cache0, _ = m.prefill(params, {"tokens": tok[:, :16]}, cache0)
+    dec0, _ = m.decode_step(params, tok[:, 16:17], cache0, jnp.asarray(16))
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = make_plan(cfg, mesh)
+    c = plan.ctx(ShapeConfig("d", 24, 2, "decode"))
+    assert dctx.get() is None
+    with jax.set_mesh(mesh):
+        with dctx.use(c):
+            logits1, _ = m.apply(params, {"tokens": tok})
+            cache1 = m.init_cache(2, 24, dtype=jnp.float32)
+            _, cache1, _ = m.prefill(params, {"tokens": tok[:, :16]}, cache1)
+            dec1, _ = m.decode_step(params, tok[:, 16:17], cache1,
+                                    jnp.asarray(16))
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits0),
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(dec1), np.asarray(dec0),
+                               rtol=0, atol=0)
+
+
+def test_plan_modes_single_device():
+    """On a trivial mesh every arch must pick the no-collective modes."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("qwen2-1.5b", "nemotron-4-340b", "rwkv6-3b"):
+        plan = make_plan(get_smoke(arch), mesh)
+        c = plan.ctx(ShapeConfig("t", 32, 4, "train"))
+        assert c.attn_train_mode == "grouped"
+        assert c.attn_decode_mode == "dense"
+        assert c.tp_size == 1 and c.dp_size == 1

@@ -1,7 +1,10 @@
 """Property tests (hypothesis) for packing, stats quantization, storage."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import qformat
 

@@ -3,7 +3,9 @@ plus numerical-safety properties of the pairwise-decay formulation."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.rwkv6 import _wkv_chunked, _wkv_scan
 
