@@ -1,0 +1,129 @@
+"""Serving benchmark: static cohorts vs continuous batching.
+
+Replays the same mixed-length, uneven-budget workload (the shape that makes
+static batching burn decode steps into the discard buffer) through
+``StaticEngine`` and the continuous ``Engine``, dense and RTN-quantized,
+and reports tokens/sec plus mean/p99 request latency.  Each cell gets one
+untimed warmup pass so jit compilation does not pollute the walls.
+
+    python benchmarks/bench_serving.py [--smoke] [--out BENCH_serving.json]
+
+Emits ``BENCH_serving.json``; CI runs the --smoke invocation on the tiny
+config as a regression tripwire (continuous must beat static on tokens/sec
+for this workload).
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                      # noqa: E402
+import numpy as np              # noqa: E402
+
+from repro.configs import get_smoke                         # noqa: E402
+from repro.configs.base import QuantConfig                  # noqa: E402
+from repro.models import build_model                        # noqa: E402
+from repro.serving.engine import Engine, StaticEngine       # noqa: E402
+from repro.serving.quantized import quantize_params_rtn     # noqa: E402
+
+
+def workload(cfg, n_requests, seed=0):
+    """Mixed prompt lengths + uneven max_tokens: the continuous engine's
+    home turf (a static cohort drains at the slowest member's budget)."""
+    rng = np.random.default_rng(seed)
+    lens = rng.choice([8, 12, 16], size=n_requests)
+    budgets = rng.integers(4, 33, size=n_requests)
+    return [(rng.integers(1, cfg.vocab, size=int(s)).astype(np.int32),
+             int(b)) for s, b in zip(lens, budgets)]
+
+
+def run_workload(eng, reqs):
+    ticks0 = getattr(eng, "ticks", 0)
+    handles = [eng.submit(p, max_tokens=b) for p, b in reqs]
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in handles)
+    lats = sorted(r.finish_wall for r in handles)
+    return {
+        "wall_s": wall,
+        "generated_tokens": toks,
+        "tokens_per_s": toks / wall,
+        "latency_mean_s": float(np.mean(lats)),
+        "latency_p99_s": float(np.quantile(lats, 0.99)),
+        "ticks": getattr(eng, "ticks", 0) - ticks0 or None,
+    }
+
+
+def bench_cell(name, cls, cfg, params, reqs, max_batch, capacity):
+    # warmup and timed pass reuse ONE engine instance: the jit caches live
+    # on the instance's closures, so a fresh engine would recompile every
+    # shape during the timed pass and the walls would measure XLA, not
+    # serving throughput
+    eng = cls(cfg, params, max_batch=max_batch, capacity=capacity)
+    run_workload(eng, reqs)                                 # warmup/compile
+    res = run_workload(eng, reqs)
+    print(f"[bench_serving] {name:28s} {res['tokens_per_s']:8.1f} tok/s  "
+          f"mean {res['latency_mean_s'] * 1e3:7.1f} ms  "
+          f"p99 {res['latency_p99_s'] * 1e3:7.1f} ms")
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="toy-llama")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI cell: fewer requests, no quantized runs")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--wbits", type=int, default=4)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serving.json"))
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    n = 8 if args.smoke else args.requests
+    reqs = workload(cfg, n)
+
+    results = {"arch": cfg.name, "requests": n, "max_batch": args.max_batch,
+               "capacity": args.capacity, "cells": {}}
+    variants = [("dense", params)]
+    if not args.smoke:
+        qp = quantize_params_rtn(
+            params, QuantConfig(wbits=args.wbits, group_size=32))
+        variants.append((f"rtn_w{args.wbits}", qp))
+
+    for vname, p in variants:
+        for ename, cls in (("static", StaticEngine), ("continuous", Engine)):
+            results["cells"][f"{ename}_{vname}"] = bench_cell(
+                f"{ename}/{vname}", cls, cfg, p, reqs,
+                args.max_batch, args.capacity)
+
+    regressed = []
+    for vname, _ in variants:
+        s = results["cells"][f"static_{vname}"]["tokens_per_s"]
+        c = results["cells"][f"continuous_{vname}"]["tokens_per_s"]
+        results["cells"][f"speedup_{vname}"] = c / s
+        print(f"[bench_serving] continuous/{vname} speedup over static: "
+              f"{c / s:.2f}x")
+        if c <= s:
+            regressed.append(vname)
+            print(f"[bench_serving] FAIL: continuous did not beat static "
+                  f"on {vname}")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[bench_serving] wrote {os.path.normpath(args.out)}")
+    if regressed:                     # the CI tripwire: fail the step
+        sys.exit(1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -187,9 +187,13 @@ class ShardingPlan:
 
         def one(node):
             if isinstance(node, KVCache):
-                sp_spec = [None] * (node.slot_pos.ndim - 1)
-                sp_spec += [tp if flash and
-                            self._fits(tp, node.slot_pos.shape[-1]) else None]
+                # slot_pos (stack..., B, cap): batch over dp, cap over tp
+                # when flash (matching the k/v length sharding)
+                sp_spec = [None] * node.slot_pos.ndim
+                if self._fits(b, node.slot_pos.shape[-2]):
+                    sp_spec[-2] = b
+                if flash and self._fits(tp, node.slot_pos.shape[-1]):
+                    sp_spec[-1] = tp
                 return KVCache(kv_like(node.k), kv_like(node.v),
                                NamedSharding(self.mesh, P(*sp_spec)))
             # SSM / RWKV state leaves: head- or channel-shard when aligned

@@ -40,18 +40,25 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
     ``step(params, opt_state, batch) -> (params', opt_state', loss)`` with
     in/out shardings pinned to the plan (callers ``device_put`` committed
     arrays with ``plan.param_shardings`` / ``plan.batch_spec`` so donation
-    can alias buffers).  Loss/grads run in bf16 over fp32 master params.
+    can alias buffers).  Loss/grads run in ``tcfg.compute_dtype`` (bf16 by
+    default) over fp32 master params; ``compute_dtype="float32"`` skips the
+    cast, matching the legacy host loop bit-for-bit on a trivial mesh.
     Returns ``(jitted, abstract_args, ctx)``.
     """
     tcfg = tcfg or TrainConfig()
     model = build_model(cfg)
     ctx = plan.ctx(shape)
     sched = opt.warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
+    # honor the requested dtype exactly (jnp.dtype raises on typos rather
+    # than silently computing in bf16)
+    cast = None if tcfg.compute_dtype == "float32" \
+        else jnp.dtype(tcfg.compute_dtype)
 
     def step(params, opt_state, batch):
         with dctx.use(ctx):
             def loss_fn(p):
-                return model.loss(utils.cast_tree(p, jnp.bfloat16), batch)
+                return model.loss(
+                    utils.cast_tree(p, cast) if cast else p, batch)
             loss, grads = jax.value_and_grad(loss_fn)(params)
             params2, opt2, _ = opt.adamw_update(
                 grads, opt_state, params, lr_sched=sched, b1=tcfg.b1,
@@ -116,8 +123,10 @@ def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
         with dctx.use(ctx):
             return model.decode_step(params, tokens, cache, pos)
 
+    # pos is the (B,) per-row cache clock — batch-sharded like the tokens
     jitted = jax.jit(
         serve_step, donate_argnums=(2,),
         in_shardings=(ps, plan.batch_spec(tok_sds, B),
-                      plan.cache_shardings(cache_sds, ctx), repl))
+                      plan.cache_shardings(cache_sds, ctx),
+                      plan.batch_spec(pos_sds, B)))
     return jitted, (p_sds, tok_sds, cache_sds, pos_sds), ctx

@@ -56,6 +56,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     mem = {a: getattr(mem_obj, a) for a in dir(mem_obj)
            if a.endswith("_in_bytes") and isinstance(getattr(mem_obj, a), int)}
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):            # older jaxlibs: one dict per device
+        cost = cost[0] if cost else {}
     roof = analyze_lowered(lowered, compiled, cfg, shape, mesh)
     rec = {
         "arch": arch, "shape": shape_name,

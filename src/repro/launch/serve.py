@@ -1,10 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [--wbits 2]``.
 
 Builds a (reduced) model, optionally RTN-quantizes it to packed low-bit
-storage, and serves a demo batch of requests through the engine.  With
-``--tp N`` the engine runs under a local (devices/N, N) mesh and a
-``repro.dist`` ShardingPlan, so quantized decode exercises the same
-tensor-parallel layout the production mesh uses.
+storage, and serves a demo batch of requests through the engine
+(continuous-batching slot pool by default; ``--engine static`` runs the
+cohort baseline).  With ``--tp N`` the engine runs under a local
+(devices/N, N) mesh and a ``repro.dist`` ShardingPlan, so quantized decode
+exercises the same tensor-parallel layout the production mesh uses.
 """
 import argparse
 import contextlib
@@ -17,7 +18,7 @@ from repro.configs.base import QuantConfig
 from repro.dist.sharding import make_plan
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, StaticEngine
 from repro.serving.quantized import quantize_params_rtn
 
 
@@ -30,6 +31,10 @@ def main():
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree over local devices")
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "static"],
+                    help="slot-pool continuous batching (default) or the "
+                         "static-cohort baseline")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -48,9 +53,10 @@ def main():
         print(f"[serve] mesh {dict(mesh.shape)} "
               f"(decode mode: {plan.ctx().attn_decode_mode})")
 
+    cls = Engine if args.engine == "continuous" else StaticEngine
     with mesh_ctx:
-        eng = Engine(cfg, params, max_batch=args.requests, capacity=128,
-                     plan=plan)
+        eng = cls(cfg, params, max_batch=args.requests, capacity=128,
+                  plan=plan)
         rng = np.random.default_rng(0)
         rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
                          max_tokens=args.max_tokens)

@@ -33,7 +33,9 @@ def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
     """(tokens, cache, pos) ShapeDtypeStructs for one serve_step.
 
     The cache has capacity seq_len and is prefilled to seq_len-1; the step
-    appends the incoming token and attends over the full window."""
+    appends the incoming token and attends over the full window.  ``pos``
+    is the (B,) per-row cache-clock vector the continuous-batching engine
+    drives (a scalar clock also traces — lockstep fast path)."""
     B, S = shape.global_batch, shape.seq_len
     model = build_model(cfg)
     cache = model.init_cache(B, S, dtype=cache_dtype, abstract=True)
@@ -41,7 +43,7 @@ def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
         tokens = SDS((B, 1, cfg.d_model), act_dtype)  # stub frame embedding
     else:
         tokens = SDS((B, 1), jnp.int32)
-    pos = SDS((), jnp.int32)
+    pos = SDS((B,), jnp.int32)
     return tokens, cache, pos
 
 

@@ -1,8 +1,13 @@
 """Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
 
-Runs the fault-tolerant training loop on the local devices (CPU smoke / a
-real TPU slice — the same code path; the dry-run driver validates the
-production-mesh lowering).  Reduced configs via --smoke.
+Drives the fault-tolerant loop (``train/loop.py``: auto-resume, watchdog)
+with the production step from ``dist.steps.build_train_step``: a host mesh
++ ``ShardingPlan`` lay the params out (FSDP over data axes, TP over the
+model axis) and the step donates its buffers — the same lowering the
+dry-run driver validates for the production mesh.  CPU smoke and a real
+TPU slice are the same code path; ``--grad-compression int8_ef`` falls
+back to the single-host step (error-feedback state is not threaded through
+the dist step).  Reduced configs via --smoke.
 """
 import argparse
 
@@ -10,10 +15,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke
-from repro.configs.base import TrainConfig
+from repro.configs.base import ShapeConfig, TrainConfig
 from repro.data import DataIterator, SyntheticCorpus
 from repro.models import build_model
 from repro.train.loop import train
+
+
+def dist_step_fn(cfg, tcfg: TrainConfig, shape: ShapeConfig, mesh):
+    """Wrap ``build_train_step`` into the loop's step contract.
+
+    Returns ``(step_fn, shard_params)``: the adapter threads the loop's
+    (unused) compression residuals through and reports loss/lr, and
+    ``shard_params`` lays a param tree out per the plan so the donated jit
+    aliases buffers instead of resharding every step."""
+    from repro.dist.sharding import make_plan
+    from repro.dist.steps import build_train_step
+    from repro.train import optimizer as opt
+
+    plan = make_plan(cfg, mesh)
+    step, _, _ = build_train_step(cfg, shape, plan, tcfg)
+    # logging-only mirror of the schedule build_train_step applies
+    # internally (same tcfg -> same curve); the dist step itself reports
+    # only the loss
+    sched = opt.warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
+
+    def step_fn(params, opt_state, residuals, batch):
+        params, opt_state, loss = step(params, opt_state, batch)
+        return params, opt_state, residuals, \
+            {"loss": loss, "lr": sched(opt_state.step)}
+
+    def shard_params(params):
+        return jax.device_put(params, plan.param_shardings(params))
+
+    return step_fn, shard_params
 
 
 def main():
@@ -27,6 +61,10 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8_ef"])
+    ap.add_argument("--compute-dtype", default="bfloat16",
+                    choices=["bfloat16", "float32"])
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree over local devices")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -36,8 +74,20 @@ def main():
     it = DataIterator(corpus, "train", args.batch)
     tcfg = TrainConfig(steps=args.steps, lr=args.lr, ckpt_dir=args.ckpt_dir,
                        ckpt_every=max(args.steps // 4, 1),
-                       grad_compression=args.grad_compression)
-    params, losses = train(m, params, it, tcfg)
+                       grad_compression=args.grad_compression,
+                       compute_dtype=args.compute_dtype)
+
+    if args.grad_compression != "none":
+        # error-feedback residuals only thread through the single-host step
+        params, losses = train(m, params, it, tcfg)
+    else:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.tp)
+        shape = ShapeConfig("train_cli", args.seq, args.batch, "train")
+        with jax.set_mesh(mesh):
+            step_fn, shard = dist_step_fn(cfg, tcfg, shape, mesh)
+            params, losses = train(m, shard(params), it, tcfg,
+                                   step_fn=step_fn)
     print(f"[train] done: first={losses[0]:.4f} last={losses[-1]:.4f}")
 
 

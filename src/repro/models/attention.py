@@ -126,26 +126,52 @@ def causal_attention(q, k, v, *, window: int = 0, q_offset=0,
 class KVCache(NamedTuple):
     k: jnp.ndarray          # (B, Lc, KV, Dh)
     v: jnp.ndarray
-    slot_pos: jnp.ndarray   # (Lc,) absolute position stored in each slot (-1 empty)
+    # (B, Lc) absolute position stored in each slot (-1 empty).  Per-row so
+    # every batch row carries its own cache clock (continuous batching:
+    # rows prefilled at different times decode at independent positions).
+    slot_pos: jnp.ndarray
 
 
 def init_cache(B, capacity, kv_heads, head_dim, dtype=jnp.bfloat16):
     return KVCache(
         k=jnp.zeros((B, capacity, kv_heads, head_dim), dtype),
         v=jnp.zeros((B, capacity, kv_heads, head_dim), dtype),
-        slot_pos=jnp.full((capacity,), -1, jnp.int32))
+        slot_pos=jnp.full((B, capacity), -1, jnp.int32))
+
+
+def _pos_rows(pos, B):
+    """Normalize ``pos`` (scalar or (B,)) to a (B,) int32 row-clock vector."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos.astype(jnp.int32), (B,))
+    return pos.astype(jnp.int32)
 
 
 def cache_write(cache: KVCache, k_new, v_new, pos):
-    """Append KV for one token at absolute position ``pos`` (ring buffer)."""
+    """Append KV for one token per row at absolute position ``pos``.
+
+    ``pos`` is a scalar (all rows share one clock — the lockstep fast path:
+    a single dynamic-update-slice, no scatter) or a (B,) vector (per-row
+    clocks: each row writes its own ring slot)."""
     cap = cache.k.shape[1]
-    slot = pos % cap
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
-    sp = jax.lax.dynamic_update_slice_in_dim(
-        cache.slot_pos, pos[None].astype(jnp.int32), slot, axis=0)
+    B = cache.k.shape[0]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        slot = pos % cap
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+        sp = jax.lax.dynamic_update_slice_in_dim(
+            cache.slot_pos,
+            jnp.broadcast_to(pos.astype(jnp.int32), (B, 1)), slot, axis=1)
+        return KVCache(k, v, sp)
+    posr = _pos_rows(pos, B)
+    slot = posr % cap                                 # (B,) per-row slots
+    rows = jnp.arange(B)
+    k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    sp = cache.slot_pos.at[rows, slot].set(posr)
     return KVCache(k, v, sp)
 
 
@@ -153,13 +179,15 @@ def cache_prefill(cache: KVCache, k_all, v_all, start=0):
     """Bulk-write S tokens (positions start..start+S-1); S <= capacity."""
     S = k_all.shape[1]
     cap = cache.k.shape[1]
+    B = cache.k.shape[0]
     k = jax.lax.dynamic_update_slice_in_dim(
         cache.k, k_all.astype(cache.k.dtype), start % cap, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(
         cache.v, v_all.astype(cache.v.dtype), start % cap, axis=1)
     sp = jax.lax.dynamic_update_slice_in_dim(
-        cache.slot_pos, (start + jnp.arange(S)).astype(jnp.int32),
-        start % cap, axis=0)
+        cache.slot_pos,
+        jnp.broadcast_to((start + jnp.arange(S)).astype(jnp.int32), (B, S)),
+        start % cap, axis=1)
     return KVCache(k, v, sp)
 
 
@@ -170,14 +198,16 @@ def _decode_scores(q, cache: KVCache, pos, window):
     qg = (q[:, 0] * Dh ** -0.5).reshape(B, KV, rep, Dh)
     s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
                    cache.k.astype(jnp.float32))
-    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos)
+    posr = _pos_rows(pos, B)[:, None]                 # (B,1) row clocks
+    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= posr)
     if window:
-        valid &= (pos - cache.slot_pos) < window
-    return jnp.where(valid[None, None, None], s, NEG_INF)
+        valid &= (posr - cache.slot_pos) < window
+    return jnp.where(valid[:, None, None], s, NEG_INF)
 
 
 def decode_attention(q, cache: KVCache, pos, window: int = 0):
-    """Dense decode: q (B,1,H,Dh) against the full cache -> (B,1,H,Dh)."""
+    """Dense decode: q (B,1,H,Dh) against the full cache -> (B,1,H,Dh).
+    ``pos`` is a scalar clock or a (B,) per-row clock vector."""
     B, _, H, Dh = q.shape
     s = _decode_scores(q, cache, pos, window)
     p = jax.nn.softmax(s, axis=-1)
@@ -255,8 +285,11 @@ def serve_attention_write(q, k_new, v_new, cache: KVCache, pos, *,
                           window: int = 0):
     """Mode-dispatched decode attention WITH the cache append fused in.
 
+    ``pos`` is the per-batch cache clock: a scalar (lockstep decode) or a
+    (B,) vector (continuous batching — every row at its own position).
+
     dense : KV heads divide tp -> cache sharded on KV heads, plain softmax;
-            the append is a (local) dynamic-update-slice.
+            the append is a (local) dynamic-update-slice / row scatter.
     flash : KV-length-parallel (flash-decoding): cache sharded on the length
             dim over tp; the owning shard appends locally inside the
             shard_map (keeps the update in-place — a GSPMD-level DUS on the
@@ -274,25 +307,25 @@ def serve_attention_write(q, k_new, v_new, cache: KVCache, pos, *,
         return decode_attention(q, cache, pos, window), cache
     B = q.shape[0]
     bspec = c.batch_spec if B % c.dp_size == 0 else None
+    posv = _pos_rows(pos, B)                          # (B,) row clocks
 
     def local(ql, knl, vnl, kl, vl, spl, posl):
-        cap_l = kl.shape[1]
+        Bl, cap_l = spl.shape
         cap_total = cap_l * c.tp_size
-        slot = posl % cap_total
+        slot = posl % cap_total                       # (Bl,)
         my = jax.lax.axis_index(c.tp)
         start = my * cap_l
         mine = (slot >= start) & (slot < start + cap_l)
-        off = jnp.clip(slot - start, 0, cap_l - 1)
-        cur_k = jax.lax.dynamic_slice_in_dim(kl, off, 1, axis=1)
-        cur_v = jax.lax.dynamic_slice_in_dim(vl, off, 1, axis=1)
-        kl = jax.lax.dynamic_update_slice_in_dim(
-            kl, jnp.where(mine, knl.astype(kl.dtype), cur_k), off, axis=1)
-        vl = jax.lax.dynamic_update_slice_in_dim(
-            vl, jnp.where(mine, vnl.astype(vl.dtype), cur_v), off, axis=1)
-        cur_sp = jax.lax.dynamic_slice_in_dim(spl, off, 1, axis=0)
-        spl = jax.lax.dynamic_update_slice_in_dim(
-            spl, jnp.where(mine, posl[None].astype(jnp.int32), cur_sp),
-            off, axis=0)
+        off = jnp.clip(slot - start, 0, cap_l - 1)    # (Bl,)
+        rows = jnp.arange(Bl)
+        kl = kl.at[rows, off].set(
+            jnp.where(mine[:, None, None], knl[:, 0].astype(kl.dtype),
+                      kl[rows, off]))
+        vl = vl.at[rows, off].set(
+            jnp.where(mine[:, None, None], vnl[:, 0].astype(vl.dtype),
+                      vl[rows, off]))
+        spl = spl.at[rows, off].set(
+            jnp.where(mine, posl.astype(jnp.int32), spl[rows, off]))
         o, m, l = decode_attention_partial(
             ql, KVCache(kl, vl, spl), posl, window)
         M = jax.lax.pmax(m, c.tp)
@@ -307,9 +340,9 @@ def serve_attention_write(q, k_new, v_new, cache: KVCache, pos, *,
         in_specs=(P(bspec, None, None, None),
                   P(bspec, None, None, None), P(bspec, None, None, None),
                   P(bspec, c.tp, None, None), P(bspec, c.tp, None, None),
-                  P(c.tp), P()),
+                  P(bspec, c.tp), P(bspec)),
         out_specs=(P(bspec, None, None, None),
                    P(bspec, c.tp, None, None), P(bspec, c.tp, None, None),
-                   P(c.tp)))(
-        q, k_new, v_new, cache.k, cache.v, cache.slot_pos, pos)
+                   P(bspec, c.tp)))(
+        q, k_new, v_new, cache.k, cache.v, cache.slot_pos, posv)
     return o, KVCache(kk, vv, sp)

@@ -396,8 +396,9 @@ class Model:
             return jnp.zeros(shape, dt)
 
         def kv(n, cap):
-            sp = jnp.full((n, cap), -1, jnp.int32) if not abstract else \
-                jax.ShapeDtypeStruct((n, cap), jnp.int32)
+            # slot_pos carries a per-row cache clock (see attention.KVCache)
+            sp = jnp.full((n, B, cap), -1, jnp.int32) if not abstract else \
+                jax.ShapeDtypeStruct((n, B, cap), jnp.int32)
             return A.KVCache(mk(n, B, cap, cfg.n_kv_heads, hd),
                              mk(n, B, cap, cfg.n_kv_heads, hd), sp)
 
@@ -426,8 +427,9 @@ class Model:
             ge = cfg.global_every
             ng, tail = cfg.n_layers // ge, cfg.n_layers % ge
             wcap = min(capacity, cfg.local_window)
-            lsp = jnp.full((ng, ge - 1, wcap), -1, jnp.int32) if not abstract \
-                else jax.ShapeDtypeStruct((ng, ge - 1, wcap), jnp.int32)
+            lsp = jnp.full((ng, ge - 1, B, wcap), -1, jnp.int32) \
+                if not abstract \
+                else jax.ShapeDtypeStruct((ng, ge - 1, B, wcap), jnp.int32)
             out = {"local": A.KVCache(
                 mk(ng, ge - 1, B, wcap, cfg.n_kv_heads, hd),
                 mk(ng, ge - 1, B, wcap, cfg.n_kv_heads, hd), lsp),
@@ -442,7 +444,9 @@ class Model:
         """One serving step: tokens (B,1) -> (logits (B,1,V), new cache).
 
         ``pos`` is the absolute position of the incoming token (cache holds
-        positions < pos)."""
+        positions < pos) — a scalar when the whole batch decodes in lockstep,
+        or a (B,) vector clock when every row runs at its own position
+        (continuous batching)."""
         cfg = self.cfg
         if cfg.family == "audio":
             # frames arrive as embeddings even in decode (stub frontend)
@@ -451,7 +455,9 @@ class Model:
         else:
             x = L.embed(params["embed"], tokens)
         B = x.shape[0]
-        positions = jnp.broadcast_to(pos, (B, 1))
+        pos_arr = jnp.asarray(pos)
+        positions = jnp.broadcast_to(pos_arr, (B, 1)) if pos_arr.ndim == 0 \
+            else pos_arr[:, None]                      # (B,1) row clocks
         if cfg.pos == "sinusoidal":
             x = x + L.sinusoidal(positions, cfg.d_model, x.dtype)
 
@@ -569,7 +575,7 @@ class Model:
             kv2 = A.KVCache(
                 kvc.k.at[:, slots].set(k[:, -n:].astype(kvc.k.dtype)),
                 kvc.v.at[:, slots].set(v[:, -n:].astype(kvc.v.dtype)),
-                kvc.slot_pos.at[slots].set(parr))
+                kvc.slot_pos.at[:, slots].set(parr[None]))
             o = A.train_attention(q, k, v, window=w)
             xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1))
             h = L.norm(lp["ln2"], xc)

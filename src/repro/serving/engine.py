@@ -1,19 +1,30 @@
-"""Batched serving engine: static batching with bulk prefill + lockstep decode.
+"""Batched serving engines: continuous batching (default) + static cohorts.
 
-Requests are grouped into cohorts of equal prompt length (padding-free),
-prefilled in one jit'd bulk pass, then decoded in lockstep — one jit'd
-decode_step advances the whole batch per tick; finished slots keep decoding
-into a discard buffer until the cohort drains (the standard static-batching
-serving pattern; per-slot-position continuous batching needs per-row cache
-clocks and is noted as future work in DESIGN.md).
+``Engine`` is a vLLM-style slot-pool scheduler built on the per-row cache
+clocks in ``models/attention.py``: the KV cache is one persistent batched
+allocation with ``max_batch`` slots, each slot running at its own absolute
+position (``pos`` is a (B,) vector through the jit'd decode step).  New
+requests are admitted into free slots mid-flight — a B=1 jit'd prefill
+fills a fresh cache row which is scattered into the slot's row of the
+batched cache — and slots retire independently on EOS / token budget, so a
+finished request never burns decode steps into a discard buffer and the
+next queued request takes its slot on the same tick.  Sampling (argmax +
+per-slot-temperature categorical) runs inside the jit'd decode step; the
+scheduler syncs exactly one (B,) token vector per tick instead of issuing
+a per-request ``int(argmax)`` host round-trip.
 
-Works with dense or OAC-quantized params for every assigned architecture.
-Pass a ``repro.dist`` ShardingPlan to run prefill/decode under a mesh
-(tensor-parallel serving); without one the engine is single-device.
+``StaticEngine`` keeps the old equal-length-cohort lockstep scheduler as
+the comparison baseline (``benchmarks/bench_serving.py`` measures both).
+
+Both engines work with dense or OAC-quantized params for every assigned
+architecture.  Pass a ``repro.dist`` ShardingPlan to run prefill/decode
+under a mesh (tensor-parallel serving); without one the engine is
+single-device.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict
 from typing import Dict, List, Optional
 
@@ -33,9 +44,43 @@ class Request:
     eos: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # scheduler telemetry (continuous engine): tick of admission/retirement
+    # and wall-clock completion offset from run() start (benchmarks).
+    admit_tick: int = -1
+    finish_tick: int = -1
+    finish_wall: float = 0.0
 
 
-class Engine:
+def cache_batch_axes(model, capacity):
+    """Per-leaf batch-axis indices for ``model``'s cache pytree, found
+    structurally: the one axis whose size changes between init_cache(B=2)
+    and init_cache(B=3).  This is what lets any architecture's cache (KV
+    stacks, SSM/RWKV states, per-row slot clocks) scatter/gather batch
+    rows through one code path."""
+    s2 = model.init_cache(2, capacity, abstract=True)
+    s3 = model.init_cache(3, capacity, abstract=True)
+    return [next(i for i, (a, b) in enumerate(zip(x.shape, y.shape))
+                 if a != b)
+            for x, y in zip(jax.tree.leaves(s2), jax.tree.leaves(s3))]
+
+
+def _sample_tokens(logits, temps, key):
+    """Batched on-device sampling: logits (B,V), temps (B,) -> (B,) int32.
+
+    temp == 0 rows take the argmax (bit-identical to the host-side
+    ``int(jnp.argmax(...))`` the static engine historically did); temp > 0
+    rows draw from categorical(logits / temp) with a per-row key."""
+    B = logits.shape[0]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = jax.random.split(key, B)
+    safe_t = jnp.maximum(temps, 1e-6)[:, None]
+    drawn = jax.vmap(jax.random.categorical)(keys, logits / safe_t)
+    return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
+
+
+class _EngineBase:
+    """Shared queue/jit plumbing for both schedulers."""
+
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  capacity: int = 512, seed: int = 0, plan=None):
         self.cfg = cfg
@@ -50,11 +95,10 @@ class Engine:
         if plan is not None:
             from repro.configs.base import ShapeConfig
             c = plan.ctx(ShapeConfig("serve", capacity, max_batch, "decode"))
-            # cohorts may come up smaller than max_batch, so keep the batch
-            # replicated: only the params/cache layouts (tp) are pinned here
+            # admission batches can be smaller than max_batch, so keep the
+            # batch replicated: only the params/cache layouts (tp) are pinned
             self.ctx = dataclasses.replace(c, batch_spec=None)
             self.params = jax.device_put(params, plan.param_shardings(params))
-        self._decode = jax.jit(self._with_ctx(self.model.decode_step))
         self._prefill = jax.jit(self._with_ctx(self.model.prefill))
         self._next_rid = 0
 
@@ -69,10 +113,167 @@ class Engine:
         return wrapped
 
     def submit(self, prompt, **kw) -> Request:
-        r = Request(self._next_rid, np.asarray(prompt, np.int32), **kw)
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) >= self.capacity - 1:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens does not fit the "
+                f"capacity-{self.capacity} cache with room to decode")
+        r = Request(self._next_rid, prompt, **kw)
         self._next_rid += 1
         self.queue.append(r)
         return r
+
+
+class Engine(_EngineBase):
+    """Continuous-batching slot-pool scheduler (see module docstring).
+
+    Slot state lives on the host (numpy vectors indexed by slot id); the
+    batched cache and the per-row clock vector live on device.  One tick =
+    one jit'd decode step over all ``max_batch`` rows; rows whose slot is
+    free still flow through the math (their output is discarded and their
+    clock does not advance) — with a persistent batched cache this is the
+    standard padded-slot trade: the decode step stays one compiled
+    executable for the engine's lifetime.
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 capacity: int = 512, seed: int = 0, plan=None):
+        super().__init__(cfg, params, max_batch=max_batch, capacity=capacity,
+                         seed=seed, plan=plan)
+        B = max_batch
+        self._slots: List[Optional[Request]] = [None] * B
+        self._pos = np.zeros(B, np.int32)        # per-slot cache clock
+        self._temps = np.zeros(B, np.float32)
+        self._next_tok = np.zeros(B, np.int32)   # token each slot feeds next
+        self.ticks = 0
+        self._cache = self.model.init_cache(B, capacity, dtype=jnp.float32)
+        cache_sh = None
+        if plan is not None:
+            # pin the persistent cache to the plan's layout so per-slot
+            # insertion updates in place instead of bouncing the whole
+            # cache between layouts every admission
+            cache_sh = plan.cache_shardings(
+                self.model.init_cache(B, capacity, abstract=True), self.ctx)
+            self._cache = jax.device_put(self._cache, cache_sh)
+        self._insert = self._make_insert(cache_sh)
+        # the cache is donated through every step so the persistent batched
+        # allocation updates in place instead of being copied per tick
+        # (same contract as dist.steps.build_step's decode cell)
+        self._decode = jax.jit(self._make_decode(), donate_argnums=(2,))
+        self._first = jax.jit(_sample_tokens)
+
+    # ------------------------------------------------------------- jit fns
+    def _make_decode(self):
+        model, with_ctx = self.model, self._with_ctx
+
+        def step(params, tokens, cache, pos, temps, key):
+            logits, cache = with_ctx(model.decode_step)(
+                params, tokens, cache, pos)
+            tok = _sample_tokens(logits[:, 0], temps, key)
+            return tok, cache
+        return step
+
+    def _make_insert(self, cache_sh=None):
+        """jit'd per-slot cache insertion: scatter a B=1 cache row into the
+        batched cache at a (traced) slot index, along each leaf's
+        structurally-found batch axis (``cache_batch_axes``)."""
+        axes = cache_batch_axes(self.model, self.capacity)
+
+        def insert(big, row, slot):
+            flat, td = jax.tree.flatten(big)
+            rows = jax.tree.leaves(row)
+            out = [jax.lax.dynamic_update_slice_in_dim(
+                b, r.astype(b.dtype), slot, axis=ax)
+                for b, r, ax in zip(flat, rows, axes)]
+            return jax.tree.unflatten(td, out)
+        if cache_sh is None:
+            return jax.jit(insert, donate_argnums=(0,))
+        return jax.jit(insert, donate_argnums=(0,), out_shardings=cache_sh)
+
+    # ----------------------------------------------------------- scheduler
+    def _free_slots(self):
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _retire(self, i: int):
+        r = self._slots[i]
+        r.done = True
+        r.finish_tick = self.ticks
+        r.finish_wall = time.perf_counter() - self._t0
+        self.finished[r.rid] = r
+        self._slots[i] = None
+
+    def _finished_by(self, r: Request, tok: int, pos: int) -> bool:
+        return (r.eos is not None and tok == r.eos) or \
+            len(r.out) >= r.max_tokens or pos >= self.capacity - 1
+
+    def _admit(self):
+        """Fill free slots from the queue (FIFO): B=1 prefill, scatter the
+        row into the batched cache, sample the first token on device."""
+        for i in self._free_slots():
+            if not self.queue:
+                return
+            r = self.queue.pop(0)
+            S = len(r.prompt)
+            row = self.model.init_cache(1, self.capacity, dtype=jnp.float32)
+            logits, row, _ = self._prefill(
+                self.params, {"tokens": jnp.asarray(r.prompt[None])}, row)
+            self._cache = self._insert(self._cache, row, i)
+            self.key, sub = jax.random.split(self.key)
+            t = int(self._first(logits[:, 0],
+                                jnp.full((1,), r.temperature, jnp.float32),
+                                sub)[0])
+            r.out.append(t)
+            r.admit_tick = self.ticks
+            if self._finished_by(r, t, S):
+                self._slots[i] = r
+                self._retire(i)
+                continue
+            self._slots[i] = r
+            self._pos[i] = S
+            self._temps[i] = r.temperature
+            self._next_tok[i] = t
+
+    def _tick(self):
+        """One lockstep device step for every slot; one host sync."""
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return
+        self.key, sub = jax.random.split(self.key)
+        toks, self._cache = self._decode(
+            self.params, jnp.asarray(self._next_tok[:, None]), self._cache,
+            jnp.asarray(self._pos), jnp.asarray(self._temps), sub)
+        toks = np.asarray(toks)                  # the tick's single sync
+        self.ticks += 1
+        for i in active:
+            r = self._slots[i]
+            t = int(toks[i])
+            r.out.append(t)
+            self._pos[i] += 1
+            self._next_tok[i] = t
+            if self._finished_by(r, t, int(self._pos[i])):
+                self._retire(i)
+
+    def run(self):
+        self._t0 = time.perf_counter()
+        while self.queue or any(s is not None for s in self._slots):
+            self._admit()
+            self._tick()
+        return self
+
+
+class StaticEngine(_EngineBase):
+    """Static batching: equal-length cohorts, bulk prefill, lockstep decode.
+
+    One jit'd decode_step advances the whole cohort per tick; finished slots
+    keep decoding into a discard buffer until the cohort drains, and queued
+    requests wait for the next cohort.  Kept as the baseline the continuous
+    engine is measured against (and stays bit-identical to, for greedy)."""
+
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 capacity: int = 512, seed: int = 0, plan=None):
+        super().__init__(cfg, params, max_batch=max_batch, capacity=capacity,
+                         seed=seed, plan=plan)
+        self._decode = jax.jit(self._with_ctx(self.model.decode_step))
 
     def _next_cohort(self) -> List[Request]:
         by_len = defaultdict(list)
@@ -116,11 +317,14 @@ class Engine:
                                      cache, jnp.asarray(pos))
             logits = lg[:, 0]
             pos += 1
+        now = time.perf_counter() - self._t0
         for r in cohort:
             r.done = True
+            r.finish_wall = now
             self.finished[r.rid] = r
 
     def run(self):
+        self._t0 = time.perf_counter()
         while self.queue:
             self._run_cohort(self._next_cohort())
         return self

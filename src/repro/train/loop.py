@@ -48,10 +48,16 @@ def make_train_step(model, tcfg: TrainConfig, total_steps: int):
 
 
 def train(model, params, data_it: DataIterator, tcfg: TrainConfig, *,
+          step_fn: Optional[Callable] = None,
           log: Callable = print, log_every: int = 20,
           fault_injector: Optional[Callable] = None,
           straggler_factor: float = 3.0):
-    """Run tcfg.steps steps, resuming from tcfg.ckpt_dir if present."""
+    """Run tcfg.steps steps, resuming from tcfg.ckpt_dir if present.
+
+    ``step_fn(params, opt_state, residuals, batch) -> (params, opt_state,
+    residuals, info)`` overrides the default jit'd step — the production
+    path wraps ``repro.dist.steps.build_train_step`` (plan-sharded, donated
+    buffers) this way; the default remains the single-host step."""
     opt_state = opt.adamw_init(params)
     residuals = comp.init_residuals(params) \
         if tcfg.grad_compression == "int8_ef" else ()
@@ -67,7 +73,8 @@ def train(model, params, data_it: DataIterator, tcfg: TrainConfig, *,
         data_it.restore(meta["extra"]["data"])
         log(f"[train] resumed from step {start}")
 
-    step_fn = make_train_step(model, tcfg, tcfg.steps)
+    if step_fn is None:
+        step_fn = make_train_step(model, tcfg, tcfg.steps)
     durations = []
     losses = []
     for s in range(start, tcfg.steps):

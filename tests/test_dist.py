@@ -112,6 +112,45 @@ def test_flash_decode_matches_dense():
     assert "FLASHDIFF" in out
 
 
+def test_flash_decode_vector_clock_matches_dense():
+    """Per-row (B,) cache clocks through the KV-length-sharded flash decode
+    path must match the dense per-row reference (TP continuous serving)."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist import ctx as dctx
+        from repro.dist.ctx import DistCtx
+        from repro.models import attention as A
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, cap, KV, H, Dh = 4, 16, 2, 4, 8
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(k1, (B, 1, H, Dh))
+        kn = jax.random.normal(k2, (B, 1, KV, Dh))
+        vn = jax.random.normal(k3, (B, 1, KV, Dh))
+        cache = A.init_cache(B, cap, KV, Dh, dtype=jnp.float32)
+        kall = jax.random.normal(k4, (B, 6, KV, Dh))
+        cache = A.cache_prefill(cache, kall, kall)
+        pos = jnp.asarray([6, 3, 5, 2])          # per-row clocks
+
+        c2 = A.cache_write(cache, kn, vn, pos)
+        ref = A.decode_attention(q, c2, pos)
+
+        ctx = DistCtx(mesh=mesh, dp=("data",), tp="model", batch_spec=None,
+                      attn_decode_mode="flash")
+        with jax.set_mesh(mesh):
+            with dctx.use(ctx):
+                got, got_cache = jax.jit(
+                    lambda *a: A.serve_attention_write(*a))(
+                    q, kn, vn, cache, pos)
+        err = float(jnp.abs(got - ref).max())
+        for a, b in zip(got_cache, c2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("FLASHVEC", err)
+        assert err < 1e-5, err
+    """)
+    assert "FLASHVEC" in out
+
+
 def test_seq_shard_attention_matches_local():
     out = run_with_devices("""
         import dataclasses, jax, jax.numpy as jnp

@@ -1,0 +1,197 @@
+"""Continuous-batching engine: per-row cache clocks, slot-pool scheduling.
+
+Covers the vector-clock cache contract at the attention level (per-row
+validity masks), bit-identity of the continuous engine against the static
+cohort baseline on mixed-length workloads, mid-flight admission into freed
+slots, on-device sampling, and the dist train-step port's loss parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import build_model
+from repro.serving.engine import Engine, StaticEngine
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------- per-row clock, unit level
+def test_cache_write_vector_pos_matches_per_row_scalar():
+    """A (B,) vector-clock write == B independent scalar-clock writes."""
+    k1, k2 = jax.random.split(KEY)
+    kn = jax.random.normal(k1, (3, 1, 2, 8))
+    vn = jax.random.normal(k2, (3, 1, 2, 8))
+    pos = jnp.asarray([5, 2, 7])
+    cache = A.init_cache(3, 8, 2, 8, dtype=jnp.float32)
+    got = A.cache_write(cache, kn, vn, pos)
+    for b in range(3):
+        row = A.init_cache(1, 8, 2, 8, dtype=jnp.float32)
+        row = A.cache_write(row, kn[b:b + 1], vn[b:b + 1],
+                            jnp.asarray(int(pos[b])))
+        for g, r in zip(got, row):
+            np.testing.assert_array_equal(np.asarray(g[b:b + 1]),
+                                          np.asarray(r))
+
+
+def test_decode_scores_mask_per_row():
+    """Rows at different clocks mask different cache suffixes: a slot
+    holding position p is valid for row b iff p <= pos[b]."""
+    cap = 8
+    cache = A.init_cache(2, cap, 2, 8, dtype=jnp.float32)
+    k_all = jax.random.normal(KEY, (2, 6, 2, 8))
+    cache = A.cache_prefill(cache, k_all, k_all)        # positions 0..5
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 1, 4, 8))
+    s = A._decode_scores(q, cache, jnp.asarray([5, 2]), window=0)
+    s = np.asarray(s)                                    # (B, KV, rep, cap)
+    assert (s[0, ..., :6] > A.NEG_INF / 2).all()         # row 0 sees 0..5
+    assert (s[1, ..., :3] > A.NEG_INF / 2).all()         # row 1 sees 0..2
+    assert (s[1, ..., 3:6] <= A.NEG_INF / 2).all()       # ..but not 3..5
+    assert (s[:, ..., 6:] <= A.NEG_INF / 2).all()        # empty slots masked
+
+
+def test_decode_step_vector_pos_matches_scalar_rows():
+    """decode_step under a (B,) clock == each row decoded alone at its own
+    scalar clock (the lockstep fast path and the vector path agree)."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    tok = jax.random.randint(jax.random.fold_in(KEY, 2), (2, 12), 0,
+                             CFG.vocab)
+    lens = [10, 6]
+    rows = []
+    for b, S in enumerate(lens):
+        rc = m.init_cache(1, 16, dtype=jnp.float32)
+        _, rc, _ = m.prefill(params, {"tokens": tok[b:b + 1, :S]}, rc)
+        rows.append(rc)
+    # merge the two prefilled rows into one batched cache along the batch
+    # axis of each leaf, via the engine's own structural discovery
+    from repro.serving.engine import cache_batch_axes
+    flat_r0 = jax.tree.leaves(rows[0])
+    flat_r1 = jax.tree.leaves(rows[1])
+    axes = cache_batch_axes(m, 16)
+    merged = [jnp.concatenate([jnp.take(r0, jnp.asarray([0]), axis=ax),
+                               jnp.take(r1, jnp.asarray([0]), axis=ax)],
+                              axis=ax)
+              for r0, r1, ax in zip(flat_r0, flat_r1, axes)]
+    cache = jax.tree.unflatten(jax.tree.structure(rows[0]), merged)
+
+    nxt = jnp.asarray([[3], [9]], jnp.int32)
+    lg_vec, _ = m.decode_step(params, nxt, cache,
+                              jnp.asarray(lens, jnp.int32))
+    for b, S in enumerate(lens):
+        lg_ref, _ = m.decode_step(params, nxt[b:b + 1], rows[b],
+                                  jnp.asarray(S))
+        np.testing.assert_array_equal(np.asarray(lg_vec[b:b + 1]),
+                                      np.asarray(lg_ref))
+
+
+# --------------------------------------------------------- engine vs static
+def _mixed_workload(eng, n=5):
+    prompts = [np.arange(1, 9), np.arange(3, 15), np.arange(1, 9),
+               np.arange(2, 7), np.arange(4, 12)][:n]
+    budgets = [5, 3, 7, 4, 6][:n]
+    return [eng.submit(p, max_tokens=mt) for p, mt in zip(prompts, budgets)]
+
+
+def test_continuous_matches_static_greedy_bitwise():
+    """Greedy outputs bit-identical to the static-cohort engine on a
+    mixed-prompt-length, uneven-budget workload."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    ec = Engine(CFG, params, max_batch=2, capacity=48)
+    es = StaticEngine(CFG, params, max_batch=2, capacity=48)
+    rc, rs = _mixed_workload(ec), _mixed_workload(es)
+    ec.run()
+    es.run()
+    for a, b in zip(rc, rs):
+        assert a.done and b.done
+        assert a.out == b.out, (a.rid, a.out, b.out)
+
+
+def test_mid_flight_admission_reuses_freed_slot():
+    """With 2 slots and 5 requests, later requests must be admitted on
+    ticks > 0 (a retirement freed their slot mid-flight) — not in cohort
+    waves — and every request still completes with its full budget."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    eng = Engine(CFG, params, max_batch=2, capacity=48)
+    rs = _mixed_workload(eng)
+    eng.run()
+    assert all(r.done for r in rs)
+    admits = [r.admit_tick for r in rs]
+    assert admits[0] == 0 and admits[1] == 0        # initial fill
+    assert all(t > 0 for t in admits[2:]), admits   # admitted mid-flight
+    # engine never burned a tick decoding a fully-retired pool
+    assert all(len(r.out) == min(r.max_tokens, 64) for r in rs)
+    # fewer ticks than the static engine's cohort-drain schedule would take:
+    # total decode work is sum(out)-n first tokens spread over 2 slots
+    assert eng.ticks <= sum(len(r.out) for r in rs)
+
+
+def test_sampling_on_device_per_slot_temps():
+    """Mixed greedy / temperature slots: sampling happens in the jit'd
+    decode step, outputs stay in-vocab, and greedy rows are unaffected by
+    hot rows sharing the batch."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    eng = Engine(CFG, params, max_batch=2, capacity=48, seed=3)
+    g = eng.submit(np.arange(1, 9), max_tokens=5)
+    h = eng.submit(np.arange(1, 9), max_tokens=5, temperature=1.2)
+    eng.run()
+    ref = Engine(CFG, params, max_batch=2, capacity=48)
+    g2 = ref.submit(np.arange(1, 9), max_tokens=5)
+    ref.run()
+    assert g.out == g2.out                          # greedy row undisturbed
+    assert all(0 <= t < CFG.vocab for t in h.out)
+    assert len(h.out) == 5
+
+
+def test_eos_retires_slot():
+    m = build_model(CFG)
+    params = m.init(KEY)
+    probe = Engine(CFG, params, max_batch=1, capacity=48)
+    r0 = probe.submit(np.arange(1, 9), max_tokens=8)
+    probe.run()
+    eos = r0.out[2]                                  # force a known EOS hit
+    eng = Engine(CFG, params, max_batch=1, capacity=48)
+    r = eng.submit(np.arange(1, 9), max_tokens=8, eos=eos)
+    eng.run()
+    stop = r0.out.index(eos) + 1                     # first occurrence wins
+    assert r.out == r0.out[:stop]                    # stopped at the EOS
+
+
+# --------------------------------------------------------- train-step port
+def test_dist_train_step_port_loss_parity(tmp_path):
+    """launch/train's build_train_step path == the legacy single-host loop
+    on the smoke config (float32 compute, trivial mesh)."""
+    from repro.configs import get_smoke
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.data import DataIterator, SyntheticCorpus
+    from repro.launch.train import dist_step_fn
+    from repro.train.loop import train
+
+    cfg = get_smoke("toy-llama")
+    m = build_model(cfg)
+
+    def tcfg(d):
+        return TrainConfig(steps=3, lr=1e-3, ckpt_dir=str(d), ckpt_every=100,
+                           compute_dtype="float32")
+
+    def data():
+        return DataIterator(
+            SyntheticCorpus(vocab=cfg.vocab, seq_len=32, seed=7), "train", 4)
+
+    params = m.init(KEY)
+    _, legacy = train(m, params, data(), tcfg(tmp_path / "a"),
+                      log=lambda *a: None)
+    params = m.init(KEY)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with jax.set_mesh(mesh):
+        step_fn, shard = dist_step_fn(cfg, tcfg(tmp_path / "b"),
+                                      ShapeConfig("t", 32, 4, "train"), mesh)
+        _, ported = train(m, shard(params), data(), tcfg(tmp_path / "b"),
+                          step_fn=step_fn, log=lambda *a: None)
+    np.testing.assert_allclose(legacy, ported, rtol=0, atol=1e-5)
