@@ -1,16 +1,25 @@
-"""Serving benchmark: static cohorts vs continuous batching.
+"""Serving benchmark: static cohorts vs continuous batching vs paged KV.
 
-Replays the same mixed-length, uneven-budget workload (the shape that makes
-static batching burn decode steps into the discard buffer) through
-``StaticEngine`` and the continuous ``Engine``, dense and RTN-quantized,
-and reports tokens/sec plus mean/p99 request latency.  Each cell gets one
-untimed warmup pass so jit compilation does not pollute the walls.
+Replays two workloads through the engines:
+
+  * uniform: mixed prompt lengths + uneven budgets (the shape that makes
+    static batching burn decode steps into the discard buffer) — run
+    through ``StaticEngine``, continuous ``Engine``, and ``PagedEngine``,
+    dense and RTN-quantized.  The paged engine must not regress below the
+    continuous-dense engine here (CI tripwire): block tables buy memory,
+    not throughput, and must not cost throughput either.
+  * shared_prefix: every request carries the same system prompt (the
+    dominant million-user traffic shape) — continuous vs paged, reporting
+    tokens/sec, KV bytes per request, and prefill tokens skipped by
+    prefix sharing (CI tripwire: >= 30% of prefill tokens skipped).
+
+Each cell gets one untimed warmup pass so jit compilation does not pollute
+the walls.
 
     python benchmarks/bench_serving.py [--smoke] [--out BENCH_serving.json]
 
 Emits ``BENCH_serving.json``; CI runs the --smoke invocation on the tiny
-config as a regression tripwire (continuous must beat static on tokens/sec
-for this workload).
+config as a regression tripwire.
 """
 import argparse
 import json
@@ -21,13 +30,24 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
 
 from repro.configs import get_smoke                         # noqa: E402
 from repro.configs.base import QuantConfig                  # noqa: E402
 from repro.models import build_model                        # noqa: E402
-from repro.serving.engine import Engine, StaticEngine       # noqa: E402
+from repro.models.attention import KVCache, PagedKVCache    # noqa: E402
+from repro.serving.engine import (Engine, PagedEngine,      # noqa: E402
+                                  StaticEngine, _cache_nodes)
 from repro.serving.quantized import quantize_params_rtn     # noqa: E402
+
+# paged must stay within this factor of continuous-dense tokens/sec on the
+# uniform workload (the gather/table overhead budget; <1.0 only to absorb
+# wall-clock noise at toy scale — the CI cell runs single-digit seconds
+# and repeat runs land 0.93-1.04x; a real gather pessimization shows up
+# far below this)
+PAGED_UNIFORM_FLOOR = 0.85
+MIN_PREFIX_SKIP_FRACTION = 0.30
 
 
 def workload(cfg, n_requests, seed=0):
@@ -40,8 +60,51 @@ def workload(cfg, n_requests, seed=0):
              int(b)) for s, b in zip(lens, budgets)]
 
 
+def workload_shared_prefix(cfg, n_requests, prefix_len=48, seed=0):
+    """One shared system prompt + short unique tails: the prefix-sharing
+    target shape.  ``prefix_len`` is chosen so full blocks dominate."""
+    rng = np.random.default_rng(seed)
+    sysp = rng.integers(1, cfg.vocab, size=prefix_len).astype(np.int32)
+    out = []
+    for _ in range(n_requests):
+        tail = rng.integers(1, cfg.vocab,
+                            size=int(rng.choice([3, 5, 8]))).astype(np.int32)
+        out.append((np.concatenate([sysp, tail]), int(rng.integers(4, 17))))
+    return out
+
+
+def kv_bytes_per_request(eng):
+    """Resident KV bytes attributable to one request: the paged engine
+    counts blocks actually held at retirement (pool bytes scale with live
+    tokens); dense engines reserve a full-capacity slot per request."""
+    cache = getattr(eng, "_cache", None)
+    if cache is None:                 # static engine: per-cohort allocation
+        cache = eng.model.init_cache(eng.max_batch, eng.capacity,
+                                     dtype=jnp.float32, abstract=True)
+    nodes, _ = _cache_nodes(cache)
+    dense_per_slot = 0.0
+    block_bytes = 0.0
+    for n in nodes:
+        if isinstance(n, PagedKVCache):
+            itm = np.dtype(n.k.dtype).itemsize
+            # (stack, nb, bs, KV, hd) -> bytes of one block across the
+            # layer stack, k + v
+            block_bytes += 2 * itm * n.k.shape[0] * int(
+                np.prod(n.k.shape[2:]))
+        elif isinstance(n, KVCache):
+            itm = np.dtype(n.k.dtype).itemsize
+            B = n.k.shape[-4]
+            dense_per_slot += 2 * itm * int(np.prod(n.k.shape)) / B
+    held = getattr(eng, "blocks_held_at_retire", None)
+    if held:
+        return dense_per_slot + block_bytes * float(np.mean(held))
+    return dense_per_slot
+
+
 def run_workload(eng, reqs):
     ticks0 = getattr(eng, "ticks", 0)
+    skip0 = getattr(eng, "prefill_tokens_skipped", 0)
+    comp0 = getattr(eng, "prefill_tokens_computed", 0)
     handles = [eng.submit(p, max_tokens=b) for p, b in reqs]
     t0 = time.perf_counter()
     eng.run()
@@ -55,20 +118,27 @@ def run_workload(eng, reqs):
         "latency_mean_s": float(np.mean(lats)),
         "latency_p99_s": float(np.quantile(lats, 0.99)),
         "ticks": getattr(eng, "ticks", 0) - ticks0 or None,
+        "prefill_tokens_skipped":
+            getattr(eng, "prefill_tokens_skipped", 0) - skip0,
+        "prefill_tokens_computed":
+            getattr(eng, "prefill_tokens_computed", 0) - comp0,
+        "kv_bytes_per_request": kv_bytes_per_request(eng),
     }
 
 
-def bench_cell(name, cls, cfg, params, reqs, max_batch, capacity):
+def bench_cell(name, make_engine, reqs):
     # warmup and timed pass reuse ONE engine instance: the jit caches live
     # on the instance's closures, so a fresh engine would recompile every
     # shape during the timed pass and the walls would measure XLA, not
     # serving throughput
-    eng = cls(cfg, params, max_batch=max_batch, capacity=capacity)
+    eng = make_engine()
     run_workload(eng, reqs)                                 # warmup/compile
     res = run_workload(eng, reqs)
     print(f"[bench_serving] {name:28s} {res['tokens_per_s']:8.1f} tok/s  "
           f"mean {res['latency_mean_s'] * 1e3:7.1f} ms  "
-          f"p99 {res['latency_p99_s'] * 1e3:7.1f} ms")
+          f"p99 {res['latency_p99_s'] * 1e3:7.1f} ms  "
+          f"kv/req {res['kv_bytes_per_request'] / 1024:7.1f} KiB  "
+          f"skip {res['prefill_tokens_skipped']:4d}")
     return res
 
 
@@ -80,6 +150,7 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--wbits", type=int, default=4)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serving.json"))
@@ -90,32 +161,73 @@ def main(argv=None):
     params = m.init(jax.random.PRNGKey(0))
     n = 8 if args.smoke else args.requests
     reqs = workload(cfg, n)
+    shared_reqs = workload_shared_prefix(cfg, n)
 
     results = {"arch": cfg.name, "requests": n, "max_batch": args.max_batch,
-               "capacity": args.capacity, "cells": {}}
+               "capacity": args.capacity, "block_size": args.block_size,
+               "cells": {}}
     variants = [("dense", params)]
     if not args.smoke:
         qp = quantize_params_rtn(
             params, QuantConfig(wbits=args.wbits, group_size=32))
         variants.append((f"rtn_w{args.wbits}", qp))
 
+    def makers(p):
+        return (("static", lambda: StaticEngine(
+                    cfg, p, max_batch=args.max_batch,
+                    capacity=args.capacity)),
+                ("continuous", lambda: Engine(
+                    cfg, p, max_batch=args.max_batch,
+                    capacity=args.capacity)),
+                ("paged", lambda: PagedEngine(
+                    cfg, p, max_batch=args.max_batch,
+                    capacity=args.capacity, block_size=args.block_size)))
+
+    # ---- uniform workload: all three engines
     for vname, p in variants:
-        for ename, cls in (("static", StaticEngine), ("continuous", Engine)):
+        for ename, mk in makers(p):
             results["cells"][f"{ename}_{vname}"] = bench_cell(
-                f"{ename}/{vname}", cls, cfg, p, reqs,
-                args.max_batch, args.capacity)
+                f"{ename}/{vname}", mk, reqs)
+
+    # ---- shared-prefix workload: continuous-dense vs paged
+    for ename, mk in makers(params)[1:]:
+        results["cells"][f"shared_{ename}_dense"] = bench_cell(
+            f"shared/{ename}/dense", mk, shared_reqs)
 
     regressed = []
     for vname, _ in variants:
         s = results["cells"][f"static_{vname}"]["tokens_per_s"]
         c = results["cells"][f"continuous_{vname}"]["tokens_per_s"]
+        g = results["cells"][f"paged_{vname}"]["tokens_per_s"]
         results["cells"][f"speedup_{vname}"] = c / s
+        results["cells"][f"paged_vs_continuous_{vname}"] = g / c
         print(f"[bench_serving] continuous/{vname} speedup over static: "
-              f"{c / s:.2f}x")
+              f"{c / s:.2f}x; paged vs continuous: {g / c:.2f}x")
         if c <= s:
-            regressed.append(vname)
+            regressed.append(f"continuous_{vname}")
             print(f"[bench_serving] FAIL: continuous did not beat static "
                   f"on {vname}")
+        if g < PAGED_UNIFORM_FLOOR * c:
+            regressed.append(f"paged_{vname}")
+            print(f"[bench_serving] FAIL: paged regressed below "
+                  f"continuous-dense on the uniform workload ({g / c:.2f}x "
+                  f"< {PAGED_UNIFORM_FLOOR})")
+
+    sp = results["cells"]["shared_paged_dense"]
+    sc = results["cells"]["shared_continuous_dense"]
+    skip_frac = sp["prefill_tokens_skipped"] / max(
+        1, sp["prefill_tokens_skipped"] + sp["prefill_tokens_computed"])
+    results["cells"]["shared_prefix_skip_fraction"] = skip_frac
+    results["cells"]["shared_kv_bytes_ratio"] = \
+        sp["kv_bytes_per_request"] / sc["kv_bytes_per_request"]
+    print(f"[bench_serving] shared-prefix: {skip_frac:.0%} prefill tokens "
+          f"skipped; kv bytes/request {sp['kv_bytes_per_request'] / 1024:.1f}"
+          f" KiB paged vs {sc['kv_bytes_per_request'] / 1024:.1f} KiB dense")
+    if skip_frac < MIN_PREFIX_SKIP_FRACTION:
+        regressed.append("shared_prefix_skip")
+        print(f"[bench_serving] FAIL: prefix sharing skipped only "
+              f"{skip_frac:.0%} of prefill tokens "
+              f"(< {MIN_PREFIX_SKIP_FRACTION:.0%})")
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

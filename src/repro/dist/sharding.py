@@ -167,9 +167,14 @@ class ShardingPlan:
     # -------------------------------------------------------------- cache
     def cache_shardings(self, cache, ctx: DistCtx):
         """NamedSharding pytree for a decode cache, matching the decode
-        mode: ``dense`` shards KV heads, ``flash`` shards cache length."""
+        mode: ``dense`` shards KV heads, ``flash`` shards cache length.
+        Paged pools follow the same modes: ``dense`` shards the pool's KV
+        heads (tables replicated), ``flash`` shards the pool's *block* dim
+        and the table's logical-block dim over tp (the contiguous-stripe
+        layout ``attention._paged_flash_write`` assumes); pools carry no
+        batch dim, so they replicate over dp."""
         from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.models.attention import KVCache
+        from repro.models.attention import KVCache, PagedKVCache
         b, tp = ctx.batch_spec, self.tp
         flash = ctx.attn_decode_mode == "flash"
 
@@ -185,7 +190,28 @@ class ShardingPlan:
                 spec[nd - 2] = tp
             return NamedSharding(self.mesh, P(*spec))
 
+        def pool_like(x):
+            # (stack..., num_blocks, block_size, KV, hd)
+            nd = len(x.shape)
+            spec = [None] * nd
+            if flash:
+                spec[nd - 4] = tp if self._fits(tp, x.shape[nd - 4]) else None
+            elif self._fits(tp, x.shape[nd - 2]):
+                spec[nd - 2] = tp
+            return NamedSharding(self.mesh, P(*spec))
+
         def one(node):
+            if isinstance(node, PagedKVCache):
+                # block_tables (B, max_blocks): batch over dp; the logical
+                # dim over tp when flash (stripe invariant)
+                bt = node.block_tables
+                bt_spec = [None, None]
+                if self._fits(b, bt.shape[0]):
+                    bt_spec[0] = b
+                if flash and self._fits(tp, bt.shape[1]):
+                    bt_spec[1] = tp
+                return PagedKVCache(pool_like(node.k), pool_like(node.v),
+                                    NamedSharding(self.mesh, P(*bt_spec)))
             if isinstance(node, KVCache):
                 # slot_pos (stack..., B, cap): batch over dp, cap over tp
                 # when flash (matching the k/v length sharding)
@@ -207,8 +233,9 @@ class ShardingPlan:
                 return NamedSharding(self.mesh, P(*spec))
             return jax.tree.map(leaf, node)
 
-        return jax.tree.map(one, cache,
-                            is_leaf=lambda n: isinstance(n, KVCache))
+        return jax.tree.map(
+            one, cache,
+            is_leaf=lambda n: isinstance(n, (KVCache, PagedKVCache)))
 
 
 def make_plan(cfg: ModelConfig, mesh) -> ShardingPlan:

@@ -80,13 +80,16 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
 
 
 def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
-               quantized_params_sds=None):
+               quantized_params_sds=None, paged: bool = False):
     """Generic (arch x shape) step for the dry-run driver and launchers.
 
     train   -> ``build_train_step`` under a fresh plan;
     prefill -> jit'd bulk prefill (cache donated);
     decode  -> jit'd serve step (cache donated), optionally over packed
-               ``QuantizedTensor`` params (``quantized_params_sds``).
+               ``QuantizedTensor`` params (``quantized_params_sds``) and/or
+               a paged block-pool cache (``paged=True`` — the step reads
+               block tables from the cache pytree, so its signature and
+               the engine's per-tick override both lower from one build).
 
     Returns ``(jitted, abstract_args, ctx)``.
     """
@@ -117,7 +120,9 @@ def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
                           plan.cache_shardings(cache_sds, ctx)))
         return jitted, (p_sds, batch_sds, cache_sds), ctx
 
-    tok_sds, cache_sds, pos_sds = specs.decode_specs(cfg, shape)
+    stripes = plan.tp_size if ctx.attn_decode_mode == "flash" else 1
+    tok_sds, cache_sds, pos_sds = specs.decode_specs(cfg, shape, paged=paged,
+                                                     stripes=stripes)
 
     def serve_step(params, tokens, cache, pos):
         with dctx.use(ctx):

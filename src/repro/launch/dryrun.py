@@ -36,7 +36,8 @@ ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
-             save: bool = True, verbose: bool = True, quantized: bool = False):
+             save: bool = True, verbose: bool = True, quantized: bool = False,
+             paged: bool = False):
     cfg = get_config(arch)
     shape = SHAPES_BY_NAME[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -45,6 +46,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     if quantized and shape.kind == "decode":
         from repro.serving.quantized import abstract_quantized_params
         kw["quantized_params_sds"] = abstract_quantized_params(cfg)
+    if paged and shape.kind == "decode":
+        kw["paged"] = True
     with jax.set_mesh(mesh):
         jitted, abstract_args, ctx = build_step(cfg, shape, mesh, **kw)
         lowered = jitted.lower(*abstract_args)
@@ -63,6 +66,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "quantized": quantized,
+        "paged": paged and shape.kind == "decode",
         "attn_modes": [ctx.attn_train_mode, ctx.attn_decode_mode],
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": mem, "cost": {k: cost[k] for k in sorted(cost)
@@ -88,7 +92,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     if save:
         os.makedirs(ART, exist_ok=True)
         tag = f"{arch}__{shape_name}__{rec['mesh']}" + \
-            ("__w2" if quantized else "")
+            ("__w2" if quantized else "") + \
+            ("__paged" if rec["paged"] else "")
         with open(os.path.join(ART, tag + ".json"), "w") as f:
             json.dump(rec, f, indent=1)
     return rec
@@ -102,6 +107,8 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--quantized", action="store_true",
                     help="serve_step with 2-bit packed weights (decode cells)")
+    ap.add_argument("--paged", action="store_true",
+                    help="decode cells over the paged block-pool KV cache")
     ap.add_argument("--continue-on-error", action="store_true")
     args = ap.parse_args()
 
@@ -116,7 +123,7 @@ def main():
     for arch, shape in todo:
         try:
             run_cell(arch, shape, multi_pod=args.multi_pod,
-                     quantized=args.quantized)
+                     quantized=args.quantized, paged=args.paged)
         except Exception as e:
             traceback.print_exc()
             failures.append((arch, shape, repr(e)[:200]))

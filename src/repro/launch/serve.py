@@ -18,7 +18,7 @@ from repro.configs.base import QuantConfig
 from repro.dist.sharding import make_plan
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
-from repro.serving.engine import Engine, StaticEngine
+from repro.serving.engine import Engine, PagedEngine, StaticEngine
 from repro.serving.quantized import quantize_params_rtn
 
 
@@ -32,9 +32,12 @@ def main():
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree over local devices")
     ap.add_argument("--engine", default="continuous",
-                    choices=["continuous", "static"],
-                    help="slot-pool continuous batching (default) or the "
+                    choices=["continuous", "paged", "static"],
+                    help="slot-pool continuous batching (default), paged "
+                         "block-pool KV with prefix sharing, or the "
                          "static-cohort baseline")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: tokens per KV block")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -53,10 +56,15 @@ def main():
         print(f"[serve] mesh {dict(mesh.shape)} "
               f"(decode mode: {plan.ctx().attn_decode_mode})")
 
-    cls = Engine if args.engine == "continuous" else StaticEngine
     with mesh_ctx:
-        eng = cls(cfg, params, max_batch=args.requests, capacity=128,
-                  plan=plan)
+        if args.engine == "paged":
+            eng = PagedEngine(cfg, params, max_batch=args.requests,
+                              capacity=128, plan=plan,
+                              block_size=args.block_size)
+        else:
+            cls = Engine if args.engine == "continuous" else StaticEngine
+            eng = cls(cfg, params, max_batch=args.requests, capacity=128,
+                      plan=plan)
         rng = np.random.default_rng(0)
         rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
                          max_tokens=args.max_tokens)
@@ -64,6 +72,10 @@ def main():
         eng.run()
     for r in rs:
         print(f"[serve] req {r.rid}: {r.out}")
+    if args.engine == "paged":
+        print(f"[serve] prefill tokens skipped (prefix sharing): "
+              f"{eng.prefill_tokens_skipped}, peak blocks: "
+              f"{eng.peak_blocks_in_use}/{eng.num_blocks}")
 
 
 if __name__ == "__main__":

@@ -29,16 +29,35 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig, act_dtype=jnp.bfloat16):
 
 
 def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
-                 cache_dtype=jnp.bfloat16, act_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, act_dtype=jnp.bfloat16,
+                 paged: bool = False, block_size: int = 64,
+                 stripes: int = 1):
     """(tokens, cache, pos) ShapeDtypeStructs for one serve_step.
 
     The cache has capacity seq_len and is prefilled to seq_len-1; the step
     appends the incoming token and attends over the full window.  ``pos``
     is the (B,) per-row cache-clock vector the continuous-batching engine
-    drives (a scalar clock also traces — lockstep fast path)."""
+    drives (a scalar clock also traces — lockstep fast path).
+
+    ``paged=True`` swaps the dense KV rings for the block-pool layout
+    (``PagedKVCache``): the abstract pool is sized at the dense worst case
+    (B * seq_len/block_size blocks + one scratch per stripe) so the
+    compiled cell bounds the same HBM; the serve step reads the
+    cache-resident block tables (the engine overrides them per tick).
+    ``stripes`` (= tp size for flash-mode cells) keeps the pool's block
+    count divisible by the shard count."""
     B, S = shape.global_batch, shape.seq_len
     model = build_model(cfg)
-    cache = model.init_cache(B, S, dtype=cache_dtype, abstract=True)
+    if paged:
+        bs = block_size
+        while bs > 1 and S % bs:        # largest divisor of S <= block_size
+            bs //= 2
+        nb = B * (S // bs) + stripes
+        nb += (-nb) % stripes
+        cache = model.init_cache(B, S, dtype=cache_dtype, abstract=True,
+                                 paged=True, block_size=bs, num_blocks=nb)
+    else:
+        cache = model.init_cache(B, S, dtype=cache_dtype, abstract=True)
     if cfg.family == "audio":
         tokens = SDS((B, 1, cfg.d_model), act_dtype)  # stub frame embedding
     else:

@@ -132,11 +132,39 @@ class KVCache(NamedTuple):
     slot_pos: jnp.ndarray
 
 
+class PagedKVCache(NamedTuple):
+    """Paged KV pool: one global block pool shared by every batch slot.
+
+    Addressing is linear, not a ring: absolute position ``p`` of row ``b``
+    lives at ``(block_tables[b, p // bs], p % bs)`` in the pool.  Because
+    positions are implicit in the layout, no per-slot ``slot_pos`` array is
+    needed — validity during decode is ``j <= pos[b]`` (the same ``(B,)``
+    vector clock every decode path already threads) plus "the logical block
+    is mapped".  Physical block 0 is RESERVED as a write scratch: rows whose
+    target block is unmapped (free slots in the engine's pool) land their
+    appends there, and no table ever references it, so the scatter stays
+    branch-free without corrupting live blocks.  Block tables are shared
+    across the layer stack (one logical->physical mapping; each layer has
+    its own pool slab indexed by the same physical ids).
+    """
+    k: jnp.ndarray            # (num_blocks, block_size, KV, Dh) pool
+    v: jnp.ndarray
+    block_tables: jnp.ndarray  # (B, max_blocks) int32 physical ids, -1 free
+
+
 def init_cache(B, capacity, kv_heads, head_dim, dtype=jnp.bfloat16):
     return KVCache(
         k=jnp.zeros((B, capacity, kv_heads, head_dim), dtype),
         v=jnp.zeros((B, capacity, kv_heads, head_dim), dtype),
         slot_pos=jnp.full((B, capacity), -1, jnp.int32))
+
+
+def init_paged_cache(B, num_blocks, block_size, max_blocks, kv_heads,
+                     head_dim, dtype=jnp.bfloat16):
+    return PagedKVCache(
+        k=jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+        v=jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+        block_tables=jnp.full((B, max_blocks), -1, jnp.int32))
 
 
 def _pos_rows(pos, B):
@@ -147,12 +175,63 @@ def _pos_rows(pos, B):
     return pos.astype(jnp.int32)
 
 
-def cache_write(cache: KVCache, k_new, v_new, pos):
+def _paged_cache_write(cache: PagedKVCache, k_new, v_new, pos):
+    """Paged append: row ``b`` writes ``(bt[b, pos[b]//bs], pos[b]%bs)``.
+
+    Rows whose target logical block is unmapped (-1) write to the reserved
+    scratch block 0 (never referenced by any table, so never read); live
+    rows own their write block exclusively (allocator invariant), so the
+    scatter indices never collide on a live block."""
+    bt = cache.block_tables
+    B = bt.shape[0]
+    bs = cache.k.shape[1]
+    posr = _pos_rows(pos, B)
+    lb = posr // bs
+    off = posr % bs
+    rows = jnp.arange(B)
+    pb = bt[rows, jnp.clip(lb, 0, bt.shape[1] - 1)]
+    ok = (lb < bt.shape[1]) & (pb >= 0)
+    pbs = jnp.where(ok, pb, 0)                        # scratch block 0
+    # unconditional scatter: duplicate indices only ever land on the
+    # scratch block (never read), so no read-back select is needed
+    k = cache.k.at[pbs, off].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[pbs, off].set(v_new[:, 0].astype(cache.v.dtype))
+    return PagedKVCache(k, v, bt)
+
+
+def _paged_cache_prefill(cache: PagedKVCache, k_all, v_all, start=0):
+    """Bulk-write S tokens (a multiple of block_size, block-aligned start)
+    into each row's mapped blocks.  Unmapped target blocks (rows shorter
+    than S, or tables truncated at capacity) spill to the scratch block."""
+    B, S = k_all.shape[:2]
+    bs = cache.k.shape[1]
+    assert S % bs == 0 and start % bs == 0, (S, start, bs)
+    nblk = S // bs
+    first = start // bs
+    mb = cache.block_tables.shape[1]
+    idx = jnp.clip(first + jnp.arange(nblk), 0, mb - 1)
+    pb = cache.block_tables[:, idx]                   # (B, nblk)
+    ok = (first + jnp.arange(nblk) < mb)[None] & (pb >= 0)
+    pbs = jnp.where(ok, pb, 0).reshape(-1)            # (B*nblk,) 0=scratch
+
+    def scat(pool, vals):
+        # unmapped targets collapse onto the never-read scratch block, so
+        # the scatter needs no read-back select
+        vals = vals.reshape(B * nblk, bs, *vals.shape[2:]).astype(pool.dtype)
+        return pool.at[pbs].set(vals)
+    return PagedKVCache(scat(cache.k, k_all), scat(cache.v, v_all),
+                        cache.block_tables)
+
+
+def cache_write(cache, k_new, v_new, pos):
     """Append KV for one token per row at absolute position ``pos``.
 
     ``pos`` is a scalar (all rows share one clock — the lockstep fast path:
     a single dynamic-update-slice, no scatter) or a (B,) vector (per-row
-    clocks: each row writes its own ring slot)."""
+    clocks: each row writes its own ring slot).  Paged caches dispatch to
+    the block-table scatter; the dense lowering below is unchanged."""
+    if isinstance(cache, PagedKVCache):
+        return _paged_cache_write(cache, k_new, v_new, pos)
     cap = cache.k.shape[1]
     B = cache.k.shape[0]
     pos = jnp.asarray(pos)
@@ -175,8 +254,15 @@ def cache_write(cache: KVCache, k_new, v_new, pos):
     return KVCache(k, v, sp)
 
 
-def cache_prefill(cache: KVCache, k_all, v_all, start=0):
-    """Bulk-write S tokens (positions start..start+S-1); S <= capacity."""
+def cache_prefill(cache, k_all, v_all, start=0, valid_len=None):
+    """Bulk-write S tokens (positions start..start+S-1); S <= capacity.
+
+    ``valid_len`` (optional, traced): only the first ``valid_len`` of the S
+    tokens are real — the rest are bucket padding whose slots stay marked
+    empty (slot_pos -1) so decode masks never see them.  ``None`` keeps the
+    exact pre-bucketing lowering."""
+    if isinstance(cache, PagedKVCache):
+        return _paged_cache_prefill(cache, k_all, v_all, start)
     S = k_all.shape[1]
     cap = cache.k.shape[1]
     B = cache.k.shape[0]
@@ -184,14 +270,52 @@ def cache_prefill(cache: KVCache, k_all, v_all, start=0):
         cache.k, k_all.astype(cache.k.dtype), start % cap, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(
         cache.v, v_all.astype(cache.v.dtype), start % cap, axis=1)
+    pos_row = (start + jnp.arange(S)).astype(jnp.int32)
+    if valid_len is not None:
+        pos_row = jnp.where(jnp.arange(S) < valid_len, pos_row, -1)
     sp = jax.lax.dynamic_update_slice_in_dim(
-        cache.slot_pos,
-        jnp.broadcast_to((start + jnp.arange(S)).astype(jnp.int32), (B, S)),
+        cache.slot_pos, jnp.broadcast_to(pos_row, (B, S)),
         start % cap, axis=1)
     return KVCache(k, v, sp)
 
 
-def _decode_scores(q, cache: KVCache, pos, window):
+def _paged_view(cache: PagedKVCache, need_v: bool = True):
+    """Gather each row's blocks into a dense (B, max_blocks*bs, KV, Dh)
+    view plus the per-position "mapped" mask.  Position ``p`` of the view
+    is absolute position ``p`` (linear paged addressing), so downstream
+    masks are identical to a never-wrapping dense cache.  This XLA gather
+    is the reference lowering; a Pallas paged-attention kernel that walks
+    tables block-by-block (no materialized view) is the real-TPU follow-up.
+    """
+    bt = cache.block_tables
+    B, mb = bt.shape
+    bs, KV, Dh = cache.k.shape[1:]
+    safe = jnp.clip(bt, 0, cache.k.shape[0] - 1)
+    k = cache.k[safe].reshape(B, mb * bs, KV, Dh)
+    v = cache.v[safe].reshape(B, mb * bs, KV, Dh) if need_v else None
+    mapped = jnp.repeat(bt >= 0, bs, axis=1)          # (B, mb*bs)
+    return k, v, mapped
+
+
+def _paged_decode_scores(q, cache: PagedKVCache, pos, window, k, mapped):
+    B, one, H, Dh = q.shape
+    KV = cache.k.shape[2]
+    rep = H // KV
+    qg = (q[:, 0] * Dh ** -0.5).reshape(B, KV, rep, Dh)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    posr = _pos_rows(pos, B)[:, None]                 # (B,1) row clocks
+    posn = jnp.arange(k.shape[1])[None]               # slot j holds pos j
+    valid = mapped & (posn <= posr)
+    if window:
+        valid &= (posr - posn) < window
+    return jnp.where(valid[:, None, None], s, NEG_INF)
+
+
+def _decode_scores(q, cache, pos, window):
+    if isinstance(cache, PagedKVCache):
+        k, _, mapped = _paged_view(cache, need_v=False)
+        return _paged_decode_scores(q, cache, pos, window, k, mapped)
     B, one, H, Dh = q.shape
     KV = cache.k.shape[2]
     rep = H // KV
@@ -205,17 +329,24 @@ def _decode_scores(q, cache: KVCache, pos, window):
     return jnp.where(valid[:, None, None], s, NEG_INF)
 
 
-def decode_attention(q, cache: KVCache, pos, window: int = 0):
+def decode_attention(q, cache, pos, window: int = 0):
     """Dense decode: q (B,1,H,Dh) against the full cache -> (B,1,H,Dh).
-    ``pos`` is a scalar clock or a (B,) per-row clock vector."""
+    ``pos`` is a scalar clock or a (B,) per-row clock vector.  Paged caches
+    score against the gathered block view; the dense lowering is unchanged.
+    """
     B, _, H, Dh = q.shape
-    s = _decode_scores(q, cache, pos, window)
+    if isinstance(cache, PagedKVCache):
+        k, v, mapped = _paged_view(cache)
+        s = _paged_decode_scores(q, cache, pos, window, k, mapped)
+    else:
+        v = cache.v
+        s = _decode_scores(q, cache, pos, window)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(cache.v.dtype), cache.v)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v.dtype), v)
     return o.reshape(B, 1, H, Dh)
 
 
-def decode_attention_partial(q, cache: KVCache, pos, window: int = 0):
+def decode_attention_partial(q, cache, pos, window: int = 0):
     """Flash-decoding partial: softmax stats for cross-shard combination.
 
     Returns (o_unnorm (B,H,Dh) f32, m (B,H), l (B,H)); combine as
@@ -225,11 +356,16 @@ def decode_attention_partial(q, cache: KVCache, pos, window: int = 0):
     B, _, H, Dh = q.shape
     KV = cache.k.shape[2]
     rep = H // KV
-    s = _decode_scores(q, cache, pos, window)        # (B,KV,rep,Lc)
+    if isinstance(cache, PagedKVCache):
+        k, v, mapped = _paged_view(cache)
+        s = _paged_decode_scores(q, cache, pos, window, k, mapped)
+    else:
+        v = cache.v
+        s = _decode_scores(q, cache, pos, window)    # (B,KV,rep,Lc)
     m = s.max(axis=-1)
     e = jnp.exp(s - m[..., None])
     l = e.sum(axis=-1)
-    o = jnp.einsum("bgrk,bkgd->bgrd", e, cache.v.astype(jnp.float32))
+    o = jnp.einsum("bgrk,bkgd->bgrd", e, v.astype(jnp.float32))
     return (o.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))
 
 
@@ -281,7 +417,7 @@ def train_attention(q, k, v, *, window: int = 0):
         out_specs=P(bspec, c.tp, None, None))(q, k, v)
 
 
-def serve_attention_write(q, k_new, v_new, cache: KVCache, pos, *,
+def serve_attention_write(q, k_new, v_new, cache, pos, *,
                           window: int = 0):
     """Mode-dispatched decode attention WITH the cache append fused in.
 
@@ -297,7 +433,13 @@ def serve_attention_write(q, k_new, v_new, cache: KVCache, pos, *,
             per-shard partial softmax + logsumexp combine.  Used when head
             counts don't divide tp, and for long-context cells.
 
-    Returns (o (B,1,H,Dh), new KVCache).
+    ``PagedKVCache`` inputs dispatch on the same modes: dense keeps the
+    pool KV-head-sharded with the plain gather/scatter math; flash shards
+    the pool's *block* dim over tp (contiguous logical stripes — shard t
+    owns logical blocks [t*mb/T, (t+1)*mb/T), matching the dense flash
+    path's contiguous length split) with the same partial-softmax combine.
+
+    Returns (o (B,1,H,Dh), new cache of the input's kind).
     """
     from jax.sharding import PartitionSpec as P
     from repro.dist import ctx as dctx
@@ -305,6 +447,8 @@ def serve_attention_write(q, k_new, v_new, cache: KVCache, pos, *,
     if c is None or c.attn_decode_mode == "dense":
         cache = cache_write(cache, k_new, v_new, pos)
         return decode_attention(q, cache, pos, window), cache
+    if isinstance(cache, PagedKVCache):
+        return _paged_flash_write(q, k_new, v_new, cache, pos, window, c)
     B = q.shape[0]
     bspec = c.batch_spec if B % c.dp_size == 0 else None
     posv = _pos_rows(pos, B)                          # (B,) row clocks
@@ -346,3 +490,79 @@ def serve_attention_write(q, k_new, v_new, cache: KVCache, pos, *,
                    P(bspec, c.tp)))(
         q, k_new, v_new, cache.k, cache.v, cache.slot_pos, posv)
     return o, KVCache(kk, vv, sp)
+
+
+def _paged_flash_write(q, k_new, v_new, cache: PagedKVCache, pos, window, c):
+    """Block-parallel flash decoding over a tp-sharded paged pool.
+
+    The pool's block dim and the table's logical-block dim are both split
+    contiguously over tp, and the allocator guarantees the *stripe
+    invariant*: the physical block backing logical block ``lb`` is drawn
+    from pool partition ``lb // (max_blocks/T)``, so every shard's table
+    slice references only its local pool slab.  Each shard appends the
+    incoming token if it owns the target block (local physical block 0 is
+    its reserved scratch otherwise), gathers only its own stripe, and the
+    partial softmax stats combine with the same logsumexp psum as the dense
+    flash path.  Per-shard HBM, gather traffic, and score FLOPs all drop by
+    T (the trade: early blocks — short rows — concentrate on low shards,
+    exactly like the dense flash path's contiguous length split).
+    """
+    from jax.sharding import PartitionSpec as P
+    B, _, H, Dh = q.shape
+    KV = cache.k.shape[2]
+    rep = H // KV
+    bspec = c.batch_spec if B % c.dp_size == 0 else None
+    posv = _pos_rows(pos, B)
+
+    def local(ql, knl, vnl, kl, vl, btl, posl):
+        Bl, mbl = btl.shape
+        nbl, bs = kl.shape[0], kl.shape[1]
+        my = jax.lax.axis_index(c.tp)
+        blk0 = my * nbl                   # my physical-id range start
+        pos0 = my * mbl * bs              # absolute position of my stripe
+        rows = jnp.arange(Bl)
+        # ---- append: only the shard owning logical block pos//bs writes
+        lb = posl // bs - my * mbl        # logical block, stripe-local
+        off = posl % bs
+        pb = btl[rows, jnp.clip(lb, 0, mbl - 1)] - blk0
+        ok = (lb >= 0) & (lb < mbl) & (pb >= 0) & (pb < nbl)
+        pbs = jnp.where(ok, pb, 0)        # local block 0 = shard scratch
+        # non-owner rows collapse onto the shard's scratch block (never
+        # read), so the scatter needs no read-back select
+        kl = kl.at[pbs, off].set(knl[:, 0].astype(kl.dtype))
+        vl = vl.at[pbs, off].set(vnl[:, 0].astype(vl.dtype))
+        # ---- partial scores over my stripe only
+        safe = jnp.clip(btl - blk0, 0, nbl - 1)
+        kg = kl[safe].reshape(Bl, mbl * bs, KV, Dh)
+        vg = vl[safe].reshape(Bl, mbl * bs, KV, Dh)
+        mapped = jnp.repeat((btl >= blk0) & (btl < blk0 + nbl), bs, axis=1)
+        posn = pos0 + jnp.arange(mbl * bs)[None]
+        posr = posl[:, None]
+        valid = mapped & (posn <= posr)
+        if window:
+            valid &= (posr - posn) < window
+        qg = (ql[:, 0] * Dh ** -0.5).reshape(Bl, KV, rep, Dh)
+        s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
+                       kg.astype(jnp.float32))
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        m = s.max(axis=-1)
+        e = jnp.exp(s - m[..., None])
+        l = e.sum(axis=-1)
+        o = jnp.einsum("bgrk,bkgd->bgrd", e, vg.astype(jnp.float32))
+        M = jax.lax.pmax(m, c.tp)
+        w = jnp.exp(m - M)
+        o = jax.lax.psum(o * w[..., None], c.tp)
+        l = jax.lax.psum(l * w, c.tp)
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).reshape(Bl, 1, H, Dh)
+        return out.astype(vl.dtype), kl, vl
+
+    o, kk, vv = jax.shard_map(
+        local, mesh=c.mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, None, None, None), P(bspec, None, None, None),
+                  P(c.tp, None, None, None), P(c.tp, None, None, None),
+                  P(bspec, c.tp), P(bspec)),
+        out_specs=(P(bspec, None, None, None),
+                   P(c.tp, None, None, None), P(c.tp, None, None, None)))(
+        q, k_new, v_new, cache.k, cache.v, cache.block_tables, posv)
+    return o, PagedKVCache(kk, vv, cache.block_tables)

@@ -95,6 +95,38 @@ def _scan_with_state(body, x, params_stack, state_stack, length):
     return x, state_stack
 
 
+# Paged KV caches scan their pool slabs as a plain (k, v) carry while the
+# (shared, host-managed) block table rides outside the loop; these three
+# helpers express that rebinding rule once for every decode path.
+# ``bt is None`` means "this cache is dense" throughout.
+def _paged_kv_state(kvc):
+    """Cache node -> scan-carry state."""
+    return (kvc.k, kvc.v) if isinstance(kvc, A.PagedKVCache) else kvc
+
+
+def _paged_kv_in(st, bt):
+    """Scan carry -> the per-layer cache view _layer_apply consumes."""
+    return A.PagedKVCache(st[0], st[1], bt) if bt is not None else st
+
+
+def _paged_kv_out(kv, bt):
+    """_layer_apply's new cache -> scan carry."""
+    return (kv.k, kv.v) if bt is not None else kv
+
+
+def _paged_kv_rebuild(kvs, bt):
+    """Post-scan stacked carry -> the cache node handed back to callers."""
+    return A.PagedKVCache(kvs[0], kvs[1], bt) if bt is not None else kvs
+
+
+def _paged_tables(kvc, block_tables):
+    """The table to thread this step: the per-tick override when given,
+    else the cache-resident fallback; None for dense caches."""
+    if not isinstance(kvc, A.PagedKVCache):
+        return None
+    return kvc.block_tables if block_tables is None else block_tables
+
+
 def _layer_apply(p, x, cfg, *, positions, window, kv=None, pos=None,
                  mode="train"):
     """One transformer layer.  mode: train/prefill use full-seq attention;
@@ -302,7 +334,7 @@ class Model:
 
     # ---------------------------------------------------- hybrid forward
     def _hybrid_forward(self, params, x, positions, mode, caches=None,
-                        pos=None):
+                        pos=None, block_tables=None):
         cfg = self.cfg
         x0 = x  # embedding stream fed to every shared-attn invocation
 
@@ -319,23 +351,26 @@ class Model:
         k = cfg.shared_attn_every
 
         if mode == "decode":
+            bt = _paged_tables(caches["kv"], block_tables)
+
             def group_body(xc, gpin, st):
                 gp, gin = gpin
                 mst, kv = st
                 xc, msts = _scan_with_state(mamba_decode, xc, gp, mst, k)
                 a_in = L.linear(gin, jnp.concatenate([xc, x0], axis=-1))
-                a_out, kv = _layer_apply(params["shared"], a_in, cfg,
-                                         positions=positions, window=0,
-                                         kv=kv, pos=pos, mode="decode")
+                a_out, kv2 = _layer_apply(params["shared"], a_in, cfg,
+                                          positions=positions, window=0,
+                                          kv=_paged_kv_in(kv, bt),
+                                          pos=pos, mode="decode")
                 xc = xc + (a_out - a_in)  # _layer_apply adds its residual
-                return xc, (msts, kv)
+                return xc, (msts, _paged_kv_out(kv2, bt))
 
             ng = cfg.n_layers // k
             x, (mg, kvs) = _scan_with_state(
                 group_body, x, (params["groups"], params["shared_in"]),
-                (caches["mamba_g"], caches["kv"]), ng)
+                (caches["mamba_g"], _paged_kv_state(caches["kv"])), ng)
             new_states["mamba_g"] = mg
-            new_states["kv"] = kvs
+            new_states["kv"] = _paged_kv_rebuild(kvs, bt)
             if "tail" in params:
                 x, mt = _scan_with_state(mamba_decode, x, params["tail"],
                                          caches["mamba_t"],
@@ -386,7 +421,23 @@ class Model:
         return nll.mean()
 
     # ---------------------------------------------------------------- cache
-    def init_cache(self, B, capacity, dtype=jnp.bfloat16, abstract=False):
+    def init_cache(self, B, capacity, dtype=jnp.bfloat16, abstract=False,
+                   paged=False, block_size=16, num_blocks=None):
+        """Decode-state pytree.  ``paged=True`` swaps every *full-context*
+        KV cache for a ``PagedKVCache`` pool (``num_blocks`` physical blocks
+        of ``block_size`` tokens; block 0 reserved as the write scratch)
+        with a shared ``(B, capacity // block_size)`` block table.
+
+        What stays dense under ``paged``:
+          * SSM / RWKV / Mamba state — it is O(1) per row (a fixed-size
+            recurrent summary, not a per-token log), so there is nothing to
+            page: block tables map *positions* to storage, and recurrent
+            state has no position axis.
+          * grouped-local sliding-window rings — bounded at ``local_window``
+            tokens per row by construction; paging a fixed small ring buys
+            no memory and costs a gather per layer.
+        Only the unbounded full-attention caches (the actual O(context)
+        memory) go through the pool."""
         cfg = self.cfg
         hd = cfg.resolved_head_dim
 
@@ -401,6 +452,18 @@ class Model:
                 jax.ShapeDtypeStruct((n, B, cap), jnp.int32)
             return A.KVCache(mk(n, B, cap, cfg.n_kv_heads, hd),
                              mk(n, B, cap, cfg.n_kv_heads, hd), sp)
+
+        if paged:
+            assert capacity % block_size == 0, (capacity, block_size)
+            mb = capacity // block_size
+            nb = num_blocks if num_blocks is not None else B * mb + 1
+
+            def paged_kv(n):
+                bt = jnp.full((B, mb), -1, jnp.int32) if not abstract else \
+                    jax.ShapeDtypeStruct((B, mb), jnp.int32)
+                return A.PagedKVCache(
+                    mk(n, nb, block_size, cfg.n_kv_heads, hd),
+                    mk(n, nb, block_size, cfg.n_kv_heads, hd), bt)
 
         if cfg.family == "ssm":
             Lh = cfg.n_layers
@@ -417,7 +480,7 @@ class Model:
             out = {"mamba_g": S.MambaState(
                 mk(ng, k, B, s.d_conv - 1, conv_ch),
                 mk(ng, k, B, nH, s.head_dim, s.d_state, dt=jnp.float32)),
-                "kv": kv(ng, capacity)}
+                "kv": paged_kv(ng) if paged else kv(ng, capacity)}
             if tail:
                 out["mamba_t"] = S.MambaState(
                     mk(tail, B, s.d_conv - 1, conv_ch),
@@ -433,20 +496,29 @@ class Model:
             out = {"local": A.KVCache(
                 mk(ng, ge - 1, B, wcap, cfg.n_kv_heads, hd),
                 mk(ng, ge - 1, B, wcap, cfg.n_kv_heads, hd), lsp),
-                "global": kv(ng, capacity)}
+                "global": paged_kv(ng) if paged else kv(ng, capacity)}
             if tail:
                 out["tail"] = kv(tail, wcap)
             return out
+        if paged:
+            return {"kv": paged_kv(cfg.n_layers)}
         return {"kv": kv(cfg.n_layers, capacity)}
 
     # --------------------------------------------------------------- decode
-    def decode_step(self, params, tokens, cache, pos):
+    def decode_step(self, params, tokens, cache, pos, block_tables=None):
         """One serving step: tokens (B,1) -> (logits (B,1,V), new cache).
 
         ``pos`` is the absolute position of the incoming token (cache holds
         positions < pos) — a scalar when the whole batch decodes in lockstep,
         or a (B,) vector clock when every row runs at its own position
-        (continuous batching)."""
+        (continuous batching).
+
+        ``block_tables`` (optional, (B, max_blocks) int32) overrides the
+        table leaf of every paged cache in the pytree: the serving engine's
+        allocator is host-side, so it passes the current logical->physical
+        mapping per tick (the cache-resident table is a self-contained
+        fallback for direct callers and the dry-run decode cells).  One
+        table serves the whole layer stack."""
         cfg = self.cfg
         if cfg.family == "audio":
             # frames arrive as embeddings even in decode (stub frontend)
@@ -470,24 +542,32 @@ class Model:
             new_cache = {"state": states}
         elif cfg.family == "hybrid":
             x, ns = self._hybrid_forward(params, x, positions, mode="decode",
-                                         caches=cache, pos=pos)
+                                         caches=cache, pos=pos,
+                                         block_tables=block_tables)
             new_cache = ns
         elif self._grouped_local():
             x, new_cache = self._grouped_decode(params, x, positions, cache,
-                                                pos)
+                                                pos, block_tables)
         else:
-            def body(xc, lp, kvc):
-                return _layer_apply(lp, xc, cfg, positions=positions,
-                                    window=0, kv=kvc, pos=pos, mode="decode")
+            bt = _paged_tables(cache["kv"], block_tables)
+
+            def body(xc, lp, st):
+                xc, kv2 = _layer_apply(
+                    lp, xc, cfg, positions=positions, window=0,
+                    kv=_paged_kv_in(st, bt), pos=pos, mode="decode")
+                return xc, _paged_kv_out(kv2, bt)
             x, kvs = _scan_with_state(body, x, params["layers"],
-                                      cache["kv"], cfg.n_layers)
-            new_cache = {"kv": kvs}
+                                      _paged_kv_state(cache["kv"]),
+                                      cfg.n_layers)
+            new_cache = {"kv": _paged_kv_rebuild(kvs, bt)}
         return self._logits(params, x), new_cache
 
-    def _grouped_decode(self, params, x, positions, cache, pos):
+    def _grouped_decode(self, params, x, positions, cache, pos,
+                        block_tables=None):
         cfg = self.cfg
         w = cfg.local_window
         ge = cfg.global_every
+        bt = _paged_tables(cache["global"], block_tables)
 
         def local_body(xc, lp, kvc):
             return _layer_apply(lp, xc, cfg, positions=positions,
@@ -498,15 +578,16 @@ class Model:
             xc, lkv2 = _scan_with_state(local_body, xc, gp["local"], lkv,
                                         ge - 1)
             xc, gkv2 = _layer_apply(gp["global"], xc, cfg,
-                                    positions=positions, window=0, kv=gkv,
+                                    positions=positions, window=0,
+                                    kv=_paged_kv_in(gkv, bt),
                                     pos=pos, mode="decode")
-            return xc, (lkv2, gkv2)
+            return xc, (lkv2, _paged_kv_out(gkv2, bt))
 
         ng = cfg.n_layers // ge
         x, (lkvs, gkvs) = _scan_with_state(
             group_body, x, params["groups"],
-            (cache["local"], cache["global"]), ng)
-        new_cache = {"local": lkvs, "global": gkvs}
+            (cache["local"], _paged_kv_state(cache["global"])), ng)
+        new_cache = {"local": lkvs, "global": _paged_kv_rebuild(gkvs, bt)}
         if "tail" in params:
             x, tkv = _scan_with_state(local_body, x, params["tail"],
                                       cache["tail"], cfg.n_layers % ge)
@@ -514,12 +595,27 @@ class Model:
         return x, new_cache
 
     # -------------------------------------------------------------- prefill
-    def prefill(self, params, batch, cache):
+    def prefill(self, params, batch, cache, valid_len=None):
         """Full-prompt forward that also fills the KV caches.
 
         Implemented as apply() for the hidden states plus bulk cache writes;
-        returns (logits of last position, cache, n_prompt)."""
+        returns (logits of last valid position, cache, n_prompt).
+
+        ``valid_len`` (traced scalar) enables *bucketed* prefill: the batch
+        is padded to a bucket length, only the first ``valid_len`` tokens
+        are real.  Causal masking makes every valid position's output
+        bit-identical to an unpadded run (pad keys are never attended by
+        valid queries, and the online-softmax accumulates exact zeros for
+        masked slots), pad cache slots stay marked empty, and the returned
+        logits are taken at ``valid_len - 1``.  Rejected for recurrent
+        families (ssm/hybrid): their prefill threads state *through* every
+        position, so pad tokens would poison the carried state."""
         cfg = self.cfg
+        if valid_len is not None and cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"bucketed prefill (valid_len) is unsupported for the "
+                f"recurrent-state family {cfg.family!r}: padding corrupts "
+                f"the carried SSM/RWKV state")
         x = self._embed_in(params, batch)
         B, Stot, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(Stot)[None], (B, Stot))
@@ -536,12 +632,13 @@ class Model:
             x, ns = self._hybrid_prefill(params, x, positions, cache)
             new_cache = ns
         elif self._grouped_local():
-            x, new_cache = self._grouped_prefill(params, x, positions, cache)
+            x, new_cache = self._grouped_prefill(params, x, positions,
+                                                 cache, valid_len)
         else:
             def body(xc, lp, kvc):
                 h = L.norm(lp["ln1"], xc)
                 q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
-                kv2 = A.cache_prefill(kvc, k, v)
+                kv2 = A.cache_prefill(kvc, k, v, valid_len=valid_len)
                 o = A.train_attention(q, k, v, window=0)
                 xc = xc + L.linear(lp["attn"]["wo"],
                                    o.reshape(B, Stot, -1))
@@ -554,10 +651,14 @@ class Model:
             x, kvs = _scan_with_state(body, x, params["layers"],
                                       cache["kv"], cfg.n_layers)
             new_cache = {"kv": kvs}
-        logits = self._logits(params, x[:, -1:])
+        if valid_len is None:
+            xl = x[:, -1:]
+        else:
+            xl = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+        logits = self._logits(params, xl)
         return logits, new_cache, Stot
 
-    def _grouped_prefill(self, params, x, positions, cache):
+    def _grouped_prefill(self, params, x, positions, cache, valid_len=None):
         cfg = self.cfg
         B, Stot, _ = x.shape
         w = cfg.local_window
@@ -565,17 +666,32 @@ class Model:
         def fill_local(lp, xc, kvc):
             h = L.norm(lp["ln1"], xc)
             q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
-            # ring cache keeps only the last min(Stot, wcap) positions at
+            # ring cache keeps only the last min(valid, wcap) positions at
             # slot = pos % wcap (matching cache_write's ring discipline)
             wcap = kvc.k.shape[1]
-            n = min(Stot, wcap)
-            start = Stot - n
-            parr = (start + jnp.arange(n)).astype(jnp.int32)
-            slots = parr % wcap
-            kv2 = A.KVCache(
-                kvc.k.at[:, slots].set(k[:, -n:].astype(kvc.k.dtype)),
-                kvc.v.at[:, slots].set(v[:, -n:].astype(kvc.v.dtype)),
-                kvc.slot_pos.at[:, slots].set(parr[None]))
+            if valid_len is None:
+                n = min(Stot, wcap)
+                start = Stot - n
+                parr = (start + jnp.arange(n)).astype(jnp.int32)
+                slots = parr % wcap
+                kv2 = A.KVCache(
+                    kvc.k.at[:, slots].set(k[:, -n:].astype(kvc.k.dtype)),
+                    kvc.v.at[:, slots].set(v[:, -n:].astype(kvc.v.dtype)),
+                    kvc.slot_pos.at[:, slots].set(parr[None]))
+            else:
+                # traced valid_len: take the wcap positions ending at
+                # valid_len-1 (idx < 0 -> slot marked empty); idx covers
+                # wcap consecutive ints so idx % wcap is a permutation
+                idx = valid_len - wcap + jnp.arange(wcap)
+                kw = jnp.take(k, jnp.clip(idx, 0, Stot - 1), axis=1)
+                vw = jnp.take(v, jnp.clip(idx, 0, Stot - 1), axis=1)
+                slots = idx % wcap
+                sp = jnp.where(idx >= 0, idx, -1).astype(jnp.int32)
+                kv2 = A.KVCache(
+                    kvc.k.at[:, slots].set(kw.astype(kvc.k.dtype)),
+                    kvc.v.at[:, slots].set(vw.astype(kvc.v.dtype)),
+                    kvc.slot_pos.at[:, slots].set(
+                        jnp.broadcast_to(sp, (B, wcap))))
             o = A.train_attention(q, k, v, window=w)
             xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1))
             h = L.norm(lp["ln2"], xc)
@@ -585,7 +701,7 @@ class Model:
         def fill_global(lp, xc, kvc):
             h = L.norm(lp["ln1"], xc)
             q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
-            kv2 = A.cache_prefill(kvc, k, v)
+            kv2 = A.cache_prefill(kvc, k, v, valid_len=valid_len)
             o = A.train_attention(q, k, v, window=0)
             xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1))
             h = L.norm(lp["ln2"], xc)
@@ -648,3 +764,79 @@ class Model:
             x, mt = jax.lax.scan(mamba_body, x, params["tail"])
             new_cache["mamba_t"] = mt
         return x, new_cache
+
+    # ------------------------------------------------- paged suffix prefill
+    def prefill_suffix(self, params, tokens, cache, bt_row, valid_len, *,
+                       n_shared):
+        """Prefill a prompt *suffix* against ``n_shared`` already-populated
+        prefix blocks of a paged cache (prefix sharing: the shared blocks'
+        KV is reused, their prefill FLOPs are skipped entirely).
+
+        ``tokens`` (1, S_pad) is the suffix padded to a bucket length
+        (S_pad a multiple of block_size), ``bt_row`` (max_blocks,) the
+        row's block table, ``valid_len`` (traced) the real suffix length;
+        ``n_shared`` is static — each (n_shared, S_pad) pair compiles once.
+        Suffix queries attend [shared prefix || suffix] via the causal
+        ``q_offset`` path; suffix KV (pad garbage included — masked by the
+        ``j <= pos`` clock until decode overwrites it) scatters into the
+        row's private blocks.  Returns (logits at valid_len-1, new cache).
+
+        Uniform-attention families only: grouped-local rings and SSM/hybrid
+        recurrent state are per-row and unshareable, so those families
+        admit through the full dense-row prefill + block pack instead."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or self._grouped_local():
+            raise ValueError(
+                f"prefix-shared suffix prefill requires a uniform "
+                f"full-attention stack, not family {cfg.family!r}")
+        pk = cache["kv"]
+        bs = pk.k.shape[2]
+        start = n_shared * bs
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        x = L.embed(params["embed"], tokens)
+        B, Spad, _ = x.shape
+        assert B == 1 and Spad % bs == 0, (B, Spad, bs)
+        nsb = Spad // bs
+        assert n_shared + nsb <= bt_row.shape[0], (n_shared, nsb)
+        positions = start + jnp.broadcast_to(jnp.arange(Spad)[None],
+                                             (B, Spad))
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(positions, cfg.d_model, x.dtype)
+        sfx_ids = bt_row[n_shared:n_shared + nsb]         # (nsb,) static slice
+        ok = sfx_ids >= 0
+        safe = jnp.where(ok, sfx_ids, 0)                  # 0 = scratch block
+
+        def body(xc, lp, st):
+            kp, vp = st                                   # (nb, bs, KV, hd)
+            h = L.norm(lp["ln1"], xc)
+            q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
+            if n_shared:
+                pre_ids = bt_row[:n_shared]
+                kf = jnp.concatenate(
+                    [kp[pre_ids].reshape(1, start, KV, hd).astype(k.dtype),
+                     k], axis=1)
+                vf = jnp.concatenate(
+                    [vp[pre_ids].reshape(1, start, KV, hd).astype(v.dtype),
+                     v], axis=1)
+            else:
+                kf, vf = k, v
+            o = A.causal_attention(q, kf, vf, window=0, q_offset=start)
+            # unmapped (pad-region) blocks collapse onto the never-read
+            # scratch block, so the scatter needs no read-back select
+            kp = kp.at[safe].set(
+                k[0].reshape(nsb, bs, KV, hd).astype(kp.dtype))
+            vp = vp.at[safe].set(
+                v[0].reshape(nsb, bs, KV, hd).astype(vp.dtype))
+            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Spad, -1))
+            h = L.norm(lp["ln2"], xc)
+            if "moe" in lp:
+                xc = xc + M.moe_apply(lp["moe"], h, cfg)
+            else:
+                xc = xc + L.mlp(lp["mlp"], h, cfg.mlp)
+            return xc, (kp, vp)
+
+        x, (ks, vs) = _scan_with_state(body, x, params["layers"],
+                                       (pk.k, pk.v), cfg.n_layers)
+        xl = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+        logits = self._logits(params, xl)
+        return logits, {"kv": A.PagedKVCache(ks, vs, pk.block_tables)}

@@ -1,22 +1,34 @@
-"""Batched serving engines: continuous batching (default) + static cohorts.
+"""Batched serving engines: paged + continuous batching + static cohorts.
 
 ``Engine`` is a vLLM-style slot-pool scheduler built on the per-row cache
 clocks in ``models/attention.py``: the KV cache is one persistent batched
 allocation with ``max_batch`` slots, each slot running at its own absolute
 position (``pos`` is a (B,) vector through the jit'd decode step).  New
 requests are admitted into free slots mid-flight — a B=1 jit'd prefill
-fills a fresh cache row which is scattered into the slot's row of the
-batched cache — and slots retire independently on EOS / token budget, so a
-finished request never burns decode steps into a discard buffer and the
-next queued request takes its slot on the same tick.  Sampling (argmax +
-per-slot-temperature categorical) runs inside the jit'd decode step; the
-scheduler syncs exactly one (B,) token vector per tick instead of issuing
-a per-request ``int(argmax)`` host round-trip.
+(padded to a power-of-two bucket so the jit cache holds O(log L) entries,
+not one per distinct prompt length) fills a fresh cache row which is
+scattered into the slot's row of the batched cache — and slots retire
+independently on EOS / token budget, so a finished request never burns
+decode steps into a discard buffer and the next queued request takes its
+slot on the same tick.  Sampling (argmax + per-slot-temperature
+categorical) runs inside the jit'd decode step; the scheduler syncs
+exactly one (B,) token vector per tick instead of issuing a per-request
+``int(argmax)`` host round-trip.
+
+``PagedEngine`` replaces the per-slot dense KV rings with a global block
+pool (``models/attention.PagedKVCache``): slots hold block *tables*, a
+host-side refcounted ``BlockAllocator`` hands out physical blocks on
+demand, and a ``PrefixCache`` maps full prompt-prefix blocks (keyed by
+their exact token chain) to pool blocks so identical system prompts are
+prefilled and stored once — admission reuses full hits and computes only
+the private tail (the copy-on-write boundary).  KV memory then scales
+with *live tokens*, not ``max_batch x capacity`` worst case.
 
 ``StaticEngine`` keeps the old equal-length-cohort lockstep scheduler as
-the comparison baseline (``benchmarks/bench_serving.py`` measures both).
+the comparison baseline (``benchmarks/bench_serving.py`` measures all
+three).
 
-Both engines work with dense or OAC-quantized params for every assigned
+All engines work with dense or OAC-quantized params for every assigned
 architecture.  Pass a ``repro.dist`` ShardingPlan to run prefill/decode
 under a mesh (tensor-parallel serving); without one the engine is
 single-device.
@@ -33,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
+from repro.models.attention import KVCache, PagedKVCache
 
 
 @dataclasses.dataclass
@@ -64,6 +77,11 @@ def cache_batch_axes(model, capacity):
             for x, y in zip(jax.tree.leaves(s2), jax.tree.leaves(s3))]
 
 
+def _serve_shape(capacity: int, max_batch: int):
+    from repro.configs.base import ShapeConfig
+    return ShapeConfig("serve", capacity, max_batch, "decode")
+
+
 def _sample_tokens(logits, temps, key):
     """Batched on-device sampling: logits (B,V), temps (B,) -> (B,) int32.
 
@@ -76,6 +94,131 @@ def _sample_tokens(logits, temps, key):
     safe_t = jnp.maximum(temps, 1e-6)[:, None]
     drawn = jax.vmap(jax.random.categorical)(keys, logits / safe_t)
     return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
+
+
+class BlockAllocator:
+    """Host-side refcounted physical-block allocator for the paged pool.
+
+    ``stripes`` > 1 enforces the flash-decode *stripe invariant*: the pool
+    is split into ``stripes`` contiguous partitions (matching the tp shards
+    of the block-sharded pool) and ``alloc(stripe=t)`` only hands out
+    partition-t blocks, so logical block ``lb`` — which the attention
+    shard_map assigns to shard ``lb // (max_blocks/T)`` — is always backed
+    by that shard's local slab.  The first block of every partition is
+    reserved as that shard's write scratch and never allocated.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, stripes: int = 1):
+        assert num_blocks % stripes == 0, (num_blocks, stripes)
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.stripes = stripes
+        per = num_blocks // stripes
+        self.reserved = {t * per for t in range(stripes)}
+        # LIFO free lists per stripe (hot blocks reused first)
+        self.free = [[b for b in range(t * per, (t + 1) * per)
+                      if b not in self.reserved][::-1]
+                     for t in range(stripes)]
+        self.refcount: Dict[int, int] = {}
+
+    def stripe_of(self, block: int) -> int:
+        return block // (self.num_blocks // self.stripes)
+
+    def alloc(self, stripe: int = 0) -> Optional[int]:
+        if not self.free[stripe]:
+            return None
+        b = self.free[stripe].pop()
+        self.refcount[b] = 1
+        return b
+
+    def incref(self, block: int):
+        self.refcount[block] += 1
+
+    def decref(self, block: int):
+        self.refcount[block] -= 1
+        if self.refcount[block] == 0:
+            del self.refcount[block]
+            self.free[self.stripe_of(block)].append(block)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return len(self.refcount)
+
+    @property
+    def blocks_free(self) -> int:
+        return sum(len(f) for f in self.free)
+
+
+class PrefixCache:
+    """Exact-match prompt-prefix cache: full block -> pool block id.
+
+    An entry's key is the *entire token chain* up to and including that
+    block (``prompt[:(j+1)*bs].tobytes()``), so a hit certifies the whole
+    prefix matches — KV at position p depends only on tokens 0..p, making
+    the cached block's contents bit-identical to a recompute.  The cache
+    holds one allocator ref per entry (blocks outlive their requests);
+    eviction is leaf-first (never orphan a child's parent chain) and only
+    takes entries no live request references (allocator refcount == 1),
+    oldest-touched first.
+    """
+
+    def __init__(self, alloc: BlockAllocator, block_size: int):
+        self.alloc = alloc
+        self.bs = block_size
+        self.entries: Dict[bytes, int] = {}
+        self.kids: Dict[bytes, int] = {}
+        self.lru: Dict[bytes, int] = {}
+        self._clock = 0
+
+    def _touch(self, key: bytes):
+        self._clock += 1
+        self.lru[key] = self._clock
+
+    def match(self, prompt: np.ndarray):
+        """Longest chain of full-block hits -> (n_blocks, [block ids])."""
+        blocks = []
+        for j in range(len(prompt) // self.bs):
+            key = prompt[:(j + 1) * self.bs].tobytes()
+            b = self.entries.get(key)
+            if b is None:
+                break
+            self._touch(key)
+            blocks.append(b)
+        return len(blocks), blocks
+
+    def insert(self, prompt: np.ndarray, table_row: np.ndarray,
+               n_from: int, n_to: int):
+        """Register blocks [n_from, n_to) of this prompt's chain (each
+        gains a cache-owned allocator ref)."""
+        for j in range(n_from, n_to):
+            key = prompt[:(j + 1) * self.bs].tobytes()
+            b = int(table_row[j])
+            if key in self.entries or b < 0:
+                continue
+            self.entries[key] = b
+            self.alloc.incref(b)
+            self._touch(key)
+            if j > 0:
+                pkey = prompt[:j * self.bs].tobytes()
+                self.kids[pkey] = self.kids.get(pkey, 0) + 1
+
+    def evict_one(self, stripe: Optional[int] = None) -> bool:
+        cands = [(self.lru[k], k) for k, b in self.entries.items()
+                 if self.kids.get(k, 0) == 0
+                 and self.alloc.refcount.get(b) == 1
+                 and (stripe is None or self.alloc.stripe_of(b) == stripe)]
+        if not cands:
+            return False
+        _, key = min(cands)
+        b = self.entries.pop(key)
+        del self.lru[key]
+        if len(key) > self.bs * 4:            # int32 tokens: 4 bytes each
+            pkey = key[:-self.bs * 4]
+            self.kids[pkey] -= 1
+            if not self.kids[pkey]:
+                del self.kids[pkey]
+        self.alloc.decref(b)
+        return True
 
 
 class _EngineBase:
@@ -93,8 +236,7 @@ class _EngineBase:
         self.key = jax.random.PRNGKey(seed)
         self.ctx = None
         if plan is not None:
-            from repro.configs.base import ShapeConfig
-            c = plan.ctx(ShapeConfig("serve", capacity, max_batch, "decode"))
+            c = plan.ctx(_serve_shape(capacity, max_batch))
             # admission batches can be smaller than max_batch, so keep the
             # batch replicated: only the params/cache layouts (tp) are pinned
             self.ctx = dataclasses.replace(c, batch_spec=None)
@@ -106,10 +248,10 @@ class _EngineBase:
         if self.ctx is None:
             return fn
 
-        def wrapped(*args):
+        def wrapped(*args, **kwargs):
             from repro.dist import ctx as dctx
             with dctx.use(self.ctx):
-                return fn(*args)
+                return fn(*args, **kwargs)
         return wrapped
 
     def submit(self, prompt, **kw) -> Request:
@@ -146,16 +288,23 @@ class Engine(_EngineBase):
         self._temps = np.zeros(B, np.float32)
         self._next_tok = np.zeros(B, np.int32)   # token each slot feeds next
         self.ticks = 0
-        self._cache = self.model.init_cache(B, capacity, dtype=jnp.float32)
-        cache_sh = None
+        # bucketed admission keeps the prefill jit cache at O(log L)
+        # entries; recurrent families (ssm/hybrid) thread state through
+        # every position, so padding would poison their carried state —
+        # they prefill at exact length (one compile per distinct length)
+        self._bucketable = cfg.family not in ("ssm", "hybrid")
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_skipped = 0
+        self._cache = self._init_device_cache()
+        self._cache_sh = None
         if plan is not None:
             # pin the persistent cache to the plan's layout so per-slot
             # insertion updates in place instead of bouncing the whole
             # cache between layouts every admission
-            cache_sh = plan.cache_shardings(
-                self.model.init_cache(B, capacity, abstract=True), self.ctx)
-            self._cache = jax.device_put(self._cache, cache_sh)
-        self._insert = self._make_insert(cache_sh)
+            self._cache_sh = plan.cache_shardings(self._abstract_cache(),
+                                                  self.ctx)
+            self._cache = jax.device_put(self._cache, self._cache_sh)
+        self._insert = self._make_insert(self._cache_sh)
         # the cache is donated through every step so the persistent batched
         # allocation updates in place instead of being copied per tick
         # (same contract as dist.steps.build_step's decode cell)
@@ -163,6 +312,14 @@ class Engine(_EngineBase):
         self._first = jax.jit(_sample_tokens)
 
     # ------------------------------------------------------------- jit fns
+    def _init_device_cache(self):
+        return self.model.init_cache(self.max_batch, self.capacity,
+                                     dtype=jnp.float32)
+
+    def _abstract_cache(self):
+        return self.model.init_cache(self.max_batch, self.capacity,
+                                     abstract=True)
+
     def _make_decode(self):
         model, with_ctx = self.model, self._with_ctx
 
@@ -206,6 +363,35 @@ class Engine(_EngineBase):
         return (r.eos is not None and tok == r.eos) or \
             len(r.out) >= r.max_tokens or pos >= self.capacity - 1
 
+    def _bucket(self, S: int) -> int:
+        """Power-of-two admission bucket (>= 8, clamped to capacity)."""
+        return min(max(8, 1 << (S - 1).bit_length()), self.capacity)
+
+    def _dense_row_prefill(self, r: Request):
+        """B=1 prefill into a fresh dense cache row (bucket-padded when
+        the family allows).  Returns (logits (1,1,V), row cache)."""
+        S = len(r.prompt)
+        row = self.model.init_cache(1, self.capacity, dtype=jnp.float32)
+        if self._bucketable:
+            Sp = self._bucket(S)
+            toks = np.zeros((1, Sp), np.int32)
+            toks[0, :S] = r.prompt
+            logits, row, _ = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, row,
+                jnp.asarray(S, jnp.int32))
+        else:
+            logits, row, _ = self._prefill(
+                self.params, {"tokens": jnp.asarray(r.prompt[None])}, row)
+        return logits, row
+
+    def _admit_prefill(self, r: Request, i: int):
+        """B=1 prefill + scatter the row into slot ``i`` of the batched
+        cache.  Returns the (1,1,V) logits of the last prompt position."""
+        logits, row = self._dense_row_prefill(r)
+        self._cache = self._insert(self._cache, row, i)
+        self.prefill_tokens_computed += len(r.prompt)
+        return logits
+
     def _admit(self):
         """Fill free slots from the queue (FIFO): B=1 prefill, scatter the
         row into the batched cache, sample the first token on device."""
@@ -214,10 +400,7 @@ class Engine(_EngineBase):
                 return
             r = self.queue.pop(0)
             S = len(r.prompt)
-            row = self.model.init_cache(1, self.capacity, dtype=jnp.float32)
-            logits, row, _ = self._prefill(
-                self.params, {"tokens": jnp.asarray(r.prompt[None])}, row)
-            self._cache = self._insert(self._cache, row, i)
+            logits = self._admit_prefill(r, i)
             self.key, sub = jax.random.split(self.key)
             t = int(self._first(logits[:, 0],
                                 jnp.full((1,), r.temperature, jnp.float32),
@@ -233,15 +416,24 @@ class Engine(_EngineBase):
             self._temps[i] = r.temperature
             self._next_tok[i] = t
 
+    def _pre_tick(self, active):
+        """Hook before the device step (paged engine maps write blocks)."""
+
+    def _decode_extra_args(self):
+        """Extra trailing args for the jit'd decode step (paged: tables)."""
+        return ()
+
     def _tick(self):
         """One lockstep device step for every slot; one host sync."""
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return
+        self._pre_tick(active)
         self.key, sub = jax.random.split(self.key)
         toks, self._cache = self._decode(
             self.params, jnp.asarray(self._next_tok[:, None]), self._cache,
-            jnp.asarray(self._pos), jnp.asarray(self._temps), sub)
+            jnp.asarray(self._pos), jnp.asarray(self._temps), sub,
+            *self._decode_extra_args())
         toks = np.asarray(toks)                  # the tick's single sync
         self.ticks += 1
         for i in active:
@@ -259,6 +451,298 @@ class Engine(_EngineBase):
             self._admit()
             self._tick()
         return self
+
+
+def _cache_nodes(tree):
+    """Flatten a model cache pytree at cache-node granularity (KVCache /
+    PagedKVCache stay whole; SSM/RWKV states recurse to arrays)."""
+    return jax.tree.flatten(
+        tree, is_leaf=lambda n: isinstance(n, (KVCache, PagedKVCache)))
+
+
+class PagedEngine(Engine):
+    """Slot-pool scheduler over a paged KV pool with prefix sharing.
+
+    Inherits the whole continuous-batching scheduler from ``Engine`` and
+    swaps the storage layer: full-context KV lives in a global block pool,
+    slots hold host-side block tables (passed into the jit'd decode step
+    each tick, so allocation is pure host bookkeeping), and blocks are
+    refcounted so identical prompt prefixes are stored once.
+
+    Admission policy (uniform-attention families):
+      1. hash the prompt's full blocks against the ``PrefixCache`` and take
+         the longest chain of hits, capped at the last block boundary
+         <= S-1 (at least one suffix token must run to produce the first
+         logits);
+      2. the shared blocks are mapped read-only into the slot's table
+         (+1 ref each) and their prefill is *skipped entirely*;
+      3. the remaining tail is computed by ``Model.prefill_suffix`` into
+         freshly-owned blocks — the copy-on-write boundary: partial blocks
+         are never shared in place, a private copy is always materialized
+         (as a recompute, which is cheaper than copy + it is needed for
+         the first-token logits anyway);
+      4. the prompt's full blocks are registered back into the cache.
+    Decode writes only ever touch private blocks (positions >= S land past
+    every shared full block); ``_ensure_block`` still guards the invariant
+    with a device block copy should a shared block become a write target.
+    Grouped-local / hybrid / ssm families admit through the dense-row
+    prefill and pack the row into pool blocks (their window rings and
+    recurrent state are per-row and unshareable — see ``Model.init_cache``).
+    Retirement drops one ref per mapped block; blocks whose refs hit zero
+    return to the pool, so capacity is freed per-block, not per-slot.
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 capacity: int = 512, seed: int = 0, plan=None,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 share_prefixes: bool = True):
+        assert capacity % block_size == 0, (capacity, block_size)
+        self.block_size = block_size
+        self.max_blocks = capacity // block_size
+        stripes = 1
+        if plan is not None:
+            shp = _serve_shape(capacity, max_batch)
+            if plan.ctx(shp).attn_decode_mode == "flash":
+                stripes = plan.tp_size
+                assert self.max_blocks % stripes == 0, \
+                    (self.max_blocks, stripes)
+        if num_blocks is None:
+            # safe default: worst case + one scratch per stripe (no memory
+            # win — pass a smaller pool to oversubscribe; the benchmark
+            # reports the blocks actually touched either way)
+            num_blocks = max_batch * self.max_blocks + stripes
+        num_blocks += (-num_blocks) % stripes
+        self.num_blocks = num_blocks
+        self.alloc = BlockAllocator(num_blocks, block_size, stripes=stripes)
+        self.prefix = PrefixCache(self.alloc, block_size)
+        self._tables = np.full((max_batch, self.max_blocks), -1, np.int32)
+        self.shared_block_hits = 0
+        self.cow_copies = 0
+        self.peak_blocks_in_use = 0
+        self.blocks_held_at_retire: List[int] = []
+        super().__init__(cfg, params, max_batch=max_batch,
+                         capacity=capacity, seed=seed, plan=plan)
+        nodes, _ = _cache_nodes(self._abstract_cache())
+        self._has_paged = any(isinstance(n, PagedKVCache) for n in nodes)
+        self._share = (share_prefixes and self._has_paged
+                       and cfg.family in ("dense", "moe")
+                       and not self.model._grouped_local())
+        self._sfx_jits: Dict[int, object] = {}
+        self._copy_block = jax.jit(self._make_copy_block(),
+                                   donate_argnums=(0,))
+
+    # ------------------------------------------------------------- jit fns
+    def _init_device_cache(self):
+        return self.model.init_cache(
+            self.max_batch, self.capacity, dtype=jnp.float32, paged=True,
+            block_size=self.block_size, num_blocks=self.num_blocks)
+
+    def _abstract_cache(self):
+        return self.model.init_cache(
+            self.max_batch, self.capacity, abstract=True, paged=True,
+            block_size=self.block_size, num_blocks=self.num_blocks)
+
+    def _make_decode(self):
+        model, with_ctx = self.model, self._with_ctx
+
+        def step(params, tokens, cache, pos, temps, key, block_tables):
+            logits, cache = with_ctx(model.decode_step)(
+                params, tokens, cache, pos, block_tables)
+            tok = _sample_tokens(logits[:, 0], temps, key)
+            return tok, cache
+        return step
+
+    def _make_copy_block(self):
+        def copy(cache, src, dst):
+            nodes, td = _cache_nodes(cache)
+            out = [PagedKVCache(n.k.at[:, dst].set(n.k[:, src]),
+                                n.v.at[:, dst].set(n.v[:, src]),
+                                n.block_tables)
+                   if isinstance(n, PagedKVCache) else n for n in nodes]
+            return jax.tree.unflatten(td, out)
+        return copy
+
+    def _make_insert(self, cache_sh=None):
+        """jit'd pack of a B=1 *dense-row* prefill into the paged cache:
+        paged nodes scatter whole blocks into the pool via the slot's
+        table (unmapped entries spill to the scratch block), dense nodes
+        (local rings, recurrent state, row clocks) scatter along their
+        structurally-found batch axis exactly as the dense engine does."""
+        big2, _ = _cache_nodes(self.model.init_cache(
+            2, self.capacity, abstract=True, paged=True,
+            block_size=self.block_size, num_blocks=self.num_blocks))
+        big3, _ = _cache_nodes(self.model.init_cache(
+            3, self.capacity, abstract=True, paged=True,
+            block_size=self.block_size, num_blocks=self.num_blocks))
+        axes = [None if isinstance(a, PagedKVCache) else jax.tree.map(
+            lambda x, y: next(i for i, (p, q) in
+                              enumerate(zip(x.shape, y.shape)) if p != q),
+            a, b) for a, b in zip(big2, big3)]
+        bs, nblk = self.block_size, self.max_blocks
+
+        def insert(big, row, slot, table_row):
+            bn, td = _cache_nodes(big)
+            rn, _ = _cache_nodes(row)
+            safe = jnp.where(table_row >= 0, table_row, 0)
+            out = []
+            for node, rnode, ax in zip(bn, rn, axes):
+                if isinstance(node, PagedKVCache):
+                    def pack(pool, rowkv):
+                        # pool (n, nb, bs, KV, hd); rowkv (n, 1, cap, KV, hd)
+                        # unmapped blocks collapse onto the never-read
+                        # scratch block: no read-back select needed
+                        n = pool.shape[0]
+                        vals = rowkv[:, 0].reshape(
+                            n, nblk, bs, *pool.shape[3:]).astype(pool.dtype)
+                        return pool.at[:, safe].set(vals)
+                    bt2 = node.block_tables.at[slot].set(table_row)
+                    out.append(PagedKVCache(pack(node.k, rnode.k),
+                                            pack(node.v, rnode.v), bt2))
+                else:
+                    out.append(jax.tree.map(
+                        lambda b, r, a: jax.lax.dynamic_update_slice_in_dim(
+                            b, r.astype(b.dtype), slot, axis=a),
+                        node, rnode, ax))
+            return jax.tree.unflatten(td, out)
+        if cache_sh is None:
+            return jax.jit(insert, donate_argnums=(0,))
+        return jax.jit(insert, donate_argnums=(0,), out_shardings=cache_sh)
+
+    def _sfx_jit(self, n_shared: int):
+        """Per-``n_shared`` jit of the prefix-shared suffix prefill (the
+        suffix pads to bucket lengths, so each (n_shared, bucket) pair
+        compiles once)."""
+        fn = self._sfx_jits.get(n_shared)
+        if fn is None:
+            model, with_ctx = self.model, self._with_ctx
+
+            def sfx(params, tokens, cache, table_row, valid_len):
+                return with_ctx(model.prefill_suffix)(
+                    params, tokens, cache, table_row, valid_len,
+                    n_shared=n_shared)
+            kw = {} if self._cache_sh is None else \
+                {"out_shardings": (None, self._cache_sh)}
+            fn = jax.jit(sfx, donate_argnums=(2,), **kw)
+            self._sfx_jits[n_shared] = fn
+        return fn
+
+    # ----------------------------------------------------- block management
+    def _alloc_block(self, lb: int) -> int:
+        stripe = 0 if self.alloc.stripes == 1 else \
+            lb // (self.max_blocks // self.alloc.stripes)
+        b = self.alloc.alloc(stripe)
+        while b is None and self.prefix.evict_one(stripe):
+            b = self.alloc.alloc(stripe)
+        if b is None:
+            raise RuntimeError(
+                f"KV block pool exhausted ({self.num_blocks} blocks, "
+                f"{self.alloc.blocks_in_use} live): admit fewer requests "
+                f"or grow num_blocks (preemption is future work)")
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.alloc.blocks_in_use)
+        return b
+
+    def _ensure_block(self, i: int, pos: int):
+        """Map the block that position ``pos`` will write this tick.
+        Shared targets get a private copy first (copy-on-write) — by
+        policy decode never writes a shared full block, but the refcount
+        guard keeps the invariant local, not global."""
+        lb = pos // self.block_size
+        if lb >= self.max_blocks:
+            return
+        b = int(self._tables[i, lb])
+        if b < 0:
+            self._tables[i, lb] = self._alloc_block(lb)
+        elif self.alloc.refcount[b] > 1:
+            nb = self._alloc_block(lb)
+            self._cache = self._copy_block(self._cache, jnp.asarray(b),
+                                           jnp.asarray(nb))
+            self.alloc.decref(b)
+            self._tables[i, lb] = nb
+            self.cow_copies += 1
+
+    # ----------------------------------------------------------- scheduler
+    def _release_row(self, trow):
+        """Drop this row's ref on every mapped block (failed admission /
+        retirement)."""
+        for b in trow[trow >= 0]:
+            self.alloc.decref(int(b))
+
+    def _admit_prefill(self, r: Request, i: int):
+        if not self._share:
+            # dense-row prefill (bucketed when the family allows), then
+            # pack the row's full-context KV into freshly-owned blocks
+            S = len(r.prompt)
+            logits, row = self._dense_row_prefill(r)
+            trow = np.full(self.max_blocks, -1, np.int32)
+            if self._has_paged:
+                try:
+                    for j in range(-(-S // self.block_size)):
+                        trow[j] = self._alloc_block(j)
+                except RuntimeError:
+                    # release partial acquisitions and put the request
+                    # back so a catcher can drain slots and retry
+                    self._release_row(trow)
+                    self.queue.insert(0, r)
+                    raise
+            self._cache = self._insert(self._cache, row, i,
+                                       jnp.asarray(trow))
+            self._tables[i] = trow
+            self.prefill_tokens_computed += S
+            return logits
+        # ---- prefix-shared admission (uniform-attention families)
+        bs = self.block_size
+        S = len(r.prompt)
+        n_shared, shared = self.prefix.match(r.prompt)
+        n_shared = min(n_shared, (S - 1) // bs)   # >= 1 suffix token
+        shared = shared[:n_shared]
+        suffix = r.prompt[n_shared * bs:]
+        Ssfx = len(suffix)
+        # the suffix pads to a bucket for the jit cache, but only blocks
+        # covering *real* tokens are allocated — prefill_suffix spills the
+        # pad region's writes to the scratch block, and decode growth maps
+        # later blocks on demand
+        Sp = min(self._bucket(Ssfx), self.capacity - n_shared * bs)
+        Sp += (-Sp) % bs                          # whole blocks
+        trow = np.full(self.max_blocks, -1, np.int32)
+        try:
+            for j, b in enumerate(shared):
+                self.alloc.incref(b)
+                trow[j] = b
+            for j in range(n_shared, n_shared + -(-Ssfx // bs)):
+                trow[j] = self._alloc_block(j)
+        except RuntimeError:
+            self._release_row(trow)
+            self.queue.insert(0, r)
+            raise
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, :Ssfx] = suffix
+        logits, self._cache = self._sfx_jit(n_shared)(
+            self.params, jnp.asarray(toks), self._cache, jnp.asarray(trow),
+            jnp.asarray(Ssfx, jnp.int32))
+        self._tables[i] = trow
+        # register this prompt's newly-computed full blocks for reuse
+        self.prefix.insert(r.prompt, trow, n_shared, S // bs)
+        self.prefill_tokens_skipped += n_shared * bs
+        self.shared_block_hits += n_shared
+        self.prefill_tokens_computed += Ssfx
+        return logits
+
+    def _retire(self, i: int):
+        if self._has_paged:
+            self.blocks_held_at_retire.append(
+                int((self._tables[i] >= 0).sum()))
+            self._release_row(self._tables[i])
+            self._tables[i] = -1
+        super()._retire(i)
+
+    def _pre_tick(self, active):
+        if self._has_paged:
+            for i in active:
+                self._ensure_block(i, int(self._pos[i]))
+
+    def _decode_extra_args(self):
+        return (jnp.asarray(self._tables),)
 
 
 class StaticEngine(_EngineBase):

@@ -151,6 +151,88 @@ def test_flash_decode_vector_clock_matches_dense():
     assert "FLASHVEC" in out
 
 
+def test_paged_flash_decode_matches_unsharded():
+    """Block-parallel flash decoding over a tp-sharded paged pool must
+    match the unsharded paged reference, given stripe-invariant tables
+    (logical block lb backed by pool partition lb // (max_blocks/T))."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist import ctx as dctx
+        from repro.dist.ctx import DistCtx
+        from repro.models import attention as A
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, KV, H, Dh, bs, mb, T = 4, 2, 4, 8, 4, 8, 4
+        nb = 32                               # 8 blocks per stripe
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(k1, (B, 1, H, Dh))
+        kn = jax.random.normal(k2, (B, 1, KV, Dh))
+        vn = jax.random.normal(k3, (B, 1, KV, Dh))
+        pos = jnp.asarray([9, 3, 6, 0])       # rows at mixed clocks
+        # stripe-invariant tables: lb -> partition lb // (mb/T); local
+        # block 0 of each partition reserved as scratch
+        bt = np.full((B, mb), -1, np.int32)
+        nxt = {t: 1 for t in range(T)}
+        for b in range(B):
+            for lb in range(int(pos[b]) // bs + 1):
+                t = lb // (mb // T)
+                bt[b, lb] = t * (nb // T) + nxt[t]; nxt[t] += 1
+        cache = A.init_paged_cache(B, nb, bs, mb, KV, Dh,
+                                   dtype=jnp.float32)
+        kall = jax.random.normal(k4, (B, mb * bs, KV, Dh))
+        cache = A.PagedKVCache(
+            cache.k, cache.v, jnp.asarray(bt))
+        cache = A.cache_prefill(cache, kall, kall)   # mapped blocks filled
+
+        ref_cache = A.cache_write(cache, kn, vn, pos)
+        ref = A.decode_attention(q, ref_cache, pos)
+
+        ctx = DistCtx(mesh=mesh, dp=("data",), tp="model", batch_spec=None,
+                      attn_decode_mode="flash")
+        with jax.set_mesh(mesh):
+            with dctx.use(ctx):
+                got, got_cache = jax.jit(
+                    lambda *a: A.serve_attention_write(*a))(
+                    q, kn, vn, cache, pos)
+        err = float(jnp.abs(got - ref).max())
+        # the pools must agree everywhere except the per-shard scratch
+        # blocks (ids t * nb/T), which absorb non-owner writes
+        scratch = [t * (nb // T) for t in range(T)]
+        live = np.setdiff1d(np.arange(nb), scratch)
+        for a, b in ((got_cache.k, ref_cache.k), (got_cache.v, ref_cache.v)):
+            np.testing.assert_array_equal(np.asarray(a)[live],
+                                          np.asarray(b)[live])
+        print("PAGEDFLASH", err)
+        assert err < 1e-5, err
+    """)
+    assert "PAGEDFLASH" in out
+
+
+def test_paged_decode_cells_lower_and_compile():
+    """build_step(paged=True) decode cells lower + compile under TP for
+    both decode modes and a non-uniform family (the production 16x16 cell
+    runs the same path via launch/dryrun.py --paged)."""
+    out = run_with_devices("""
+        import jax
+        from repro.configs import get_smoke
+        from repro.configs.base import ShapeConfig
+        from repro.dist.steps import build_step
+
+        cells = [("qwen2-1.5b", (2, 4)),      # kv=2, tp=4 -> flash mode
+                 ("gemma3-27b", (2, 2)),      # kv=2, tp=2 -> dense mode
+                 ("zamba2-7b", (2, 2))]       # hybrid: paged kv + ssm state
+        for arch, dims in cells:
+            mesh = jax.make_mesh(dims, ("data", "model"))
+            cfg = get_smoke(arch)
+            shape = ShapeConfig("d", 256, 8, "decode")
+            with jax.set_mesh(mesh):
+                jitted, args, ctx = build_step(cfg, shape, mesh, paged=True)
+                jitted.lower(*args).compile()
+            print("PAGEDCELL", arch, ctx.attn_decode_mode)
+    """)
+    assert out.count("PAGEDCELL") == 3
+
+
 def test_seq_shard_attention_matches_local():
     out = run_with_devices("""
         import dataclasses, jax, jax.numpy as jnp
