@@ -1,4 +1,5 @@
-"""Serving benchmark: static cohorts vs continuous batching vs paged KV.
+"""Serving benchmark: static cohorts vs continuous batching vs paged KV
+vs quantized serving (packed weights + int8 paged KV).
 
 Replays two workloads through the engines:
 
@@ -9,17 +10,25 @@ Replays two workloads through the engines:
     continuous-dense engine here (CI tripwire): block tables buy memory,
     not throughput, and must not cost throughput either.
   * shared_prefix: every request carries the same system prompt (the
-    dominant million-user traffic shape) — continuous vs paged, reporting
-    tokens/sec, KV bytes per request, and prefill tokens skipped by
-    prefix sharing (CI tripwire: >= 30% of prefill tokens skipped).
+    dominant million-user traffic shape) — continuous vs paged (fp and
+    int8-KV, plus an RTN-w4 paged row), reporting tokens/sec, KV bytes per
+    request, and prefill tokens skipped by prefix sharing (CI tripwires:
+    >= 30% of prefill tokens skipped; int8 paged KV bytes/request <= 0.6x
+    the fp16-equivalent paged baseline).
+
+The quantized section also reports **packed-weight bytes per device under
+tp** (over a device-free AbstractMesh, via ``qserve.report``): sharded
+planes report ~total/tp, replicated planes would report ~total — the
+tripwire that proves plane sharding is real.
 
 Each cell gets one untimed warmup pass so jit compilation does not pollute
 the walls.
 
-    python benchmarks/bench_serving.py [--smoke] [--out BENCH_serving.json]
+    python benchmarks/bench_serving.py [--smoke | --quant-smoke]
+                                       [--out BENCH_serving.json]
 
-Emits ``BENCH_serving.json``; CI runs the --smoke invocation on the tiny
-config as a regression tripwire.
+Emits ``BENCH_serving.json``; CI runs the --smoke and --quant-smoke
+invocations on the tiny config as regression tripwires.
 """
 import argparse
 import json
@@ -48,6 +57,13 @@ from repro.serving.quantized import quantize_params_rtn     # noqa: E402
 # far below this)
 PAGED_UNIFORM_FLOOR = 0.85
 MIN_PREFIX_SKIP_FRACTION = 0.30
+# int8 paged KV bytes/request vs the fp16-equivalent paged baseline
+# (pool blocks only -- window rings / recurrent state stay dense fp by
+# design and are excluded from both sides): the analytic ratio is
+# (head_dim + 2) / (2 * head_dim) -- 0.5625 at the toy head_dim=16,
+# 0.508 at head_dim=128 -- so 0.6 trips on any layout regression
+# (scale-plane bloat, codes stored wider than int8)
+MAX_INT8_KV_RATIO = 0.60
 
 
 def workload(cfg, n_requests, seed=0):
@@ -73,10 +89,11 @@ def workload_shared_prefix(cfg, n_requests, prefix_len=48, seed=0):
     return out
 
 
-def kv_bytes_per_request(eng):
-    """Resident KV bytes attributable to one request: the paged engine
+def kv_bytes_split(eng):
+    """(dense bytes/request, paged-pool bytes/request).  The paged engine
     counts blocks actually held at retirement (pool bytes scale with live
-    tokens); dense engines reserve a full-capacity slot per request."""
+    tokens); dense engines reserve a full-capacity slot per request.
+    int8 pools count their code bytes plus the per-token scale planes."""
     cache = getattr(eng, "_cache", None)
     if cache is None:                 # static engine: per-cohort allocation
         cache = eng.model.init_cache(eng.max_batch, eng.capacity,
@@ -91,14 +108,22 @@ def kv_bytes_per_request(eng):
             # layer stack, k + v
             block_bytes += 2 * itm * n.k.shape[0] * int(
                 np.prod(n.k.shape[2:]))
+            if n.k_scale is not None:   # int8 pool: scale planes ride along
+                sitm = np.dtype(n.k_scale.dtype).itemsize
+                block_bytes += 2 * sitm * n.k_scale.shape[0] * int(
+                    np.prod(n.k_scale.shape[2:]))
         elif isinstance(n, KVCache):
             itm = np.dtype(n.k.dtype).itemsize
             B = n.k.shape[-4]
             dense_per_slot += 2 * itm * int(np.prod(n.k.shape)) / B
     held = getattr(eng, "blocks_held_at_retire", None)
-    if held:
-        return dense_per_slot + block_bytes * float(np.mean(held))
-    return dense_per_slot
+    paged = block_bytes * float(np.mean(held)) if held else 0.0
+    return dense_per_slot, paged
+
+
+def kv_bytes_per_request(eng):
+    dense, paged = kv_bytes_split(eng)
+    return dense + paged
 
 
 def run_workload(eng, reqs):
@@ -111,7 +136,9 @@ def run_workload(eng, reqs):
     wall = time.perf_counter() - t0
     toks = sum(len(r.out) for r in handles)
     lats = sorted(r.finish_wall for r in handles)
+    kv_dense, kv_paged = kv_bytes_split(eng)
     return {
+        "kv_paged_bytes_per_request": kv_paged,
         "wall_s": wall,
         "generated_tokens": toks,
         "tokens_per_s": toks / wall,
@@ -122,7 +149,7 @@ def run_workload(eng, reqs):
             getattr(eng, "prefill_tokens_skipped", 0) - skip0,
         "prefill_tokens_computed":
             getattr(eng, "prefill_tokens_computed", 0) - comp0,
-        "kv_bytes_per_request": kv_bytes_per_request(eng),
+        "kv_bytes_per_request": kv_dense + kv_paged,
     }
 
 
@@ -142,16 +169,84 @@ def bench_cell(name, make_engine, reqs):
     return res
 
 
+def bench_quantized(cfg, params, args, results, regressed, quantized=None):
+    """Quantized serving cells: int8 paged KV vs fp paged on the
+    shared-prefix workload, an RTN-w4 paged row, and the packed-weight
+    bytes-per-device report under virtual tp.  ``quantized`` is an
+    already-packed (params, skipped) pair when the caller has one (the
+    full run), else packed here."""
+    n = 8 if args.quant_smoke else args.requests
+    shared_reqs = workload_shared_prefix(cfg, n)
+    cells = results["cells"]
+
+    def paged(p, kv_bits=16):
+        return PagedEngine(cfg, p, max_batch=args.max_batch,
+                           capacity=args.capacity,
+                           block_size=args.block_size, kv_bits=kv_bits)
+
+    fp = bench_cell("shared/paged/fp-kv", lambda: paged(params), shared_reqs)
+    i8 = bench_cell("shared/paged/int8-kv", lambda: paged(params, 8),
+                    shared_reqs)
+    cells["shared_paged_fp_kv"] = fp
+    cells["shared_paged_int8_kv"] = i8
+    # pool blocks only (window rings / recurrent state stay dense fp by
+    # design); the engine stores fp pools in f32, so halve for the
+    # fp16-equivalent baseline the paper-level claim is against
+    fp16_equiv = fp["kv_paged_bytes_per_request"] / 2.0
+    ratio = i8["kv_paged_bytes_per_request"] / fp16_equiv
+    cells["int8_kv_bytes_ratio_vs_fp16"] = ratio
+    print(f"[bench_serving] int8 paged KV pool: "
+          f"{i8['kv_paged_bytes_per_request'] / 1024:.1f} KiB/req vs "
+          f"{fp16_equiv / 1024:.1f} KiB/req fp16-equiv "
+          f"({1 - ratio:.0%} reduction)")
+    if ratio > MAX_INT8_KV_RATIO:
+        regressed.append("int8_kv_bytes")
+        print(f"[bench_serving] FAIL: int8 paged KV bytes/request "
+              f"{ratio:.2f}x fp16 paged (> {MAX_INT8_KV_RATIO})")
+
+    # rtn-w4 packed weights through the paged engine (the quantized row)
+    if quantized is None:
+        quantized = quantize_params_rtn(
+            params, QuantConfig(wbits=args.wbits, group_size=32))
+    qp, skipped = quantized
+    cells[f"shared_paged_rtn_w{args.wbits}"] = bench_cell(
+        f"shared/paged/rtn-w{args.wbits}", lambda: paged(qp), shared_reqs)
+    cells["rtn_skipped_kernels"] = skipped
+
+    # packed-weight bytes per device under tp (AbstractMesh: layout-only)
+    from repro.dist.sharding import make_plan
+    from repro.serving.qserve.report import PACKED_SHARD_SLACK, \
+        abstract_tp_mesh, packed_plane_bytes
+    mesh = abstract_tp_mesh(args.tp)
+    plan = make_plan(cfg, mesh)
+    rep = packed_plane_bytes(qp, plan.param_shardings(qp))
+    rep["tp"] = plan.tp_size
+    cells["packed_plane_bytes"] = rep
+    print(f"[bench_serving] packed planes: {rep['total']} B total -> "
+          f"{rep['per_device']} B/device under tp={rep['tp']} "
+          f"(ratio {rep['ratio']:.3f})")
+    if rep["ratio"] > PACKED_SHARD_SLACK / rep["tp"]:
+        regressed.append("packed_planes_replicated")
+        print(f"[bench_serving] FAIL: packed planes look replicated under "
+              f"tp={rep['tp']} (per-device/total = {rep['ratio']:.3f})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="toy-llama")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI cell: fewer requests, no quantized runs")
+    ap.add_argument("--quant-smoke", action="store_true",
+                    help="tiny CI cell: ONLY the quantized-serving section "
+                         "(rtn-w4 paged, int8 KV, packed bytes/device)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--wbits", type=int, default=4)
+    ap.add_argument("--tp", type=int, default=4,
+                    help="virtual tp degree for the packed bytes/device "
+                         "report (AbstractMesh; no devices needed)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serving.json"))
     args = ap.parse_args(argv)
@@ -166,11 +261,23 @@ def main(argv=None):
     results = {"arch": cfg.name, "requests": n, "max_batch": args.max_batch,
                "capacity": args.capacity, "block_size": args.block_size,
                "cells": {}}
+
+    if args.quant_smoke:
+        regressed = []
+        bench_quantized(cfg, params, args, results, regressed)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[bench_serving] wrote {os.path.normpath(args.out)}")
+        if regressed:
+            sys.exit(1)
+        return results
+
     variants = [("dense", params)]
+    quantized = None
     if not args.smoke:
-        qp = quantize_params_rtn(
+        quantized = quantize_params_rtn(
             params, QuantConfig(wbits=args.wbits, group_size=32))
-        variants.append((f"rtn_w{args.wbits}", qp))
+        variants.append((f"rtn_w{args.wbits}", quantized[0]))
 
     def makers(p):
         return (("static", lambda: StaticEngine(
@@ -228,6 +335,9 @@ def main(argv=None):
         print(f"[bench_serving] FAIL: prefix sharing skipped only "
               f"{skip_frac:.0%} of prefill tokens "
               f"(< {MIN_PREFIX_SKIP_FRACTION:.0%})")
+
+    if not args.smoke:   # full run: quantized serving section too
+        bench_quantized(cfg, params, args, results, regressed, quantized)
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

@@ -36,8 +36,10 @@ def main():
     params = m.init(jax.random.PRNGKey(0))
     dense_bytes = utils.tree_size_bytes(params)
 
-    qp = quantize_params_rtn(params, QuantConfig(wbits=args.wbits,
-                                                 group_size=32))
+    qp, skipped = quantize_params_rtn(params, QuantConfig(wbits=args.wbits,
+                                                          group_size=32))
+    if skipped:
+        print(f"left fp (misaligned/tiny): {skipped}")
     q_bytes = utils.tree_size_bytes(qp)
     n_packed = sum(1 for v in jax.tree_util.tree_leaves(
         qp, is_leaf=lambda x: isinstance(x, QuantizedTensor))

@@ -140,17 +140,79 @@ class ShardingPlan:
             spec[dp_ax] = self.dp          # FSDP over the data axes
         return spec
 
+    def _qt_shardings(self, path: str, qt):
+        """Shardings for one packed ``QuantizedTensor`` node (qserve).
+
+        The packed code planes shard along the same logical axis as the fp
+        kernel they replace (the plan's tp decision for ``path``); the
+        grouped scale/zero stats follow along their group axis; the outlier
+        COO buffers replicate (global indices).  Only the tp axis is
+        honored — quantized params are the serving format, there is no
+        optimizer state to FSDP, and replicating the (tiny) stats over the
+        data axes keeps the decode cell collective-free."""
+        import dataclasses as _dc
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        stack = tuple(qt.planes[0].shape[:-2])
+        ns = len(stack)
+        base = self._param_spec(path, stack + tuple(qt.shape))
+        # keep only tp entries (drop dp/FSDP for packed serving params)
+        base = [e if e == self.tp else None for e in base]
+        stack_spec = base[:ns]
+        row_tp = base[ns] is not None        # contraction (d_in) axis
+        col_tp = base[ns + 1] is not None    # output (d_out) axis
+
+        def ns_of(arr, tail):
+            """NamedSharding for one field: stack spec + ``tail`` entries
+            for the trailing dims, dropping non-divisible axes."""
+            if arr is None:
+                return None
+            spec = list(stack_spec) + list(tail)
+            spec = [s if self._fits(s, d) else None
+                    for s, d in zip(spec, arr.shape)]
+            return NamedSharding(self.mesh, P(*spec))
+
+        row = self.tp if row_tp else None
+        col = self.tp if col_tp else None
+        planes = tuple(ns_of(p, (row, col)) for p in qt.planes)
+        rp = None
+        if qt.resid_planes is not None:
+            rp = tuple(ns_of(p, (row, col)) for p in qt.resid_planes)
+        return _dc.replace(
+            qt,
+            planes=planes,
+            # stats (GB, sg, d_out) / second-level (GB, d_out): the group-
+            # block axis follows a row-sharded kernel, d_out a col-sharded
+            q_scales=ns_of(qt.q_scales, (row, None, col)),
+            ss_scale=ns_of(qt.ss_scale, (row, col)),
+            ss_zero=ns_of(qt.ss_zero, (row, col)),
+            q_zeros=ns_of(qt.q_zeros, (row, None, col)),
+            zz_scale=ns_of(qt.zz_scale, (row, col)),
+            zz_zero=ns_of(qt.zz_zero, (row, col)),
+            out_rows=ns_of(qt.out_rows, (None,)),
+            out_cols=ns_of(qt.out_cols, (None,)),
+            out_vals=ns_of(qt.out_vals, (None,)),
+            resid_planes=rp,
+            resid_scales=ns_of(qt.resid_scales, (row, col)))
+
     def param_shardings(self, params):
         """NamedSharding pytree matching ``params`` (works on abstract or
-        concrete trees; unrecognized leaves — packed QuantizedTensor
-        planes, stats — replicate)."""
+        concrete trees).  Packed ``QuantizedTensor`` nodes shard their code
+        planes along the fp kernel's tp axis and their grouped stats along
+        the group axis (``_qt_shardings``); remaining unrecognized leaves
+        replicate."""
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro import utils
-        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        from repro.core.qformat import QuantizedTensor
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=lambda n: isinstance(n, QuantizedTensor))
         out = []
         for p, leaf in flat:
-            spec = self._param_spec(utils.path_str(p), leaf.shape)
-            out.append(NamedSharding(self.mesh, P(*spec)))
+            path = utils.path_str(p)
+            if isinstance(leaf, QuantizedTensor):
+                out.append(self._qt_shardings(path, leaf))
+            else:
+                spec = self._param_spec(path, leaf.shape)
+                out.append(NamedSharding(self.mesh, P(*spec)))
         return jax.tree_util.tree_unflatten(treedef, out)
 
     # -------------------------------------------------------------- batch
@@ -200,6 +262,20 @@ class ShardingPlan:
                 spec[nd - 2] = tp
             return NamedSharding(self.mesh, P(*spec))
 
+        def scale_like(x):
+            # (stack..., num_blocks, block_size, KV): int8-KV scale plane,
+            # sharded like the code pool it annotates (block dim under
+            # flash, KV heads under dense)
+            if x is None:
+                return None
+            nd = len(x.shape)
+            spec = [None] * nd
+            if flash:
+                spec[nd - 3] = tp if self._fits(tp, x.shape[nd - 3]) else None
+            elif self._fits(tp, x.shape[nd - 1]):
+                spec[nd - 1] = tp
+            return NamedSharding(self.mesh, P(*spec))
+
         def one(node):
             if isinstance(node, PagedKVCache):
                 # block_tables (B, max_blocks): batch over dp; the logical
@@ -211,7 +287,9 @@ class ShardingPlan:
                 if flash and self._fits(tp, bt.shape[1]):
                     bt_spec[1] = tp
                 return PagedKVCache(pool_like(node.k), pool_like(node.v),
-                                    NamedSharding(self.mesh, P(*bt_spec)))
+                                    NamedSharding(self.mesh, P(*bt_spec)),
+                                    scale_like(node.k_scale),
+                                    scale_like(node.v_scale))
             if isinstance(node, KVCache):
                 # slot_pos (stack..., B, cap): batch over dp, cap over tp
                 # when flash (matching the k/v length sharding)

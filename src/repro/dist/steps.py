@@ -80,16 +80,20 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
 
 
 def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
-               quantized_params_sds=None, paged: bool = False):
+               quantized_params_sds=None, paged: bool = False,
+               kv_bits: int = 16):
     """Generic (arch x shape) step for the dry-run driver and launchers.
 
     train   -> ``build_train_step`` under a fresh plan;
     prefill -> jit'd bulk prefill (cache donated);
     decode  -> jit'd serve step (cache donated), optionally over packed
-               ``QuantizedTensor`` params (``quantized_params_sds``) and/or
-               a paged block-pool cache (``paged=True`` — the step reads
-               block tables from the cache pytree, so its signature and
-               the engine's per-tick override both lower from one build).
+               ``QuantizedTensor`` params (``quantized_params_sds`` — the
+               plan TP-shards their code planes, so the cell's per-device
+               packed bytes are ~total/tp) and/or a paged block-pool cache
+               (``paged=True`` — the step reads block tables from the
+               cache pytree, so its signature and the engine's per-tick
+               override both lower from one build; ``kv_bits=8`` lowers
+               the int8 pool + scale-plane layout).
 
     Returns ``(jitted, abstract_args, ctx)``.
     """
@@ -122,7 +126,8 @@ def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
 
     stripes = plan.tp_size if ctx.attn_decode_mode == "flash" else 1
     tok_sds, cache_sds, pos_sds = specs.decode_specs(cfg, shape, paged=paged,
-                                                     stripes=stripes)
+                                                     stripes=stripes,
+                                                     kv_bits=kv_bits)
 
     def serve_step(params, tokens, cache, pos):
         with dctx.use(ctx):

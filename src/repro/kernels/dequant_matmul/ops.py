@@ -7,6 +7,12 @@ Dispatch:
     inside a scan body, so the bf16 weight matrix never materializes in HBM.
     This keeps the dry-run roofline honest about the packed-weight traffic.
 
+``dequant_matmul_parts`` is the shard-shape-agnostic core: it takes raw
+planes/scales/zeros (which may be a tp-local slice of a larger tensor) and
+skips the outlier correction, so ``serving.qserve.linear`` can run it inside
+a shard_map over tensor-parallel plane shards.  ``dequant_matmul`` is the
+whole-tensor wrapper (core + COO outliers).
+
 The SpQR outlier correction ``y[:, col] += x[:, row] * val`` is a fixed-
 capacity COO scatter applied after the matmul (additive convention of
 qformat).  Stacked QuantizedTensors (leading layer/expert dims) are handled
@@ -23,35 +29,40 @@ from repro.kernels.dequant_matmul import kernel as _k
 _N_BLOCK = 1024
 
 
-def _outlier_correction(x2, qt: QuantizedTensor, y):
+def outlier_correction(x2, qt: QuantizedTensor, y):
     """x2 (M, K); y (M, N) += scatter-add of COO corrections."""
     xa = x2[:, qt.out_rows]                         # (M, cap)
     upd = xa * qt.out_vals.astype(x2.dtype)[None, :]
     return y.at[:, qt.out_cols].add(upd.astype(y.dtype))
 
 
-def _jnp_blockwise(x2, qt: QuantizedTensor):
-    K, N = qt.shape
+_outlier_correction = outlier_correction            # back-compat alias
+
+
+def _jnp_blockwise(x2, planes, scales, zeros, *, bits, group_size,
+                   resid_planes=None, resid_scales=None):
+    K = x2.shape[1]
+    N = scales.shape[-1]
+    G = scales.shape[0]
     nb = max(N // _N_BLOCK, 1)
     while N % nb:
         nb -= 1
     bn = N // nb
-    scales, zeros = qt.scales_zeros()
 
     def block(_, bi):
         planes_b = tuple(
             jax.lax.dynamic_slice_in_dim(p, bi * bn, bn, axis=1)
-            for p in qt.planes)
+            for p in planes)
         s_b = jax.lax.dynamic_slice_in_dim(scales, bi * bn, bn, axis=1)
         z_b = jax.lax.dynamic_slice_in_dim(zeros, bi * bn, bn, axis=1)
-        codes = unpack(planes_b, qt.bits, K).astype(jnp.float32)
-        q = codes.reshape(qt.n_groups, qt.group_size, bn)
+        codes = unpack(planes_b, bits, K).astype(jnp.float32)
+        q = codes.reshape(G, group_size, bn)
         w = ((q - z_b[:, None, :]) * s_b[:, None, :]).reshape(K, bn)
-        if qt.resid_planes is not None:
+        if resid_planes is not None:
             rb = unpack(tuple(
                 jax.lax.dynamic_slice_in_dim(p, bi * bn, bn, axis=1)
-                for p in qt.resid_planes), 1, K).astype(jnp.float32)
-            rs = jax.lax.dynamic_slice_in_dim(qt.resid_scales, bi * bn, bn,
+                for p in resid_planes), 1, K).astype(jnp.float32)
+            rs = jax.lax.dynamic_slice_in_dim(resid_scales, bi * bn, bn,
                                               axis=1)
             w = w + (rb * 2.0 - 1.0) * rs
         return None, x2 @ w.astype(x2.dtype)
@@ -61,23 +72,38 @@ def _jnp_blockwise(x2, qt: QuantizedTensor):
     return jnp.moveaxis(ys, 0, 1).reshape(x2.shape[0], N)
 
 
+def dequant_matmul_parts(x2, planes, scales, zeros, *, bits, group_size,
+                         resid_planes=None, resid_scales=None,
+                         force_kernel: bool = False, interpret: bool = False):
+    """Core x2 (M, K) @ deq(planes) (K, N) -> (M, N); no outlier correction.
+
+    Shapes may be tp-local shards of a larger kernel: K/N are read off the
+    operands, so a column (N/T) or row (K/T, group-aligned) slice lowers to
+    the same kernel as the full tensor."""
+    on_tpu = jax.default_backend() == "tpu"
+    if (force_kernel or on_tpu) and resid_planes is None:
+        M = x2.shape[0]
+        bm = M if M < 128 else 128
+        return _k.dequant_matmul_kernel(
+            x2, planes, scales.astype(jnp.float32),
+            zeros.astype(jnp.float32), bits=bits,
+            group_size=group_size, bm=bm,
+            interpret=interpret or not on_tpu)
+    return _jnp_blockwise(x2, planes, scales, zeros, bits=bits,
+                          group_size=group_size, resid_planes=resid_planes,
+                          resid_scales=resid_scales)
+
+
 def dequant_matmul(x, qt: QuantizedTensor, *, force_kernel: bool = False,
                    interpret: bool = False):
     """x (..., K) @ packed (K, N) -> (..., N) in x.dtype."""
     lead = x.shape[:-1]
     K, N = qt.shape
     x2 = x.reshape(-1, K)
-    on_tpu = jax.default_backend() == "tpu"
-    if force_kernel or on_tpu:
-        scales, zeros = qt.scales_zeros()
-        M = x2.shape[0]
-        bm = M if M < 128 else 128
-        y = _k.dequant_matmul_kernel(
-            x2, qt.planes, scales.astype(jnp.float32),
-            zeros.astype(jnp.float32), bits=qt.bits,
-            group_size=qt.group_size, bm=bm,
-            interpret=interpret or not on_tpu)
-    else:
-        y = _jnp_blockwise(x2, qt)
-    y = _outlier_correction(x2, qt, y)
+    scales, zeros = qt.scales_zeros()
+    y = dequant_matmul_parts(
+        x2, qt.planes, scales, zeros, bits=qt.bits, group_size=qt.group_size,
+        resid_planes=qt.resid_planes, resid_scales=qt.resid_scales,
+        force_kernel=force_kernel, interpret=interpret)
+    y = outlier_correction(x2, qt, y)
     return y.reshape(*lead, N).astype(x.dtype)

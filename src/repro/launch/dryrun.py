@@ -37,17 +37,34 @@ ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
              save: bool = True, verbose: bool = True, quantized: bool = False,
-             paged: bool = False):
+             paged: bool = False, kv_bits: int = 16):
     cfg = get_config(arch)
     shape = SHAPES_BY_NAME[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     kw = {}
+    packed = None
     if quantized and shape.kind == "decode":
+        from repro.dist.sharding import make_plan
         from repro.serving.quantized import abstract_quantized_params
-        kw["quantized_params_sds"] = abstract_quantized_params(cfg)
+        from repro.serving.qserve.report import PACKED_SHARD_SLACK, \
+            packed_plane_bytes
+        qsds = abstract_quantized_params(cfg)
+        kw["quantized_params_sds"] = qsds
+        plan = make_plan(cfg, mesh)
+        packed = packed_plane_bytes(qsds, plan.param_shardings(qsds))
+        packed["tp"] = plan.tp_size
+        # the whole point of plane sharding: per-device packed bytes must
+        # track total/tp, not total (replicated planes would double-count
+        # every shard).  Misaligned odd kernels may replicate, hence the
+        # slack over the ideal ratio.
+        assert packed["ratio"] <= PACKED_SHARD_SLACK / plan.tp_size, (
+            f"QuantizedTensor planes look replicated, not tp-sharded: "
+            f"per-device {packed['per_device']} vs total {packed['total']} "
+            f"(ratio {packed['ratio']:.3f}, tp={plan.tp_size})")
     if paged and shape.kind == "decode":
         kw["paged"] = True
+        kw["kv_bits"] = kv_bits
     with jax.set_mesh(mesh):
         jitted, abstract_args, ctx = build_step(cfg, shape, mesh, **kw)
         lowered = jitted.lower(*abstract_args)
@@ -66,6 +83,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "quantized": quantized,
+        "packed_plane_bytes": packed,
+        "kv_bits": kv_bits if paged and shape.kind == "decode" else 16,
         "paged": paged and shape.kind == "decode",
         "attn_modes": [ctx.attn_train_mode, ctx.attn_decode_mode],
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
@@ -85,6 +104,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
               f"args={gb:.2f}GiB temp={tmp:.2f}GiB "
               f"total~{total:.2f}GiB/dev compile={t_compile:.0f}s "
               f"bottleneck={roof['bottleneck']}", flush=True)
+        if packed is not None:
+            print(f"  packed planes: {packed['total'] / 2**20:.1f} MiB "
+                  f"total -> {packed['per_device'] / 2**20:.2f} MiB/device "
+                  f"(tp={packed['tp']})", flush=True)
         print(f"  memory_analysis: {mem}", flush=True)
         print(f"  flops={roof['hlo_flops']:.3e} "
               f"bytes={roof['hlo_bytes']:.3e} "
@@ -93,7 +116,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         os.makedirs(ART, exist_ok=True)
         tag = f"{arch}__{shape_name}__{rec['mesh']}" + \
             ("__w2" if quantized else "") + \
-            ("__paged" if rec["paged"] else "")
+            ("__paged" if rec["paged"] else "") + \
+            ("__kv8" if rec["paged"] and kv_bits == 8 else "")
         with open(os.path.join(ART, tag + ".json"), "w") as f:
             json.dump(rec, f, indent=1)
     return rec
@@ -109,6 +133,8 @@ def main():
                     help="serve_step with 2-bit packed weights (decode cells)")
     ap.add_argument("--paged", action="store_true",
                     help="decode cells over the paged block-pool KV cache")
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[16, 8],
+                    help="with --paged: int8 KV pool + scale planes")
     ap.add_argument("--continue-on-error", action="store_true")
     args = ap.parse_args()
 
@@ -123,7 +149,8 @@ def main():
     for arch, shape in todo:
         try:
             run_cell(arch, shape, multi_pod=args.multi_pod,
-                     quantized=args.quantized, paged=args.paged)
+                     quantized=args.quantized, paged=args.paged,
+                     kv_bits=args.kv_bits)
         except Exception as e:
             traceback.print_exc()
             failures.append((arch, shape, repr(e)[:200]))

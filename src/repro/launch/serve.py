@@ -1,11 +1,14 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--wbits 2]``.
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--quant rtn-w4]``.
 
 Builds a (reduced) model, optionally RTN-quantizes it to packed low-bit
-storage, and serves a demo batch of requests through the engine
-(continuous-batching slot pool by default; ``--engine static`` runs the
-cohort baseline).  With ``--tp N`` the engine runs under a local
-(devices/N, N) mesh and a ``repro.dist`` ShardingPlan, so quantized decode
-exercises the same tensor-parallel layout the production mesh uses.
+storage (``--quant {none,rtn-w4,rtn-w3,rtn-w2}``), and serves a demo batch
+of requests through the engine (continuous-batching slot pool by default;
+``--engine paged`` adds the block-pool KV with prefix sharing, ``--engine
+static`` runs the cohort baseline).  ``--kv-bits 8`` (paged engine) stores
+the KV pool as int8 codes + per-token scale planes.  With ``--tp N`` the
+engine runs under a local (devices/N, N) mesh and a ``repro.dist``
+ShardingPlan — quantized decode then runs with the packed planes TP-sharded
+(``qserve``) on the same tensor-parallel layout the production mesh uses.
 """
 import argparse
 import contextlib
@@ -21,12 +24,19 @@ from repro.models import build_model
 from repro.serving.engine import Engine, PagedEngine, StaticEngine
 from repro.serving.quantized import quantize_params_rtn
 
+QUANT_CHOICES = ("none", "rtn-w4", "rtn-w3", "rtn-w2")
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="toy-llama")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--wbits", type=int, default=16)
+    ap.add_argument("--quant", default="none", choices=QUANT_CHOICES,
+                    help="pack weights to rtn-w{4,3,2} QuantizedTensors "
+                         "(the zero-calibration serving fast path)")
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[16, 8],
+                    help="paged engine: KV pool precision (8 = int8 codes "
+                         "+ per-token scale planes, ~2x less KV HBM)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--tp", type=int, default=1,
@@ -40,13 +50,20 @@ def main():
                     help="paged engine: tokens per KV block")
     args = ap.parse_args()
 
+    if args.kv_bits != 16 and args.engine != "paged":
+        ap.error("--kv-bits 8 requires --engine paged (the int8 pool is "
+                 "a block-pool layout)")
+
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    if args.wbits < 16:
-        params = quantize_params_rtn(
-            params, QuantConfig(wbits=args.wbits, group_size=32))
-        print(f"[serve] packed weights to w{args.wbits}")
+    if args.quant != "none":
+        wbits = int(args.quant.rsplit("w", 1)[1])
+        params, skipped = quantize_params_rtn(
+            params, QuantConfig(wbits=wbits, group_size=32))
+        print(f"[serve] packed weights to w{wbits}"
+              + (f" ({len(skipped)} kernels left fp: {skipped})"
+                 if skipped else ""))
 
     plan, mesh_ctx = None, contextlib.nullcontext()
     if args.tp > 1:
@@ -60,7 +77,8 @@ def main():
         if args.engine == "paged":
             eng = PagedEngine(cfg, params, max_batch=args.requests,
                               capacity=128, plan=plan,
-                              block_size=args.block_size)
+                              block_size=args.block_size,
+                              kv_bits=args.kv_bits)
         else:
             cls = Engine if args.engine == "continuous" else StaticEngine
             eng = cls(cfg, params, max_batch=args.requests, capacity=128,
@@ -75,7 +93,14 @@ def main():
     if args.engine == "paged":
         print(f"[serve] prefill tokens skipped (prefix sharing): "
               f"{eng.prefill_tokens_skipped}, peak blocks: "
-              f"{eng.peak_blocks_in_use}/{eng.num_blocks}")
+              f"{eng.peak_blocks_in_use}/{eng.num_blocks}"
+              + (f", kv pool int8" if args.kv_bits == 8 else ""))
+    if args.quant != "none" and plan is not None:
+        from repro.serving.qserve.report import packed_plane_bytes
+        rep = packed_plane_bytes(params, plan.param_shardings(params))
+        print(f"[serve] packed planes: {rep['total']} B total, "
+              f"{rep['per_device']} B/device "
+              f"(ratio {rep['ratio']:.3f}, tp={plan.tp_size})")
 
 
 if __name__ == "__main__":

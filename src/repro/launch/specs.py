@@ -31,7 +31,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig, act_dtype=jnp.bfloat16):
 def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
                  cache_dtype=jnp.bfloat16, act_dtype=jnp.bfloat16,
                  paged: bool = False, block_size: int = 64,
-                 stripes: int = 1):
+                 stripes: int = 1, kv_bits: int = 16):
     """(tokens, cache, pos) ShapeDtypeStructs for one serve_step.
 
     The cache has capacity seq_len and is prefilled to seq_len-1; the step
@@ -45,7 +45,8 @@ def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
     compiled cell bounds the same HBM; the serve step reads the
     cache-resident block tables (the engine overrides them per tick).
     ``stripes`` (= tp size for flash-mode cells) keeps the pool's block
-    count divisible by the shard count."""
+    count divisible by the shard count.  ``kv_bits=8`` lowers the int8
+    pool layout (codes + per-token scale planes)."""
     B, S = shape.global_batch, shape.seq_len
     model = build_model(cfg)
     if paged:
@@ -55,7 +56,8 @@ def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
         nb = B * (S // bs) + stripes
         nb += (-nb) % stripes
         cache = model.init_cache(B, S, dtype=cache_dtype, abstract=True,
-                                 paged=True, block_size=bs, num_blocks=nb)
+                                 paged=True, block_size=bs, num_blocks=nb,
+                                 kv_bits=kv_bits)
     else:
         cache = model.init_cache(B, S, dtype=cache_dtype, abstract=True)
     if cfg.family == "audio":

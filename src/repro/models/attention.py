@@ -146,10 +146,24 @@ class PagedKVCache(NamedTuple):
     branch-free without corrupting live blocks.  Block tables are shared
     across the layer stack (one logical->physical mapping; each layer has
     its own pool slab indexed by the same physical ids).
+
+    ``k_scale``/``v_scale`` are present iff the pool is int8-quantized
+    (``kv_bits=8``): one symmetric grid scale per (block slot, kv-head),
+    laid out block-parallel with the code pool so scatter/gather, COW
+    copies, and tp stripe sharding treat codes and scales uniformly.
+    Writes quantize (``qserve.kvquant``), reads dequantize inside the
+    attention math; fp pools carry ``None`` and keep their exact
+    pre-quantization lowering.
     """
     k: jnp.ndarray            # (num_blocks, block_size, KV, Dh) pool
     v: jnp.ndarray
     block_tables: jnp.ndarray  # (B, max_blocks) int32 physical ids, -1 free
+    k_scale: Optional[jnp.ndarray] = None  # (num_blocks, block_size, KV)
+    v_scale: Optional[jnp.ndarray] = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
 
 
 def init_cache(B, capacity, kv_heads, head_dim, dtype=jnp.bfloat16):
@@ -160,11 +174,18 @@ def init_cache(B, capacity, kv_heads, head_dim, dtype=jnp.bfloat16):
 
 
 def init_paged_cache(B, num_blocks, block_size, max_blocks, kv_heads,
-                     head_dim, dtype=jnp.bfloat16):
+                     head_dim, dtype=jnp.bfloat16, kv_bits=16):
+    ksc = vsc = None
+    if kv_bits == 8:
+        from repro.serving.qserve.kvquant import SCALE_DTYPE
+        dtype = jnp.int8
+        ksc = jnp.zeros((num_blocks, block_size, kv_heads), SCALE_DTYPE)
+        vsc = jnp.zeros((num_blocks, block_size, kv_heads), SCALE_DTYPE)
     return PagedKVCache(
         k=jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
         v=jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
-        block_tables=jnp.full((B, max_blocks), -1, jnp.int32))
+        block_tables=jnp.full((B, max_blocks), -1, jnp.int32),
+        k_scale=ksc, v_scale=vsc)
 
 
 def _pos_rows(pos, B):
@@ -181,7 +202,8 @@ def _paged_cache_write(cache: PagedKVCache, k_new, v_new, pos):
     Rows whose target logical block is unmapped (-1) write to the reserved
     scratch block 0 (never referenced by any table, so never read); live
     rows own their write block exclusively (allocator invariant), so the
-    scatter indices never collide on a live block."""
+    scatter indices never collide on a live block.  int8 pools quantize the
+    incoming token on write (codes + per-(token, head) scale scatter)."""
     bt = cache.block_tables
     B = bt.shape[0]
     bs = cache.k.shape[1]
@@ -194,6 +216,14 @@ def _paged_cache_write(cache: PagedKVCache, k_new, v_new, pos):
     pbs = jnp.where(ok, pb, 0)                        # scratch block 0
     # unconditional scatter: duplicate indices only ever land on the
     # scratch block (never read), so no read-back select is needed
+    if cache.quantized:
+        from repro.serving.qserve import kvquant as KQ
+        kq, ks = KQ.quantize_kv(k_new[:, 0])          # (B,KV,Dh),(B,KV)
+        vq, vs = KQ.quantize_kv(v_new[:, 0])
+        return PagedKVCache(
+            cache.k.at[pbs, off].set(kq), cache.v.at[pbs, off].set(vq), bt,
+            cache.k_scale.at[pbs, off].set(ks),
+            cache.v_scale.at[pbs, off].set(vs))
     k = cache.k.at[pbs, off].set(k_new[:, 0].astype(cache.k.dtype))
     v = cache.v.at[pbs, off].set(v_new[:, 0].astype(cache.v.dtype))
     return PagedKVCache(k, v, bt)
@@ -219,6 +249,19 @@ def _paged_cache_prefill(cache: PagedKVCache, k_all, v_all, start=0):
         # the scatter needs no read-back select
         vals = vals.reshape(B * nblk, bs, *vals.shape[2:]).astype(pool.dtype)
         return pool.at[pbs].set(vals)
+
+    if cache.quantized:
+        from repro.serving.qserve import kvquant as KQ
+        kq, ks = KQ.quantize_kv(k_all)                # (B,S,KV,Dh),(B,S,KV)
+        vq, vs = KQ.quantize_kv(v_all)
+
+        def scat_q(pool, vals):
+            vals = vals.reshape(B * nblk, bs, *vals.shape[2:])
+            return pool.at[pbs].set(vals.astype(pool.dtype))
+        return PagedKVCache(scat_q(cache.k, kq), scat_q(cache.v, vq),
+                            cache.block_tables,
+                            scat_q(cache.k_scale, ks),
+                            scat_q(cache.v_scale, vs))
     return PagedKVCache(scat(cache.k, k_all), scat(cache.v, v_all),
                         cache.block_tables)
 
@@ -291,8 +334,16 @@ def _paged_view(cache: PagedKVCache, need_v: bool = True):
     B, mb = bt.shape
     bs, KV, Dh = cache.k.shape[1:]
     safe = jnp.clip(bt, 0, cache.k.shape[0] - 1)
-    k = cache.k[safe].reshape(B, mb * bs, KV, Dh)
-    v = cache.v[safe].reshape(B, mb * bs, KV, Dh) if need_v else None
+    if cache.quantized:
+        from repro.serving.qserve import kvquant as KQ
+        k = KQ.dequantize_kv(cache.k[safe], cache.k_scale[safe])
+        v = KQ.dequantize_kv(cache.v[safe], cache.v_scale[safe]) \
+            if need_v else None
+        k = k.reshape(B, mb * bs, KV, Dh)
+        v = v.reshape(B, mb * bs, KV, Dh) if need_v else None
+    else:
+        k = cache.k[safe].reshape(B, mb * bs, KV, Dh)
+        v = cache.v[safe].reshape(B, mb * bs, KV, Dh) if need_v else None
     mapped = jnp.repeat(bt >= 0, bs, axis=1)          # (B, mb*bs)
     return k, v, mapped
 
@@ -343,6 +394,9 @@ def decode_attention(q, cache, pos, window: int = 0):
         s = _decode_scores(q, cache, pos, window)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v.dtype), v)
+    if isinstance(cache, PagedKVCache) and cache.quantized:
+        o = o.astype(q.dtype)     # dequantized view is f32; don't let it
+                                  # promote the residual stream
     return o.reshape(B, 1, H, Dh)
 
 
@@ -513,8 +567,9 @@ def _paged_flash_write(q, k_new, v_new, cache: PagedKVCache, pos, window, c):
     rep = H // KV
     bspec = c.batch_spec if B % c.dp_size == 0 else None
     posv = _pos_rows(pos, B)
+    quant = cache.quantized
 
-    def local(ql, knl, vnl, kl, vl, btl, posl):
+    def local(ql, knl, vnl, kl, vl, btl, posl, *sc):
         Bl, mbl = btl.shape
         nbl, bs = kl.shape[0], kl.shape[1]
         my = jax.lax.axis_index(c.tp)
@@ -529,12 +584,25 @@ def _paged_flash_write(q, k_new, v_new, cache: PagedKVCache, pos, window, c):
         pbs = jnp.where(ok, pb, 0)        # local block 0 = shard scratch
         # non-owner rows collapse onto the shard's scratch block (never
         # read), so the scatter needs no read-back select
-        kl = kl.at[pbs, off].set(knl[:, 0].astype(kl.dtype))
-        vl = vl.at[pbs, off].set(vnl[:, 0].astype(vl.dtype))
-        # ---- partial scores over my stripe only
         safe = jnp.clip(btl - blk0, 0, nbl - 1)
-        kg = kl[safe].reshape(Bl, mbl * bs, KV, Dh)
-        vg = vl[safe].reshape(Bl, mbl * bs, KV, Dh)
+        if quant:
+            from repro.serving.qserve import kvquant as KQ
+            kscl, vscl = sc
+            kq, ks = KQ.quantize_kv(knl[:, 0])
+            vq, vs = KQ.quantize_kv(vnl[:, 0])
+            kl = kl.at[pbs, off].set(kq)
+            vl = vl.at[pbs, off].set(vq)
+            kscl = kscl.at[pbs, off].set(ks)
+            vscl = vscl.at[pbs, off].set(vs)
+            kg = KQ.dequantize_kv(kl[safe], kscl[safe])
+            vg = KQ.dequantize_kv(vl[safe], vscl[safe])
+        else:
+            kl = kl.at[pbs, off].set(knl[:, 0].astype(kl.dtype))
+            vl = vl.at[pbs, off].set(vnl[:, 0].astype(vl.dtype))
+            kg, vg = kl[safe], vl[safe]
+        # ---- partial scores over my stripe only
+        kg = kg.reshape(Bl, mbl * bs, KV, Dh)
+        vg = vg.reshape(Bl, mbl * bs, KV, Dh)
         mapped = jnp.repeat((btl >= blk0) & (btl < blk0 + nbl), bs, axis=1)
         posn = pos0 + jnp.arange(mbl * bs)[None]
         posr = posl[:, None]
@@ -554,15 +622,22 @@ def _paged_flash_write(q, k_new, v_new, cache: PagedKVCache, pos, window, c):
         o = jax.lax.psum(o * w[..., None], c.tp)
         l = jax.lax.psum(l * w, c.tp)
         out = (o / jnp.maximum(l, 1e-30)[..., None]).reshape(Bl, 1, H, Dh)
-        return out.astype(vl.dtype), kl, vl
+        out = out.astype(q.dtype if quant else vl.dtype)
+        return (out, kl, vl) + ((kscl, vscl) if quant else ())
 
-    o, kk, vv = jax.shard_map(
-        local, mesh=c.mesh,
-        in_specs=(P(bspec, None, None, None),
-                  P(bspec, None, None, None), P(bspec, None, None, None),
-                  P(c.tp, None, None, None), P(c.tp, None, None, None),
-                  P(bspec, c.tp), P(bspec)),
-        out_specs=(P(bspec, None, None, None),
-                   P(c.tp, None, None, None), P(c.tp, None, None, None)))(
-        q, k_new, v_new, cache.k, cache.v, cache.block_tables, posv)
-    return o, PagedKVCache(kk, vv, cache.block_tables)
+    pool = P(c.tp, None, None, None)
+    in_specs = (P(bspec, None, None, None),
+                P(bspec, None, None, None), P(bspec, None, None, None),
+                pool, pool, P(bspec, c.tp), P(bspec))
+    out_specs = (P(bspec, None, None, None), pool, pool)
+    args = (q, k_new, v_new, cache.k, cache.v, cache.block_tables, posv)
+    if quant:
+        scp = P(c.tp, None, None)
+        in_specs += (scp, scp)
+        out_specs += (scp, scp)
+        args += (cache.k_scale, cache.v_scale)
+    res = jax.shard_map(local, mesh=c.mesh, in_specs=in_specs,
+                        out_specs=out_specs)(*args)
+    o, kk, vv = res[:3]
+    sc = res[3:] if quant else (None, None)
+    return o, PagedKVCache(kk, vv, cache.block_tables, *sc)

@@ -34,12 +34,19 @@ def linear_init(key, d_in, d_out, bias=False, dtype=jnp.float32, scale=None):
 
 # ---------------------------------------------------------------- apply fns
 
-def linear(p, x, compute_dtype=None):
-    """y = x @ kernel (+ bias); kernel may be a QuantizedTensor."""
+def linear(p, x, compute_dtype=None, kind="col"):
+    """y = x @ kernel (+ bias); kernel may be a QuantizedTensor.
+
+    ``kind`` ("col" | "row") names the kernel's tensor-parallel layout for
+    the quantized fast path: "row" marks the contraction-sharded
+    projections (``wo``/``out_proj``-style, the plan's ``_ROW_SHARDED``
+    set) so ``qserve.linear`` splits the fused dequant matmul the same way
+    the fp kernel is split.  Ignored for fp kernels (GSPMD reads the
+    layout off the param sharding directly)."""
     k = p["kernel"]
     if isinstance(k, QuantizedTensor):
-        from repro.kernels.dequant_matmul import ops as dq_ops
-        y = dq_ops.dequant_matmul(x, k)
+        from repro.serving.qserve.linear import quantized_linear
+        y = quantized_linear(x, k, kind=kind)
     else:
         if compute_dtype is not None:
             k = k.astype(compute_dtype)
@@ -126,7 +133,7 @@ def mlp(p, x, kind: str):
         h = jnp.square(jax.nn.relu(linear(p["wi"], x)))
     else:  # gelu
         h = jax.nn.gelu(linear(p["wi"], x), approximate=True)
-    return linear(p["wo"], h)
+    return linear(p["wo"], h, kind="row")
 
 
 # ---------------------------------------------------------------- embedding

@@ -174,7 +174,7 @@ def time_mix(p, x, cfg, x_prev, state0):
     y = y.reshape(B, S, d).astype(x.dtype)
     y = L.norm(p["ln_x"], y)
     y = y * jax.nn.silu(g)
-    return L.linear(p["wo"], y), x[:, -1], S_fin
+    return L.linear(p["wo"], y, kind="row"), x[:, -1], S_fin
 
 
 def channel_mix(p, x, x_prev):
@@ -182,7 +182,7 @@ def channel_mix(p, x, x_prev):
     xk = x + (xp - x) * p["cm_mu_k"]
     xr = x + (xp - x) * p["cm_mu_r"]
     kk = jnp.square(jax.nn.relu(L.linear(p["cm_key"], xk)))
-    vv = L.linear(p["cm_value"], kk)
+    vv = L.linear(p["cm_value"], kk, kind="row")
     return jax.nn.sigmoid(L.linear(p["cm_recept"], xr)) * vv, x[:, -1]
 
 

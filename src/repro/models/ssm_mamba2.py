@@ -154,7 +154,7 @@ def mamba_apply(p, u, cfg):
     y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(B, S, d_in).astype(u.dtype)
     y = L.norm(p["norm"], y * jax.nn.silu(z))
-    out = L.linear(p["out_proj"], y)
+    out = L.linear(p["out_proj"], y, kind="row")
     # conv state holds the PRE-activation inputs of the last K-1 steps
     pre = jnp.concatenate([pre_x, pre_bc], axis=-1)
     K = s.d_conv
@@ -189,6 +189,6 @@ def mamba_step(p, u, state: MambaState, cfg):
     y = y + x * p["D"][None, :, None]
     y = y.reshape(B, d_in).astype(u.dtype)
     y = L.norm(p["norm"], y * jax.nn.silu(z))
-    out = L.linear(p["out_proj"], y)[:, None]
+    out = L.linear(p["out_proj"], y, kind="row")[:, None]
     new_conv = window[:, 1:]
     return out, MambaState(new_conv, h)

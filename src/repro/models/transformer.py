@@ -95,28 +95,37 @@ def _scan_with_state(body, x, params_stack, state_stack, length):
     return x, state_stack
 
 
-# Paged KV caches scan their pool slabs as a plain (k, v) carry while the
-# (shared, host-managed) block table rides outside the loop; these three
-# helpers express that rebinding rule once for every decode path.
+# Paged KV caches scan their pool slabs as a plain (k, v[, k_scale,
+# v_scale]) carry while the (shared, host-managed) block table rides
+# outside the loop; these helpers express that rebinding rule once for
+# every decode path.  int8 pools (``kv_bits=8``) carry their per-token
+# scale planes as two extra tuple entries — the tuple length is static per
+# trace, so both layouts lower through the same scan.
 # ``bt is None`` means "this cache is dense" throughout.
 def _paged_kv_state(kvc):
     """Cache node -> scan-carry state."""
-    return (kvc.k, kvc.v) if isinstance(kvc, A.PagedKVCache) else kvc
+    if not isinstance(kvc, A.PagedKVCache):
+        return kvc
+    if kvc.quantized:
+        return (kvc.k, kvc.v, kvc.k_scale, kvc.v_scale)
+    return (kvc.k, kvc.v)
 
 
 def _paged_kv_in(st, bt):
     """Scan carry -> the per-layer cache view _layer_apply consumes."""
-    return A.PagedKVCache(st[0], st[1], bt) if bt is not None else st
+    return A.PagedKVCache(st[0], st[1], bt, *st[2:]) if bt is not None \
+        else st
 
 
 def _paged_kv_out(kv, bt):
     """_layer_apply's new cache -> scan carry."""
-    return (kv.k, kv.v) if bt is not None else kv
+    return _paged_kv_state(kv) if bt is not None else kv
 
 
 def _paged_kv_rebuild(kvs, bt):
     """Post-scan stacked carry -> the cache node handed back to callers."""
-    return A.PagedKVCache(kvs[0], kvs[1], bt) if bt is not None else kvs
+    return A.PagedKVCache(kvs[0], kvs[1], bt, *kvs[2:]) if bt is not None \
+        else kvs
 
 
 def _paged_tables(kvc, block_tables):
@@ -142,7 +151,7 @@ def _layer_apply(p, x, cfg, *, positions, window, kv=None, pos=None,
         new_kv = (k, v)
     B, Sq = x.shape[:2]
     o = o.reshape(B, Sq, -1)
-    x = x + L.linear(p["attn"]["wo"], o)
+    x = x + L.linear(p["attn"]["wo"], o, kind="row")
     h = L.norm(p["ln2"], x)
     if "moe" in p:
         x = x + M.moe_apply(p["moe"], h, cfg)
@@ -296,7 +305,7 @@ class Model:
         B, Sq = x_in.shape[:2]
         o = o.reshape(B, Sq, -1)
         caps["wo_in"] = gram(o)
-        x_mid = x_in + L.linear(lp["attn"]["wo"], o)
+        x_mid = x_in + L.linear(lp["attn"]["wo"], o, kind="row")
         h2 = L.norm(lp["ln2"], x_mid)
         caps["mlp_in"] = gram(h2)
         if "mlp" in lp:
@@ -422,11 +431,14 @@ class Model:
 
     # ---------------------------------------------------------------- cache
     def init_cache(self, B, capacity, dtype=jnp.bfloat16, abstract=False,
-                   paged=False, block_size=16, num_blocks=None):
+                   paged=False, block_size=16, num_blocks=None, kv_bits=16):
         """Decode-state pytree.  ``paged=True`` swaps every *full-context*
         KV cache for a ``PagedKVCache`` pool (``num_blocks`` physical blocks
         of ``block_size`` tokens; block 0 reserved as the write scratch)
         with a shared ``(B, capacity // block_size)`` block table.
+        ``kv_bits=8`` (paged only) stores the pool as int8 codes plus
+        per-(token, kv-head) scale planes (``qserve.kvquant``) — writes
+        quantize, attention dequantizes on read, KV HBM drops ~2x vs fp16.
 
         What stays dense under ``paged``:
           * SSM / RWKV / Mamba state — it is O(1) per row (a fixed-size
@@ -438,6 +450,9 @@ class Model:
             no memory and costs a gather per layer.
         Only the unbounded full-attention caches (the actual O(context)
         memory) go through the pool."""
+        if kv_bits != 16 and not paged:
+            raise ValueError("kv_bits=8 requires the paged block pool "
+                             "(dense rings keep their fp lowering)")
         cfg = self.cfg
         hd = cfg.resolved_head_dim
 
@@ -455,15 +470,25 @@ class Model:
 
         if paged:
             assert capacity % block_size == 0, (capacity, block_size)
+            assert kv_bits in (16, 8), kv_bits
             mb = capacity // block_size
             nb = num_blocks if num_blocks is not None else B * mb + 1
+            pool_dt = dtype if kv_bits == 16 else jnp.int8
 
             def paged_kv(n):
                 bt = jnp.full((B, mb), -1, jnp.int32) if not abstract else \
                     jax.ShapeDtypeStruct((B, mb), jnp.int32)
+                ksc = vsc = None
+                if kv_bits == 8:
+                    from repro.serving.qserve.kvquant import SCALE_DTYPE
+                    ksc = mk(n, nb, block_size, cfg.n_kv_heads,
+                             dt=SCALE_DTYPE)
+                    vsc = mk(n, nb, block_size, cfg.n_kv_heads,
+                             dt=SCALE_DTYPE)
                 return A.PagedKVCache(
-                    mk(n, nb, block_size, cfg.n_kv_heads, hd),
-                    mk(n, nb, block_size, cfg.n_kv_heads, hd), bt)
+                    mk(n, nb, block_size, cfg.n_kv_heads, hd, dt=pool_dt),
+                    mk(n, nb, block_size, cfg.n_kv_heads, hd, dt=pool_dt),
+                    bt, ksc, vsc)
 
         if cfg.family == "ssm":
             Lh = cfg.n_layers
@@ -641,7 +666,7 @@ class Model:
                 kv2 = A.cache_prefill(kvc, k, v, valid_len=valid_len)
                 o = A.train_attention(q, k, v, window=0)
                 xc = xc + L.linear(lp["attn"]["wo"],
-                                   o.reshape(B, Stot, -1))
+                                   o.reshape(B, Stot, -1), kind="row")
                 h = L.norm(lp["ln2"], xc)
                 if "moe" in lp:
                     xc = xc + M.moe_apply(lp["moe"], h, cfg)
@@ -693,7 +718,8 @@ class Model:
                     kvc.slot_pos.at[:, slots].set(
                         jnp.broadcast_to(sp, (B, wcap))))
             o = A.train_attention(q, k, v, window=w)
-            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1))
+            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1),
+                               kind="row")
             h = L.norm(lp["ln2"], xc)
             xc = xc + L.mlp(lp["mlp"], h, cfg.mlp)
             return xc, kv2
@@ -703,7 +729,8 @@ class Model:
             q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
             kv2 = A.cache_prefill(kvc, k, v, valid_len=valid_len)
             o = A.train_attention(q, k, v, window=0)
-            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1))
+            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Stot, -1),
+                               kind="row")
             h = L.norm(lp["ln2"], xc)
             xc = xc + L.mlp(lp["mlp"], h, cfg.mlp)
             return xc, kv2
@@ -751,7 +778,8 @@ class Model:
             kv2 = A.cache_prefill(gkv, k, v)
             o = A.train_attention(q, k, v, window=0)
             a = a_in + L.linear(params["shared"]["attn"]["wo"],
-                                o.reshape(x.shape[0], x.shape[1], -1))
+                                o.reshape(x.shape[0], x.shape[1], -1),
+                                kind="row")
             h = L.norm(params["shared"]["ln2"], a)
             a = a + L.mlp(params["shared"]["mlp"], h, cfg.mlp)
             return xc + (a - a_in), (msts, kv2)
@@ -805,38 +833,56 @@ class Model:
         sfx_ids = bt_row[n_shared:n_shared + nsb]         # (nsb,) static slice
         ok = sfx_ids >= 0
         safe = jnp.where(ok, sfx_ids, 0)                  # 0 = scratch block
+        quant = pk.quantized
 
         def body(xc, lp, st):
-            kp, vp = st                                   # (nb, bs, KV, hd)
+            kp, vp = st[0], st[1]                         # (nb, bs, KV, hd)
             h = L.norm(lp["ln1"], xc)
             q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
             if n_shared:
                 pre_ids = bt_row[:n_shared]
+                if quant:
+                    from repro.serving.qserve import kvquant as KQ
+                    kpre = KQ.dequantize_kv(kp[pre_ids], st[2][pre_ids],
+                                            k.dtype)
+                    vpre = KQ.dequantize_kv(vp[pre_ids], st[3][pre_ids],
+                                            v.dtype)
+                else:
+                    kpre = kp[pre_ids].astype(k.dtype)
+                    vpre = vp[pre_ids].astype(v.dtype)
                 kf = jnp.concatenate(
-                    [kp[pre_ids].reshape(1, start, KV, hd).astype(k.dtype),
-                     k], axis=1)
+                    [kpre.reshape(1, start, KV, hd), k], axis=1)
                 vf = jnp.concatenate(
-                    [vp[pre_ids].reshape(1, start, KV, hd).astype(v.dtype),
-                     v], axis=1)
+                    [vpre.reshape(1, start, KV, hd), v], axis=1)
             else:
                 kf, vf = k, v
             o = A.causal_attention(q, kf, vf, window=0, q_offset=start)
             # unmapped (pad-region) blocks collapse onto the never-read
             # scratch block, so the scatter needs no read-back select
-            kp = kp.at[safe].set(
-                k[0].reshape(nsb, bs, KV, hd).astype(kp.dtype))
-            vp = vp.at[safe].set(
-                v[0].reshape(nsb, bs, KV, hd).astype(vp.dtype))
-            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Spad, -1))
+            if quant:
+                from repro.serving.qserve import kvquant as KQ
+                kq, ksn = KQ.quantize_kv(k[0].reshape(nsb, bs, KV, hd))
+                vq, vsn = KQ.quantize_kv(v[0].reshape(nsb, bs, KV, hd))
+                st_new = (kp.at[safe].set(kq), vp.at[safe].set(vq),
+                          st[2].at[safe].set(ksn), st[3].at[safe].set(vsn))
+            else:
+                st_new = (
+                    kp.at[safe].set(
+                        k[0].reshape(nsb, bs, KV, hd).astype(kp.dtype)),
+                    vp.at[safe].set(
+                        v[0].reshape(nsb, bs, KV, hd).astype(vp.dtype)))
+            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, Spad, -1),
+                               kind="row")
             h = L.norm(lp["ln2"], xc)
             if "moe" in lp:
                 xc = xc + M.moe_apply(lp["moe"], h, cfg)
             else:
                 xc = xc + L.mlp(lp["mlp"], h, cfg.mlp)
-            return xc, (kp, vp)
+            return xc, st_new
 
-        x, (ks, vs) = _scan_with_state(body, x, params["layers"],
-                                       (pk.k, pk.v), cfg.n_layers)
+        x, kvs = _scan_with_state(body, x, params["layers"],
+                                  _paged_kv_state(pk), cfg.n_layers)
         xl = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
         logits = self._logits(params, xl)
-        return logits, {"kv": A.PagedKVCache(ks, vs, pk.block_tables)}
+        return logits, {"kv": A.PagedKVCache(kvs[0], kvs[1],
+                                             pk.block_tables, *kvs[2:])}

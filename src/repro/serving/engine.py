@@ -490,13 +490,21 @@ class PagedEngine(Engine):
     recurrent state are per-row and unshareable — see ``Model.init_cache``).
     Retirement drops one ref per mapped block; blocks whose refs hit zero
     return to the pool, so capacity is freed per-block, not per-slot.
+
+    ``kv_bits=8`` stores the pool as int8 codes + per-(token, kv-head)
+    scale planes (``qserve.kvquant``): admission packs quantize the fp
+    dense-row KV, decode writes quantize per token, attention dequantizes
+    on read — ~0.56x fp16 KV bytes/request with a documented logit
+    tolerance (DESIGN.md §Quantized serving).
     """
 
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  capacity: int = 512, seed: int = 0, plan=None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 share_prefixes: bool = True):
+                 share_prefixes: bool = True, kv_bits: int = 16):
         assert capacity % block_size == 0, (capacity, block_size)
+        assert kv_bits in (16, 8), kv_bits
+        self.kv_bits = kv_bits
         self.block_size = block_size
         self.max_blocks = capacity // block_size
         stripes = 1
@@ -535,12 +543,14 @@ class PagedEngine(Engine):
     def _init_device_cache(self):
         return self.model.init_cache(
             self.max_batch, self.capacity, dtype=jnp.float32, paged=True,
-            block_size=self.block_size, num_blocks=self.num_blocks)
+            block_size=self.block_size, num_blocks=self.num_blocks,
+            kv_bits=self.kv_bits)
 
     def _abstract_cache(self):
         return self.model.init_cache(
             self.max_batch, self.capacity, abstract=True, paged=True,
-            block_size=self.block_size, num_blocks=self.num_blocks)
+            block_size=self.block_size, num_blocks=self.num_blocks,
+            kv_bits=self.kv_bits)
 
     def _make_decode(self):
         model, with_ctx = self.model, self._with_ctx
@@ -553,11 +563,18 @@ class PagedEngine(Engine):
         return step
 
     def _make_copy_block(self):
+        def copy_one(n, src, dst):
+            sc = (None, None)
+            if n.quantized:              # scale planes ride with the codes
+                sc = (n.k_scale.at[:, dst].set(n.k_scale[:, src]),
+                      n.v_scale.at[:, dst].set(n.v_scale[:, src]))
+            return PagedKVCache(n.k.at[:, dst].set(n.k[:, src]),
+                                n.v.at[:, dst].set(n.v[:, src]),
+                                n.block_tables, *sc)
+
         def copy(cache, src, dst):
             nodes, td = _cache_nodes(cache)
-            out = [PagedKVCache(n.k.at[:, dst].set(n.k[:, src]),
-                                n.v.at[:, dst].set(n.v[:, src]),
-                                n.block_tables)
+            out = [copy_one(n, src, dst)
                    if isinstance(n, PagedKVCache) else n for n in nodes]
             return jax.tree.unflatten(td, out)
         return copy
@@ -570,10 +587,12 @@ class PagedEngine(Engine):
         structurally-found batch axis exactly as the dense engine does."""
         big2, _ = _cache_nodes(self.model.init_cache(
             2, self.capacity, abstract=True, paged=True,
-            block_size=self.block_size, num_blocks=self.num_blocks))
+            block_size=self.block_size, num_blocks=self.num_blocks,
+            kv_bits=self.kv_bits))
         big3, _ = _cache_nodes(self.model.init_cache(
             3, self.capacity, abstract=True, paged=True,
-            block_size=self.block_size, num_blocks=self.num_blocks))
+            block_size=self.block_size, num_blocks=self.num_blocks,
+            kv_bits=self.kv_bits))
         axes = [None if isinstance(a, PagedKVCache) else jax.tree.map(
             lambda x, y: next(i for i, (p, q) in
                               enumerate(zip(x.shape, y.shape)) if p != q),
@@ -587,17 +606,25 @@ class PagedEngine(Engine):
             out = []
             for node, rnode, ax in zip(bn, rn, axes):
                 if isinstance(node, PagedKVCache):
-                    def pack(pool, rowkv):
+                    def pack(pool, scplane, rowkv):
                         # pool (n, nb, bs, KV, hd); rowkv (n, 1, cap, KV, hd)
                         # unmapped blocks collapse onto the never-read
-                        # scratch block: no read-back select needed
+                        # scratch block: no read-back select needed; int8
+                        # pools quantize the fp dense-row KV on the way in
                         n = pool.shape[0]
                         vals = rowkv[:, 0].reshape(
-                            n, nblk, bs, *pool.shape[3:]).astype(pool.dtype)
-                        return pool.at[:, safe].set(vals)
+                            n, nblk, bs, *pool.shape[3:])
+                        if scplane is None:
+                            return pool.at[:, safe].set(
+                                vals.astype(pool.dtype)), None
+                        from repro.serving.qserve import kvquant as KQ
+                        q, s = KQ.quantize_kv(vals)
+                        return (pool.at[:, safe].set(q),
+                                scplane.at[:, safe].set(s))
                     bt2 = node.block_tables.at[slot].set(table_row)
-                    out.append(PagedKVCache(pack(node.k, rnode.k),
-                                            pack(node.v, rnode.v), bt2))
+                    kq, ks = pack(node.k, node.k_scale, rnode.k)
+                    vq, vs = pack(node.v, node.v_scale, rnode.v)
+                    out.append(PagedKVCache(kq, vq, bt2, ks, vs))
                 else:
                     out.append(jax.tree.map(
                         lambda b, r, a: jax.lax.dynamic_update_slice_in_dim(

@@ -1,0 +1,24 @@
+"""qserve: end-to-end quantized serving.
+
+Makes packed ``QuantizedTensor`` checkpoints the first-class serving format:
+
+* ``linear``  — the serve-time matmul dispatch layer: fused dequant matmul
+  (Pallas kernel on TPU, blockwise jnp elsewhere) over tensor-parallel plane
+  shards.  ``models/layers.py::linear`` routes every quantized kernel here.
+* ``kvquant`` — int8 KV-cache quantization (per-token-per-head symmetric
+  grids) used by the quantized paged block pool in ``models/attention.py``.
+* ``report``  — packed-weight byte accounting (total vs per-device under a
+  ``ShardingPlan``), consumed by ``launch/dryrun.py`` and
+  ``benchmarks/bench_serving.py`` to prove planes are sharded, not
+  replicated.
+
+The write side of plane sharding lives in ``dist/sharding.py``
+(``ShardingPlan.param_shardings`` understands ``QuantizedTensor`` nodes);
+this package is the read side plus the accounting.
+"""
+from repro.serving.qserve.kvquant import dequantize_kv, quantize_kv
+from repro.serving.qserve.linear import quantized_linear
+from repro.serving.qserve.report import packed_plane_bytes
+
+__all__ = ["quantized_linear", "quantize_kv", "dequantize_kv",
+           "packed_plane_bytes"]

@@ -1,0 +1,111 @@
+"""Serve-time dispatch for quantized linear kernels (the fused-dequant path).
+
+``models/layers.py::linear`` calls ``quantized_linear`` whenever a kernel
+leaf is a packed ``QuantizedTensor``.  Without a distribution context (or on
+a trivial mesh) this is exactly ``kernels.dequant_matmul.ops.dequant_matmul``
+— Pallas kernel on TPU, blockwise jnp elsewhere; the fp weight never
+materializes in HBM either way.
+
+Under tensor parallelism the packed planes are *sharded* by
+``ShardingPlan.param_shardings`` (packed ints along the same axis as the fp
+kernel they replace, grouped scales/zeros along the group axis, outlier COO
+buffers replicated), and this module runs the fused matmul inside a
+shard_map so each shard touches only its local plane slab:
+
+  * ``kind="col"`` (wq/wk/wv/wi/wg/...): the output dim N splits over tp —
+    each shard computes ``x @ W_local`` with zero collectives, mirroring the
+    fp column-parallel layout.
+  * ``kind="row"`` (wo/out_proj/cm_value): the contraction dim K splits over
+    tp (group-aligned) — each shard computes a partial product and one psum
+    combines, mirroring the fp row-parallel "one all-reduce" contract.
+
+The SpQR COO outlier correction uses global (row, col) indices and is
+applied outside the shard_map on the assembled output.  BiLLM residual
+planes fall back to the whole-tensor path (their serve traffic is the w1
+research config, not the production rtn/OAC fast path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qformat import QuantizedTensor
+from repro.dist import ctx as dctx
+from repro.kernels.dequant_matmul import ops as dq_ops
+
+
+def _row_aligned(qt: QuantizedTensor, T: int) -> bool:
+    """Can the contraction dim split over T shards without breaking the
+    packing bytes or the quant-group tiling?"""
+    K = qt.shape[0]
+    if K % T or (K // T) % qt.group_size:
+        return False
+    return all(p.shape[0] % T == 0 for p in qt.planes)
+
+
+def _local_matmul(bits, group_size):
+    def local(xl, planes_l, s_l, z_l):
+        return dq_ops.dequant_matmul_parts(
+            xl, planes_l, s_l, z_l, bits=bits, group_size=group_size)
+    return local
+
+
+def _col_sharded(x2, qt, scales, zeros, c):
+    """N splits over tp; no collective (fp column-parallel analogue)."""
+    from jax.sharding import PartitionSpec as P
+    tp = c.tp
+    rep = P(None, None)
+    col = P(None, tp)
+    return jax.shard_map(
+        _local_matmul(qt.bits, qt.group_size), mesh=c.mesh,
+        in_specs=(rep, tuple(col for _ in qt.planes), col, col),
+        out_specs=col)(x2, qt.planes, scales, zeros)
+
+
+def _row_sharded(x2, qt, scales, zeros, c):
+    """K splits over tp; partial products psum (fp row-parallel analogue)."""
+    from jax.sharding import PartitionSpec as P
+    tp = c.tp
+    core = _local_matmul(qt.bits, qt.group_size)
+
+    def local(xl, planes_l, s_l, z_l):
+        return jax.lax.psum(core(xl, planes_l, s_l, z_l), tp)
+
+    rowx = P(None, tp)
+    row = P(tp, None)
+    return jax.shard_map(
+        local, mesh=c.mesh,
+        in_specs=(rowx, tuple(row for _ in qt.planes), row, row),
+        out_specs=P(None, None))(x2, qt.planes, scales, zeros)
+
+
+def quantized_linear(x, qt: QuantizedTensor, *, kind: str = "col"):
+    """x (..., K) @ packed (K, N) -> (..., N) in x.dtype.
+
+    ``kind`` names the fp-parallel layout of the kernel this tensor packs:
+    "col" shards the output dim, "row" the contraction dim (the
+    ``_ROW_SHARDED`` projections in ``dist/sharding.py``).  Non-divisible
+    shapes and BiLLM-residual tensors fall back to the whole-tensor op —
+    GSPMD then reshards as needed, so the fallback is a layout decision,
+    never a correctness one."""
+    c = dctx.get()
+    if c is None or c.tp_size <= 1 or qt.resid_planes is not None:
+        return dq_ops.dequant_matmul(x, qt)
+    lead = x.shape[:-1]
+    K, N = qt.shape
+    T = c.tp_size
+    x2 = x.reshape(-1, K)
+    scales, zeros = qt.scales_zeros()
+    scales = scales.astype(jnp.float32)
+    zeros = zeros.astype(jnp.float32)
+    G = scales.shape[0]
+    if kind == "col" and N % T == 0:
+        y = _col_sharded(x2, qt, scales, zeros, c)
+    elif kind == "row" and G % T == 0 and _row_aligned(qt, T):
+        y = _row_sharded(x2, qt, scales, zeros, c)
+    else:
+        y = dq_ops.dequant_matmul_parts(
+            x2, qt.planes, scales, zeros, bits=qt.bits,
+            group_size=qt.group_size)
+    y = dq_ops.outlier_correction(x2, qt, y)
+    return y.reshape(*lead, N).astype(x.dtype)

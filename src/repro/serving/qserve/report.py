@@ -1,0 +1,76 @@
+"""Packed-weight byte accounting: proves planes are sharded, not replicated.
+
+``packed_plane_bytes(params, shardings)`` walks every ``QuantizedTensor``
+in a (concrete or abstract) param tree and returns the total packed-plane
+bytes plus — when a matching shardings tree from
+``ShardingPlan.param_shardings`` is given — the per-device bytes implied by
+each plane's ``NamedSharding.shard_shape``.  A replicated layout reports
+``per_device == total``; a properly tp-sharded layout reports
+``per_device ~= total / tp``.  ``launch/dryrun.py`` asserts the latter for
+quantized decode cells and ``benchmarks/bench_serving.py`` prints it as a
+bench row (over an ``AbstractMesh``, so no devices are needed).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.qformat import QuantizedTensor
+
+# tripwire headroom over the ideal per-device ratio of 1/tp: odd kernels
+# whose dims don't divide the tp axis legitimately replicate, but anything
+# past this means the planes as a whole are not sharded.  Shared by the
+# dryrun assertion, the bench tripwire, and test_dist.
+PACKED_SHARD_SLACK = 1.25
+
+
+def _is_qt(n):
+    return isinstance(n, QuantizedTensor)
+
+
+def _plane_leaves(qt: QuantizedTensor):
+    planes = list(qt.planes)
+    if qt.resid_planes is not None:
+        planes += list(qt.resid_planes)
+    return planes
+
+
+def packed_plane_bytes(params, shardings=None) -> dict:
+    """-> {"total": int, "per_device": int, "n_tensors": int, "ratio": float}.
+
+    ``total`` counts the uint8 code planes (incl. BiLLM residual planes) of
+    every QuantizedTensor; ``per_device`` is the same count under the given
+    shardings tree (equal to ``total`` when ``shardings is None``).
+    ``ratio`` = per_device / total (1.0 = replicated, 1/tp = fully sharded).
+    """
+    p_nodes = [n for n in jax.tree.leaves(params, is_leaf=_is_qt)
+               if _is_qt(n)]
+    s_nodes = [None] * len(p_nodes)
+    if shardings is not None:
+        s_nodes = [n for n in jax.tree.leaves(shardings, is_leaf=_is_qt)
+                   if _is_qt(n)]
+        assert len(s_nodes) == len(p_nodes), (len(s_nodes), len(p_nodes))
+    total = 0
+    per_device = 0
+    for qt, sh in zip(p_nodes, s_nodes):
+        planes = _plane_leaves(qt)
+        shards = _plane_leaves(sh) if sh is not None else [None] * len(planes)
+        for plane, s in zip(planes, shards):
+            n = int(np.prod(plane.shape))
+            total += n
+            if s is None:
+                per_device += n
+            else:
+                per_device += int(np.prod(s.shard_shape(tuple(plane.shape))))
+    return {"total": total, "per_device": per_device,
+            "n_tensors": len(p_nodes),
+            "ratio": per_device / total if total else 1.0}
+
+
+def abstract_tp_mesh(tp: int, dp: int = 1):
+    """Device-free (dp, tp) AbstractMesh for layout-only accounting —
+    ``make_plan``/``param_shardings``/``shard_shape`` all work on it."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((("data", dp), ("model", tp)))

@@ -9,6 +9,7 @@ ShapeDtypeStruct tree for dry-run lowering of w2/w3/w4 serve steps.
 from __future__ import annotations
 
 from functools import partial
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,22 +19,39 @@ from repro.core import qformat
 from repro.core import quantizers as qz
 from repro.models import build_model
 
-# keep these in fp16/bf16: embeddings, lm head (paper keeps them fp16), and
-# anything that is not a 2-D matmul kernel
-_SKIP = ("embed", "lm_head")
+# keep these in fp16/bf16: embeddings, lm head (paper keeps them fp16),
+# norm/gate scales, and anything that is not a 2-D matmul kernel
+_SKIP = ("embed", "lm_head", "norm", "scale", "bias")
 
 
-def _is_quant_leaf(path: str) -> bool:
-    return path.endswith("kernel") and not any(s in path for s in _SKIP)
+def _is_quant_leaf(path: str, leaf=None) -> bool:
+    """True iff ``path``/``leaf`` is a packable matmul kernel.
+
+    Requires the exact ``/kernel`` leaf name (a future ``foo_kernel``
+    rename cannot match by accident), rejects anything on the skip list
+    (embeddings, lm head, norms/scales/biases), and — when the leaf is
+    given — rejects sub-2-D arrays outright: 1-D vectors (norm scales,
+    biases) are never matmul kernels no matter what they are named."""
+    if leaf is not None and getattr(leaf, "ndim", 0) < 2:
+        return False
+    return path.endswith("/kernel") and not any(s in path for s in _SKIP)
+
+
+def _alignment_skip(d_in: int, qcfg: QuantConfig) -> str:
+    """Why a kernel with contraction dim ``d_in`` stays fp ('' = packable)."""
+    if d_in % qcfg.group_size:
+        return f"d_in={d_in} not divisible by group_size={qcfg.group_size}"
+    if d_in < 2 * qcfg.group_size:
+        return f"d_in={d_in} < 2 groups of {qcfg.group_size}"
+    return ""
 
 
 def _quantize_leaf(w, qcfg: QuantConfig):
-    """w (..., d_in, d_out) -> stacked QuantizedTensor (leading dims vmapped)."""
+    """w (..., d_in, d_out) -> stacked QuantizedTensor (leading dims vmapped).
+    Callers must pre-check alignment (``_alignment_skip``)."""
     if w.ndim > 2:
         fn = partial(_quantize_leaf, qcfg=qcfg)
         return jax.vmap(fn)(w)
-    if w.shape[0] % qcfg.group_size or w.shape[0] < 2 * qcfg.group_size:
-        return w  # tiny / misaligned projections stay high precision
     q, scales, zeros, _ = qz.rtn_quantize(w, qcfg.wbits, qcfg.group_size)
     cap = max(int(qcfg.outlier_capacity * w.size), 8)
     zr = jnp.zeros((cap,), jnp.int32)
@@ -43,18 +61,36 @@ def _quantize_leaf(w, qcfg: QuantConfig):
         stats_bits=qcfg.stats_bits, stats_group=qcfg.stats_group)
 
 
-def quantize_params_rtn(params, qcfg: QuantConfig):
-    """Replace every eligible kernel with a packed QuantizedTensor (RTN)."""
+def quantize_params_rtn(params, qcfg: QuantConfig,
+                        verbose: bool = False) -> Tuple[dict, List[str]]:
+    """Replace every eligible kernel with a packed QuantizedTensor (RTN).
+
+    Returns ``(params, skipped_paths)`` — the paths of quantization-eligible
+    kernels left in full precision because their contraction dim is
+    misaligned with (or too small for) the group size, so callers can see
+    exactly which projections still cost fp bytes instead of discovering it
+    from a serving-memory regression.  ``verbose`` prints the summary."""
     from repro import utils
 
+    skipped: List[str] = []
+
     def convert(path, leaf):
-        if _is_quant_leaf(path) and hasattr(leaf, "ndim") and leaf.ndim >= 2:
-            return _quantize_leaf(leaf, qcfg)
-        return leaf
+        if not (_is_quant_leaf(path, leaf) and hasattr(leaf, "ndim")):
+            return leaf
+        why = _alignment_skip(leaf.shape[-2], qcfg)
+        if why:
+            skipped.append(path)
+            if verbose:
+                print(f"[quantize_params_rtn] skip {path}: {why}")
+            return leaf
+        return _quantize_leaf(leaf, qcfg)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     leaves = [convert(utils.path_str(p), v) for p, v in flat]
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+    if verbose and skipped:
+        print(f"[quantize_params_rtn] {len(skipped)} kernels left fp "
+              f"(misaligned/tiny): {skipped}")
+    return jax.tree_util.tree_unflatten(treedef, leaves), skipped
 
 
 def abstract_quantized_params(cfg: ModelConfig,
@@ -65,10 +101,10 @@ def abstract_quantized_params(cfg: ModelConfig,
     from repro import utils
 
     def convert(path, leaf):
-        if not (_is_quant_leaf(path) and leaf.ndim >= 2):
+        if not _is_quant_leaf(path, leaf):
             return leaf
         d_in, d_out = leaf.shape[-2:]
-        if d_in % qcfg.group_size or d_in < 2 * qcfg.group_size:
+        if _alignment_skip(d_in, qcfg):
             return leaf
         qt = qformat.abstract_quantized(
             d_in, d_out, qcfg.wbits, qcfg.group_size,

@@ -208,6 +208,135 @@ def test_paged_flash_decode_matches_unsharded():
     assert "PAGEDFLASH" in out
 
 
+def test_quantized_linear_tp_matches_unsharded():
+    """The qserve dispatch layer's col/row shard_maps over tp-sharded
+    packed planes must match the whole-tensor fused op."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import qformat
+        from repro.core import quantizers as qz
+        from repro.dist import ctx as dctx
+        from repro.dist.ctx import DistCtx
+        from repro.kernels.dequant_matmul import ops as dq_ops
+        from repro.serving.qserve.linear import quantized_linear
+
+        rng = np.random.default_rng(0)
+        K, N, gs = 128, 64, 16
+        W = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32)) * 0.1
+        q, s, z, _ = qz.rtn_quantize(W, 3, gs)     # 3-bit: two planes
+        zr = jnp.zeros((8,), jnp.int32)
+        qt = qformat.make_quantized(q, s, z, 3, gs, W.shape, zr, zr,
+                                    jnp.zeros((8,), jnp.bfloat16),
+                                    dtype="float32")
+        x = jnp.asarray(rng.normal(size=(4, K)).astype(np.float32))
+        ref = dq_ops.dequant_matmul(x, qt)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        ctx = DistCtx(mesh=mesh, dp=("data",), tp="model", batch_spec=None)
+        with jax.set_mesh(mesh):
+            with dctx.use(ctx):
+                col = jax.jit(
+                    lambda xx: quantized_linear(xx, qt, kind="col"))(x)
+                row = jax.jit(
+                    lambda xx: quantized_linear(xx, qt, kind="row"))(x)
+        ec = float(jnp.abs(col - ref).max())
+        er = float(jnp.abs(row - ref).max())
+        print("QLINTP", ec, er)
+        assert ec < 1e-5 and er < 1e-5, (ec, er)
+    """)
+    assert "QLINTP" in out
+
+
+def test_quantized_paged_decode_cells_lower_with_sharded_planes():
+    """The full qserve decode cell: packed params + int8 paged pool lower
+    and compile under tp in both decode modes, with the QuantizedTensor
+    planes actually sharded (per-device packed bytes ~ total/tp — the
+    dryrun assertion, here on a virtual mesh)."""
+    out = run_with_devices("""
+        import jax
+        from repro.configs import get_smoke
+        from repro.configs.base import QuantConfig, ShapeConfig
+        from repro.dist.sharding import make_plan
+        from repro.dist.steps import build_step
+        from repro.serving.quantized import abstract_quantized_params
+        from repro.serving.qserve.report import PACKED_SHARD_SLACK, \\
+            packed_plane_bytes
+
+        qcfg = QuantConfig(wbits=4, group_size=16)
+        shape = ShapeConfig("d", 256, 8, "decode")
+        cells = [("gemma3-27b", (2, 2)),      # kv=2, tp=2 -> dense mode
+                 ("qwen2-1.5b", (2, 4))]      # kv=2, tp=4 -> flash mode
+        for arch, dims in cells:
+            mesh = jax.make_mesh(dims, ("data", "model"))
+            cfg = get_smoke(arch)
+            qsds = abstract_quantized_params(cfg, qcfg)
+            plan = make_plan(cfg, mesh)
+            rep = packed_plane_bytes(qsds, plan.param_shardings(qsds))
+            assert rep["ratio"] <= PACKED_SHARD_SLACK / plan.tp_size, rep
+            with jax.set_mesh(mesh):
+                jitted, args, ctx = build_step(
+                    cfg, shape, mesh, quantized_params_sds=qsds,
+                    paged=True, kv_bits=8)
+                jitted.lower(*args).compile()
+            print("QCELL", arch, ctx.attn_decode_mode,
+                  round(rep["ratio"], 3))
+    """)
+    assert out.count("QCELL") == 2
+
+
+def test_paged_flash_int8_matches_unsharded():
+    """Block-parallel flash decoding over a tp-sharded *int8* paged pool
+    (codes + scale planes striped together) must match the unsharded int8
+    paged reference."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist import ctx as dctx
+        from repro.dist.ctx import DistCtx
+        from repro.models import attention as A
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, KV, H, Dh, bs, mb, T = 4, 2, 4, 8, 4, 8, 4
+        nb = 32
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(k1, (B, 1, H, Dh))
+        kn = jax.random.normal(k2, (B, 1, KV, Dh))
+        vn = jax.random.normal(k3, (B, 1, KV, Dh))
+        pos = jnp.asarray([9, 3, 6, 0])
+        bt = np.full((B, mb), -1, np.int32)
+        nxt = {t: 1 for t in range(T)}
+        for b in range(B):
+            for lb in range(int(pos[b]) // bs + 1):
+                t = lb // (mb // T)
+                bt[b, lb] = t * (nb // T) + nxt[t]; nxt[t] += 1
+        cache = A.init_paged_cache(B, nb, bs, mb, KV, Dh, kv_bits=8)
+        cache = cache._replace(block_tables=jnp.asarray(bt))
+        kall = jax.random.normal(k4, (B, mb * bs, KV, Dh))
+        cache = A.cache_prefill(cache, kall, kall)
+
+        ref_cache = A.cache_write(cache, kn, vn, pos)
+        ref = A.decode_attention(q, ref_cache, pos)
+
+        ctx = DistCtx(mesh=mesh, dp=("data",), tp="model", batch_spec=None,
+                      attn_decode_mode="flash")
+        with jax.set_mesh(mesh):
+            with dctx.use(ctx):
+                got, got_cache = jax.jit(
+                    lambda *a: A.serve_attention_write(*a))(
+                    q, kn, vn, cache, pos)
+        err = float(jnp.abs(got - ref).max())
+        scratch = [t * (nb // T) for t in range(T)]
+        live = np.setdiff1d(np.arange(nb), scratch)
+        for a, b in ((got_cache.k, ref_cache.k), (got_cache.v, ref_cache.v),
+                     (got_cache.k_scale, ref_cache.k_scale),
+                     (got_cache.v_scale, ref_cache.v_scale)):
+            np.testing.assert_array_equal(np.asarray(a)[live],
+                                          np.asarray(b)[live])
+        print("PAGEDFLASHQ", err)
+        assert err < 1e-5, err
+    """)
+    assert "PAGEDFLASHQ" in out
+
+
 def test_paged_decode_cells_lower_and_compile():
     """build_step(paged=True) decode cells lower + compile under TP for
     both decode modes and a non-uniform family (the production 16x16 cell

@@ -1,0 +1,276 @@
+"""qserve: quantized serving subsystem.
+
+Covers the RTN skip-list contract (misaligned projections reported, not
+silently left fp), the hardened ``_is_quant_leaf`` predicate, the
+``quantized_linear`` dispatch (bit-identical to the fused op off-mesh),
+int8 KV quantization (roundtrip bound, model-level logit tolerance, engine
+KV-bytes reduction), and greedy bit-identity of ``PagedEngine`` vs
+``StaticEngine`` on RTN-w4 checkpoints across all four model families.
+TP-sharded plane tests live in ``test_dist.py`` (they need virtual
+devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import qformat
+from repro.core import quantizers as qz
+from repro.core.qformat import QuantizedTensor
+from repro.kernels.dequant_matmul import ops as dq_ops
+from repro.models import build_model
+from repro.serving.engine import PagedEngine, StaticEngine
+from repro.serving.qserve import kvquant
+from repro.serving.qserve.linear import quantized_linear
+from repro.serving.quantized import _is_quant_leaf, quantize_params_rtn
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+KEY = jax.random.PRNGKey(0)
+# documented int8-KV serving contract: max-abs logit drift vs the fp paged
+# pool (measured ~0.035 on the toy config; DESIGN.md §Quantized serving)
+INT8_KV_LOGIT_TOL = 0.1
+
+
+# ----------------------------------------------------------- leaf predicate
+def test_is_quant_leaf_excludes_non_kernels():
+    """A future param rename must not get packed by accident: only exact
+    ``/kernel`` leaves qualify, and never 1-D leaves or norm scales."""
+    ok = jnp.zeros((64, 64))
+    vec = jnp.zeros((64,))
+    assert _is_quant_leaf("/layers/attn/wq/kernel", ok)
+    assert not _is_quant_leaf("/layers/attn/wq/kernel", vec)   # 1-D
+    assert not _is_quant_leaf("/layers/ln1/scale", vec)        # norm scale
+    assert not _is_quant_leaf("/layers/ln1/scale", ok)
+    assert not _is_quant_leaf("/final_norm/kernel", ok)        # norm-named
+    assert not _is_quant_leaf("/layers/mlp/wi/foo_kernel", ok)  # not /kernel
+    assert not _is_quant_leaf("/embed/kernel", ok)
+    assert not _is_quant_leaf("/lm_head/kernel", ok)
+    assert not _is_quant_leaf("/layers/attn/wq/bias", vec)
+
+
+def test_quantize_params_rtn_never_packs_vectors_or_norms():
+    tree = {"a": {"kernel": jnp.zeros((64,))},          # 1-D, kernel-named
+            "norm": {"kernel": jnp.ones((64, 64))},     # norm-pathed 2-D
+            "b": {"kernel": jax.random.normal(KEY, (64, 64))}}
+    qp, skipped = quantize_params_rtn(tree, QuantConfig(wbits=4,
+                                                        group_size=16))
+    assert not isinstance(qp["a"]["kernel"], QuantizedTensor)
+    assert not isinstance(qp["norm"]["kernel"], QuantizedTensor)
+    assert isinstance(qp["b"]["kernel"], QuantizedTensor)
+    assert skipped == []        # exclusions are by policy, not alignment
+
+
+# ------------------------------------------------------------- skip list
+def test_skip_list_reports_misaligned_projections():
+    """Odd head dims leave attention projections misaligned with the quant
+    group — those kernels must be *reported*, not silently left fp."""
+    odd = ModelConfig(name="odd", family="dense", n_layers=2, d_model=48,
+                      vocab=64, n_heads=2, n_kv_heads=2, head_dim=24,
+                      d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+    m = build_model(odd)
+    params = m.init(KEY)
+    qp, skipped = quantize_params_rtn(params, QuantConfig(wbits=4,
+                                                          group_size=32))
+    # d_in=48 projections (wq/wk/wv from d_model, wo from 2*24 heads,
+    # wi/wg from d_model) all misalign with group 32; the mlp wo (d_in=64)
+    # packs
+    assert any("wq/kernel" in p for p in skipped)
+    assert any("attn/wo/kernel" in p for p in skipped)
+    assert any("mlp/wi/kernel" in p for p in skipped)
+    assert not any("mlp/wo" in p for p in skipped)
+    from repro import utils
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        qp, is_leaf=lambda n: isinstance(n, QuantizedTensor))
+    leaves = {utils.path_str(p): v for p, v in flat}
+    for p in skipped:           # skipped kernels really stayed fp arrays
+        assert not isinstance(leaves[p], QuantizedTensor), p
+    assert isinstance(leaves["/layers/mlp/wo/kernel"], QuantizedTensor)
+    # the skipped model still serves
+    eng = StaticEngine(odd, qp, max_batch=2, capacity=32)
+    r = eng.submit(np.arange(1, 9), max_tokens=3)
+    eng.run()
+    assert r.done and len(r.out) == 3
+
+
+def test_aligned_config_has_empty_skip_list():
+    m = build_model(CFG)
+    params = m.init(KEY)
+    _, skipped = quantize_params_rtn(params, QuantConfig(wbits=4,
+                                                         group_size=16))
+    assert skipped == []
+
+
+# ------------------------------------------------------ dispatch layer
+def test_quantized_linear_no_ctx_matches_fused_op():
+    """Off-mesh the dispatch layer must be exactly the fused op (the
+    engines' single-device fast path)."""
+    rng = np.random.default_rng(0)
+    K, N, gs = 128, 64, 32
+    W = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32)) * 0.1
+    q, s, z, _ = qz.rtn_quantize(W, 4, gs)
+    zr = jnp.zeros((8,), jnp.int32)
+    qt = qformat.make_quantized(q, s, z, 4, gs, W.shape, zr, zr,
+                                jnp.zeros((8,), jnp.bfloat16),
+                                dtype="float32")
+    x = jnp.asarray(rng.normal(size=(4, K)).astype(np.float32))
+    for kind in ("col", "row"):
+        got = quantized_linear(x, qt, kind=kind)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(dq_ops.dequant_matmul(x, qt)))
+
+
+def test_model_layers_route_quantized_kernels_through_qserve(monkeypatch):
+    """models/layers.py must dispatch QuantizedTensor kernels to the qserve
+    layer (the serve hot path), not dequantize a full fp weight."""
+    import repro.serving.qserve.linear as ql
+    calls = []
+    orig = ql.quantized_linear
+    monkeypatch.setattr(ql, "quantized_linear",
+                        lambda *a, **k: calls.append(k) or orig(*a, **k))
+    m = build_model(CFG)
+    params = m.init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    cache = m.init_cache(2, 16, dtype=jnp.float32)
+    m.decode_step(qp, jnp.ones((2, 1), jnp.int32), cache, jnp.asarray(0))
+    assert calls, "decode never hit the qserve dispatch layer"
+    assert any(k.get("kind") == "row" for k in calls)   # wo hinted row
+
+
+# ------------------------------------------------------------ int8 KV
+def test_kv_quant_roundtrip_bound():
+    x = jax.random.normal(KEY, (5, 7, 16)) * 3.0
+    q, s = kvquant.quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.dtype == kvquant.SCALE_DTYPE
+    back = kvquant.dequantize_kv(q, s)
+    # half-step of the per-vector grid plus bf16 scale rounding (~0.4%)
+    bound = np.asarray(s.astype(jnp.float32))[..., None] * 0.5 \
+        + np.abs(np.asarray(x)) * 5e-3 + 1e-6
+    assert (np.abs(np.asarray(back) - np.asarray(x)) <= bound).all()
+
+
+def _teacher_forced_logits(m, params, toks, kv_bits, cap=32, bs=8):
+    B, S = toks.shape
+    cache = m.init_cache(B, cap, dtype=jnp.float32, paged=True,
+                         block_size=bs, num_blocks=B * (cap // bs) + 1,
+                         kv_bits=kv_bits)
+    bt = np.arange(1, 1 + B * (cap // bs), dtype=np.int32)
+    cache["kv"] = cache["kv"]._replace(
+        block_tables=jnp.asarray(bt.reshape(B, cap // bs)))
+    step = jax.jit(m.decode_step)
+    lgs = []
+    for t in range(S):
+        lg, cache = step(params, toks[:, t:t + 1], cache, jnp.asarray(t))
+        lgs.append(lg)
+    return jnp.concatenate(lgs, axis=1)
+
+
+def test_int8_paged_kv_logit_tolerance():
+    """The int8 pool's serving contract: teacher-forced logits stay within
+    INT8_KV_LOGIT_TOL max-abs of the fp paged pool, and greedy decisions
+    are unchanged on the toy config."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, CFG.vocab)
+    fp = _teacher_forced_logits(m, params, toks, 16)
+    i8 = _teacher_forced_logits(m, params, toks, 8)
+    diff = float(jnp.abs(fp - i8).max())
+    assert diff < INT8_KV_LOGIT_TOL, diff
+    assert (jnp.argmax(fp, -1) == jnp.argmax(i8, -1)).all()
+
+
+def test_int8_paged_engine_runs_and_halves_kv_bytes():
+    import importlib.util, os
+    spec = importlib.util.spec_from_file_location(
+        "bench_serving", os.path.join(os.path.dirname(__file__), "..",
+                                      "benchmarks", "bench_serving.py"))
+    bench = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bench)
+    m = build_model(CFG)
+    params = m.init(KEY)
+
+    def run(kv_bits):
+        eng = PagedEngine(CFG, params, max_batch=2, capacity=48,
+                          block_size=8, kv_bits=kv_bits)
+        rs = [eng.submit(np.arange(1, 10), max_tokens=4),
+              eng.submit(np.arange(2, 14), max_tokens=3)]
+        eng.run()
+        assert all(r.done for r in rs)
+        _, paged_bytes = bench.kv_bytes_split(eng)
+        return paged_bytes, rs
+
+    fp_bytes, fp_rs = run(16)
+    i8_bytes, i8_rs = run(8)
+    # >= 40% below the fp16-equivalent paged baseline (fp pool is f32)
+    assert i8_bytes <= 0.6 * (fp_bytes / 2.0), (i8_bytes, fp_bytes)
+    # toy-scale greedy outputs are unchanged (documented tolerance allows
+    # drift at depth; here the margin is large)
+    for a, b in zip(fp_rs, i8_rs):
+        assert a.out == b.out, (a.out, b.out)
+
+
+# --------------------------------------- rtn-w4 engine identity, 4 families
+@pytest.mark.parametrize("arch", ["gemma3-27b", "zamba2-7b", "rwkv6-3b"])
+def test_rtn_w4_paged_matches_static_greedy_families(arch):
+    """Greedy serving of an RTN-w4 checkpoint through the paged engine must
+    be bit-identical to the static-cohort baseline for grouped-local /
+    hybrid / ssm (the uniform dense family runs in the toy test below)."""
+    cfg = get_smoke(arch)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    prompts = [np.arange(1, 9), np.arange(3, 12), np.arange(2, 7)]
+    budgets = [4, 3, 4]
+
+    def submit(eng):
+        return [eng.submit(p, max_tokens=b)
+                for p, b in zip(prompts, budgets)]
+
+    es = StaticEngine(cfg, qp, max_batch=2, capacity=48)
+    ep = PagedEngine(cfg, qp, max_batch=2, capacity=48, block_size=8)
+    rs, rp = submit(es), submit(ep)
+    es.run()
+    ep.run()
+    for a, b in zip(rs, rp):
+        assert a.done and b.done
+        assert a.out == b.out, (arch, a.rid, a.out, b.out)
+
+
+def test_rtn_w4_paged_matches_static_greedy_uniform():
+    m = build_model(CFG)
+    params = m.init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    prompts = [np.arange(1, 9), np.arange(3, 15), np.arange(2, 7),
+               np.arange(4, 12)]
+    budgets = [5, 3, 6, 4]
+
+    def submit(eng):
+        return [eng.submit(p, max_tokens=b)
+                for p, b in zip(prompts, budgets)]
+
+    es = StaticEngine(CFG, qp, max_batch=2, capacity=48)
+    ep = PagedEngine(CFG, qp, max_batch=2, capacity=48, block_size=8)
+    rs, rp = submit(es), submit(ep)
+    es.run()
+    ep.run()
+    for a, b in zip(rs, rp):
+        assert a.out == b.out, (a.rid, a.out, b.out)
+
+
+# ------------------------------------------------------ packed accounting
+def test_packed_plane_report_replicated_vs_sharded():
+    from repro.dist.sharding import make_plan
+    from repro.serving.qserve.report import abstract_tp_mesh, \
+        packed_plane_bytes
+    m = build_model(CFG)
+    params = m.init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    plain = packed_plane_bytes(qp)
+    assert plain["ratio"] == 1.0 and plain["total"] > 0
+    plan = make_plan(CFG, abstract_tp_mesh(4))
+    rep = packed_plane_bytes(qp, plan.param_shardings(qp))
+    assert rep["total"] == plain["total"]
+    # every toy kernel dim divides 4 -> fully sharded planes
+    assert rep["per_device"] * 4 == rep["total"], rep
