@@ -1,12 +1,15 @@
 """End-to-end driver: train a ~6M-param LM a few hundred steps, quantize it
-with the full OAC pipeline (Algorithm 1), pack to 2-bit storage, and compare
-held-out perplexity across methods — the paper's workflow in miniature.
+with the full OAC pipeline (Algorithm 1), pack to 2-bit storage, save the
+packed checkpoint to disk (``serving.qserve.ckpt``), and serve it back from
+the on-disk planes — the paper's workflow in miniature, ending in the same
+artifact ``launch/serve.py --ckpt`` consumes.
 
 Run:  PYTHONPATH=src python examples/quantize_llm.py [--steps 300]
 """
 import argparse
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -60,7 +63,7 @@ def main():
         print(f"  {name:12s} ppl {np.exp(ce):8.3f}  (ΔCE {ce - base_ce:+.4f})")
     print(f"  {'baseline':12s} ppl {np.exp(base_ce):8.3f}")
 
-    print("\n== 3. pack OAC weights to storage + serve a request ==")
+    print("\n== 3. pack OAC weights -> packed checkpoint -> serve from disk ==")
     q = QuantConfig(wbits=args.wbits, group_size=32, method="spqr",
                     hessian="oac")
     qp, results = pipeline.quantize_model(m, params, calib, q,
@@ -71,16 +74,31 @@ def main():
             for v in jax.tree_util.tree_leaves(
                 packed, is_leaf=lambda x: isinstance(x, QuantizedTensor))
             if isinstance(v, QuantizedTensor)]
+    from repro.launch.dryrun import verify_ckpt
     from repro.serving.engine import Engine
-    eng = Engine(cfg, packed, max_batch=1, capacity=64)
-    r = eng.submit(np.arange(1, 12), max_tokens=8)
-    eng.run()
+    from repro.serving.qserve import ckpt as qckpt
+
+    def serve_one(tree):
+        eng = Engine(cfg, tree, max_batch=1, capacity=64)
+        r = eng.submit(np.arange(1, 12), max_tokens=8)
+        eng.run()
+        return r
+
+    ckpt_dir = os.path.join(tempfile.mkdtemp(prefix="oac_ckpt_"), "ckpt")
+    manifest = qckpt.save(ckpt_dir, packed, cfg, q)
+    verify_ckpt(ckpt_dir, verbose=False)      # manifest-only shape check
+    loaded = qckpt.load(ckpt_dir)
+    r_mem, r_disk = serve_one(packed), serve_one(loaded)
+    assert r_mem.out == r_disk.out, (r_mem.out, r_disk.out)
     avg_bits = float(np.mean(bits))
+    pf = manifest["plane_file"]
     print(f"  packed layer stacks: avg bits {avg_bits:.2f} "
           f"({16.0 / avg_bits:.1f}x smaller than fp16)")
-    print(f"  served continuation: {r.out}")
+    print(f"  checkpoint: {pf['bytes'] / 1e6:.2f} MB planes -> {ckpt_dir}")
+    print(f"  served continuation (from disk, == in-memory): {r_disk.out}")
     assert rows[-1][1] <= rows[0][1], "OAC must beat RTN"
-    print("\nOK: OAC < RTN on held-out CE; packed serving path works.")
+    print("\nOK: OAC < RTN on held-out CE; saved checkpoint serves "
+          "bit-identically to the in-memory packed tree.")
 
 
 if __name__ == "__main__":

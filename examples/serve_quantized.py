@@ -1,7 +1,9 @@
 """Serve an OAC/RTN-quantized model: packed 2-bit weights, batched requests.
 
 Shows the fused dequant-matmul path (Pallas kernel on TPU, blockwise jnp on
-CPU) and the storage win.
+CPU), the storage win, and the full checkpoint loop: the packed tree is
+written to disk (``serving.qserve.ckpt.save``), memmap-loaded back, and
+served from the on-disk planes.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py [--arch gemma3-27b]
 (assigned archs run in their reduced smoke shapes on CPU)
@@ -9,6 +11,7 @@ Run:  PYTHONPATH=src python examples/serve_quantized.py [--arch gemma3-27b]
 import argparse
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -48,14 +51,30 @@ def main():
           f"w{args.wbits}: {dense_bytes / 1e6:.2f} MB -> "
           f"{q_bytes / 1e6:.2f} MB")
 
-    eng = Engine(cfg, qp, max_batch=3, capacity=64)
-    rng = np.random.default_rng(0)
-    rs = [eng.submit(rng.integers(0, cfg.vocab, size=10), max_tokens=8)
-          for _ in range(3)]
-    eng.run()
-    for r in rs:
-        print(f"  req {r.rid} -> {r.out}")
-    print("OK: batched decode through packed weights.")
+    # write the packed tree as an on-disk checkpoint and serve from it —
+    # the same artifact `launch/serve.py --ckpt` consumes
+    from repro.serving.qserve import ckpt as qckpt
+    ckpt_dir = os.path.join(tempfile.mkdtemp(prefix="rtn_ckpt_"), "ckpt")
+    qckpt.save(ckpt_dir, qp, cfg, QuantConfig(wbits=args.wbits,
+                                              group_size=32, method="rtn"))
+    loaded = qckpt.load(ckpt_dir)
+    disk_bytes = os.path.getsize(os.path.join(ckpt_dir, qckpt.PLANES_NAME))
+    print(f"checkpoint: {disk_bytes / 1e6:.2f} MB on disk -> {ckpt_dir}")
+
+    def serve(tree):
+        eng = Engine(cfg, tree, max_batch=3, capacity=64)
+        rng = np.random.default_rng(0)
+        rs = [eng.submit(rng.integers(0, cfg.vocab, size=10), max_tokens=8)
+              for _ in range(3)]
+        eng.run()
+        return rs
+
+    rs, rs_disk = serve(qp), serve(loaded)
+    for a, b in zip(rs, rs_disk):
+        assert a.out == b.out, (a.rid, a.out, b.out)
+        print(f"  req {a.rid} -> {a.out}")
+    print("OK: batched decode through packed weights; on-disk checkpoint "
+          "serves bit-identically.")
 
 
 if __name__ == "__main__":

@@ -203,6 +203,41 @@ class LayerResult:
     w_hat: np.ndarray
 
 
+def _save_layer_result(path_tmp, path, res, w_hat):
+    """Persist one layer-kernel's full result (atomic rename).
+
+    The npz stores every field of the Calib/BinaryResult, not just the
+    fake-quant ``w_hat``, so a *resumed* run can still assemble the packed
+    ``QuantizedTensor`` checkpoint at the end (``pack_results``) — resume
+    and pack were previously mutually exclusive."""
+    arrs = {"w_hat": np.asarray(w_hat)}
+    if isinstance(res, solver.CalibResult):
+        arrs.update({f"calib_{f}": np.asarray(getattr(res, f))
+                     for f in solver.CalibResult._fields})
+    elif isinstance(res, bl.BinaryResult):
+        arrs.update({f"binary_{f}": np.asarray(getattr(res, f))
+                     for f in bl.BinaryResult._fields})
+    np.savez(path_tmp, **arrs)
+    os.replace(path_tmp, path)
+
+
+def _load_layer_result(path):
+    """-> (w_hat ndarray, CalibResult | None, BinaryResult | None) from a
+    layer npz.  Older checkpoints that stored only ``w_hat`` load with both
+    results None (resumable but not packable)."""
+    data = np.load(path, allow_pickle=False)
+    calib = binary = None
+    if "calib_q" in data:
+        calib = solver.CalibResult(
+            *(jnp.asarray(data[f"calib_{f}"])
+              for f in solver.CalibResult._fields))
+    elif "binary_w_hat" in data:
+        binary = bl.BinaryResult(
+            *(jnp.asarray(data[f"binary_{f}"])
+              for f in bl.BinaryResult._fields))
+    return data["w_hat"], calib, binary
+
+
 def _calibrate_kernel(W, H, qcfg: QuantConfig):
     if qcfg.method == "rtn":
         if W.ndim == 3:
@@ -242,10 +277,24 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
 
     manifest_path = ckpt_dir and os.path.join(ckpt_dir, "pipeline.json")
     done = {}
+    qcfg_dict = dataclasses.asdict(qcfg)
     if ckpt_dir:
         os.makedirs(ckpt_dir, exist_ok=True)
         if os.path.exists(manifest_path):
-            done = json.load(open(manifest_path))
+            stored = json.load(open(manifest_path))
+            # manifest is {"qcfg": ..., "done": ...}; flat pre-qcfg-stamp
+            # manifests (legacy) are the done-dict itself
+            done = stored["done"] if "done" in stored else stored
+            # resuming under a different QuantConfig would silently pack
+            # stale results (e.g. w4 codes re-packed at w2) — refuse
+            if stored.get("qcfg") not in (None, qcfg_dict):
+                diff = {k: (stored["qcfg"].get(k), qcfg_dict[k])
+                        for k in qcfg_dict
+                        if stored["qcfg"].get(k) != qcfg_dict[k]}
+                raise ValueError(
+                    f"calibration dir {ckpt_dir} was started with a "
+                    f"different QuantConfig ({diff}); use a fresh ckpt_dir "
+                    "or delete it to recalibrate")
             log(f"[pipeline] resuming: {len(done)} layer-kernels done")
 
     l2_caps = None
@@ -281,12 +330,11 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
             key = f"{j}:{n}"
             W = _get_layer_kernels(params, j)[n]
             if key in done:
-                data = np.load(os.path.join(ckpt_dir, done[key]),
-                               allow_pickle=False)
-                w_hat = jnp.asarray(data["w_hat"])
+                w_np, calib, binary = _load_layer_result(
+                    os.path.join(ckpt_dir, done[key]))
+                w_hat = jnp.asarray(w_np)
                 params = _set_layer_kernel(params, n, j, w_hat)
-                results[(j, n)] = LayerResult(n, j, None, None,
-                                              np.asarray(w_hat))
+                results[(j, n)] = LayerResult(n, j, calib, binary, w_np)
                 continue
             if needs_h:
                 if qcfg.hessian == "oac":
@@ -314,11 +362,11 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
             if ckpt_dir:
                 fname = f"layer{j}_{n.replace('/', '_')}.npz"
                 tmp = os.path.join(ckpt_dir, "tmp_" + fname)  # .npz suffix:
-                np.savez(tmp, w_hat=np.asarray(w_hat))        # savez keeps it
-                os.replace(tmp, os.path.join(ckpt_dir, fname))
+                _save_layer_result(                           # savez keeps it
+                    tmp, os.path.join(ckpt_dir, fname), res, w_hat)
                 done[key] = fname
                 with open(manifest_path + ".tmp", "w") as f:
-                    json.dump(done, f)
+                    json.dump({"qcfg": qcfg_dict, "done": done}, f)
                 os.replace(manifest_path + ".tmp", manifest_path)
         log(f"[pipeline] layer {j + 1}/{n_layers} done "
             f"({qcfg.method}/{qcfg.hessian}, {qcfg.wbits}-bit)")
@@ -326,24 +374,47 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
 
 
 def pack_results(params, results, qcfg: QuantConfig):
-    """Assemble packed QuantizedTensor stacks from per-layer CalibResults.
+    """Assemble packed QuantizedTensor stacks from per-layer results.
 
     Replaces each layers/<name>/kernel stack with a stacked QuantizedTensor
-    (arrays gain a leading L dim; static meta shared)."""
+    (arrays gain a leading L dim; static meta shared).  ``CalibResult``
+    layers (rtn/optq/spqr) pack to the grouped grid + COO outliers;
+    ``BinaryResult`` layers (billm) ride the 1-bit residual carrier
+    (``qformat.make_residual_carrier``) so OAC_BiLLM checkpoints live in
+    the same on-disk format.  The result feeds ``serving.qserve.ckpt.save``
+    directly."""
+    if qcfg.act_order:
+        raise ValueError(
+            "pack_results requires act_order=False: act-order scales stay "
+            "in permuted-group order (fake-quant research mode only)")
     names = sorted(layer_kernel_paths(params))
     n_layers = layer_kernel_paths(params)[names[0]].shape[0]
     params = jax.tree.map(lambda x: x, params)
     for n in names:
         per_layer = []
         for j in range(n_layers):
-            r = results[(j, n)].calib
-            if r is None:
-                raise ValueError(f"no packable CalibResult for {j}:{n}")
-            qt = qformat.make_quantized(
-                r.q, r.scales, r.zeros, qcfg.wbits, qcfg.group_size,
-                (r.q.shape[0], r.q.shape[1]), r.out_rows, r.out_cols,
-                r.out_vals.astype(jnp.bfloat16),
-                stats_bits=qcfg.stats_bits, stats_group=qcfg.stats_group)
+            lr = results[(j, n)]
+            if np.asarray(lr.w_hat).ndim != 2:
+                raise ValueError(
+                    f"{j}:{n}: expert-stacked calibration results are "
+                    "not packable yet (fused stacked-expert dequant is "
+                    "a ROADMAP item)")
+            r = lr.calib
+            if r is not None:
+                qt = qformat.make_quantized(
+                    r.q, r.scales, r.zeros, qcfg.wbits, qcfg.group_size,
+                    (r.q.shape[0], r.q.shape[1]), r.out_rows, r.out_cols,
+                    r.out_vals.astype(jnp.bfloat16),
+                    stats_bits=qcfg.stats_bits, stats_group=qcfg.stats_group)
+            elif lr.binary is not None:
+                qt = qformat.make_residual_carrier(
+                    jnp.asarray(lr.w_hat), group_size=qcfg.group_size,
+                    stats_bits=qcfg.stats_bits, stats_group=qcfg.stats_group)
+            else:
+                raise ValueError(
+                    f"no packable result for {j}:{n} (resumed from a "
+                    "pre-v1 layer checkpoint that stored only w_hat? "
+                    "re-run calibration for this layer)")
             per_layer.append(qt)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
         _kernel_node(params, n)["kernel"] = stacked

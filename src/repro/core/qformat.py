@@ -30,6 +30,24 @@ import numpy as np
 
 PACKABLE = (1, 2, 3, 4, 8)
 
+# Version tag of the packed layout (plane semantics + the on-disk entry
+# ordering below).  Bump whenever a field is added/reordered or its meaning
+# changes; ``serving.qserve.ckpt`` refuses manifests with a different tag.
+QFORMAT_VERSION = 1
+
+# Canonical per-tensor entry names in their stable on-disk order
+# (docs/qformat.md "Plane names"): packed code planes first, grouped stats
+# codes + their second-level fp stats, the COO outlier buffers, then the
+# optional BiLLM residual planes.  ``codes.1`` exists only for bits == 3
+# (the 1-bit hi plane); ``resid.*`` only when resid_planes is present.
+ENTRY_NAMES = (
+    "codes.0", "codes.1",
+    "q_scales", "ss_scale", "ss_zero",
+    "q_zeros", "zz_scale", "zz_zero",
+    "out_rows", "out_cols", "out_vals",
+    "resid.0", "resid_scales",
+)
+
 
 # --------------------------------------------------------------------------
 # bit packing (jnp, vectorized)
@@ -203,15 +221,96 @@ def make_quantized(q_codes, scales, zeros, bits, group_size, shape,
         stats_bits=stats_bits, stats_group=stats_group, dtype=dtype)
 
 
+def make_residual_carrier(w_hat, *, group_size: int, stats_bits=3,
+                          stats_group=16, dtype="bfloat16") -> QuantizedTensor:
+    """Pack an arbitrary fake-quant reconstruction exactly (in bf16) as a
+    1-bit sign plane + per-element magnitude residual.
+
+    BiLLM's per-element alpha choice (bell split / residual binarization)
+    does not fit the grouped uniform grid, so its results ride the format's
+    *residual* mechanism instead: the primary 1-bit grid is all-zero (zero
+    scales -> contributes exactly 0) and ``resid_planes``/``resid_scales``
+    carry ``sign(w_hat) * |w_hat|``.  This keeps BiLLM checkpoints in the
+    same v1 container the sharded serving stack already understands (the
+    matmul falls back to the whole-tensor op on residual tensors); storage
+    accounting for the *method* stays with ``BinaryResult.avg_bits`` — the
+    carrier's own ``storage_bits()`` reports the bf16-residual cost.
+    """
+    d_in, d_out = w_hat.shape
+    assert d_in % group_size == 0, (d_in, group_size)
+    G = d_in // group_size
+    zg = jnp.zeros((G, d_out), jnp.float32)
+    cap = 8
+    zr = jnp.zeros((cap,), jnp.int32)
+    return make_quantized(
+        jnp.zeros((d_in, d_out), jnp.uint8), zg, zg, 1, group_size,
+        (d_in, d_out), zr, zr, jnp.zeros((cap,), jnp.bfloat16),
+        stats_bits=stats_bits, stats_group=stats_group, dtype=dtype,
+        resid_signs=w_hat, resid_scales=jnp.abs(w_hat).astype(jnp.bfloat16))
+
+
+def qt_entries(qt: QuantizedTensor):
+    """The tensor's array fields as ``[(entry_name, array), ...]`` in the
+    stable on-disk order (``ENTRY_NAMES``).  The checkpoint writer, the
+    loader, and the byte accounting all iterate a QuantizedTensor through
+    this single function so the layout cannot silently drift."""
+    e = [(f"codes.{i}", p) for i, p in enumerate(qt.planes)]
+    e += [("q_scales", qt.q_scales), ("ss_scale", qt.ss_scale),
+          ("ss_zero", qt.ss_zero), ("q_zeros", qt.q_zeros),
+          ("zz_scale", qt.zz_scale), ("zz_zero", qt.zz_zero),
+          ("out_rows", qt.out_rows), ("out_cols", qt.out_cols),
+          ("out_vals", qt.out_vals)]
+    if qt.resid_planes is not None:
+        e += [(f"resid.{i}", p) for i, p in enumerate(qt.resid_planes)]
+        e += [("resid_scales", qt.resid_scales)]
+    names = [n for n, _ in e]
+    assert names == [n for n in ENTRY_NAMES if n in names], names
+    return e
+
+
+def qt_meta(qt: QuantizedTensor) -> dict:
+    """JSON-serializable static metadata of one QuantizedTensor."""
+    return {"bits": qt.bits, "group_size": qt.group_size,
+            "shape": list(qt.shape), "stats_bits": qt.stats_bits,
+            "stats_group": qt.stats_group, "dtype": qt.dtype}
+
+
+def qt_from_entries(arrays: dict, meta: dict) -> QuantizedTensor:
+    """Rebuild a QuantizedTensor from named entry arrays + static meta
+    (inverse of ``qt_entries``/``qt_meta``; the checkpoint load path)."""
+    bits = int(meta["bits"])
+    planes = tuple(arrays[f"codes.{i}"]
+                   for i in range(2 if bits == 3 else 1))
+    rp, rs = None, None
+    if "resid.0" in arrays:
+        rp = (arrays["resid.0"],)
+        rs = arrays["resid_scales"]
+    return QuantizedTensor(
+        planes=planes, q_scales=arrays["q_scales"],
+        ss_scale=arrays["ss_scale"], ss_zero=arrays["ss_zero"],
+        q_zeros=arrays["q_zeros"], zz_scale=arrays["zz_scale"],
+        zz_zero=arrays["zz_zero"], out_rows=arrays["out_rows"],
+        out_cols=arrays["out_cols"], out_vals=arrays["out_vals"],
+        resid_planes=rp, resid_scales=rs,
+        bits=bits, group_size=int(meta["group_size"]),
+        shape=tuple(meta["shape"]), stats_bits=int(meta["stats_bits"]),
+        stats_group=int(meta["stats_group"]), dtype=meta["dtype"])
+
+
 def abstract_quantized(d_in: int, d_out: int, bits: int, group_size: int,
                        outlier_capacity: float = 0.005, stats_bits=3,
                        stats_group=16, dtype="bfloat16",
-                       residual: bool = False) -> QuantizedTensor:
-    """ShapeDtypeStruct skeleton of a QuantizedTensor (for dry-run lowering)."""
+                       residual: bool = False,
+                       outlier_count: Optional[int] = None) -> QuantizedTensor:
+    """ShapeDtypeStruct skeleton of a QuantizedTensor (for dry-run lowering).
+
+    ``outlier_count`` pins the COO capacity exactly (checkpoint-manifest
+    verification); otherwise it is derived from ``outlier_capacity``."""
     sds = jax.ShapeDtypeStruct
     G = d_in // group_size
     GB = -(-G // stats_group)
-    cap = max(int(outlier_capacity * d_in * d_out), 8)
+    cap = outlier_count if outlier_count is not None else \
+        max(int(outlier_capacity * d_in * d_out), 8)
     if bits == 3:
         planes = (sds((d_in // 4, d_out), jnp.uint8),
                   sds((d_in // 8, d_out), jnp.uint8))

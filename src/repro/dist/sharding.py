@@ -215,6 +215,24 @@ class ShardingPlan:
                 out.append(NamedSharding(self.mesh, P(*spec)))
         return jax.tree_util.tree_unflatten(treedef, out)
 
+    # ------------------------------------------------------------- loading
+    def place(self, sharding, shape, dtype, read):
+        """Build one committed array shard-by-shard (checkpoint load path).
+
+        ``read(index)`` returns the numpy slice of the global array for one
+        shard — typically a view into an ``np.memmap``, so only the bytes
+        this host's devices actually own are pulled off disk.  This is how
+        ``serving.qserve.ckpt.load`` places packed planes directly per
+        ``param_shardings`` without ever materializing the full tree."""
+        import numpy as np
+        dtype = np.dtype(dtype)
+
+        def cb(idx):
+            a = np.ascontiguousarray(read(idx))
+            assert a.dtype == dtype, (a.dtype, dtype)
+            return a
+        return jax.make_array_from_callback(tuple(shape), sharding, cb)
+
     # -------------------------------------------------------------- batch
     def batch_spec(self, batch, B: int):
         """NamedSharding pytree for a batch dict (leading dim over dp)."""

@@ -35,6 +35,83 @@ ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                    "artifacts", "dryrun")
 
 
+def verify_ckpt(ckpt_dir: str, tp: int = 0, verbose: bool = True) -> dict:
+    """Shape-verify a packed checkpoint from its manifest alone.
+
+    No plane bytes are read.  Checks, per manifest tensor:
+      1. quantized entries match the ``qformat.abstract_quantized``
+         skeleton derived from their own static meta (bits/group/shape/
+         stats/outlier count, incl. BiLLM residual planes and stack dims);
+      2. the leaf exists in the recorded model config's abstract param
+         tree with the matching logical (dequantized) shape — so the
+         checkpoint actually loads into that architecture;
+      3. with ``tp``, the packed per-device byte ratio under the plan's
+         ``param_shardings`` (AbstractMesh — no devices needed).
+    Returns the report dict; raises on any mismatch.
+    """
+    from repro import utils
+    from repro.core import qformat
+    from repro.serving.qserve import ckpt as qckpt
+    from repro.serving.qserve.report import manifest_plane_bytes
+
+    manifest = qckpt.load_manifest(ckpt_dir)
+    cfg = qckpt.resolve_config(manifest)
+    from repro.models import build_model
+    model_sds = utils.tree_paths(build_model(cfg).abstract_params())
+    # a checkpoint must be self-contained: every param of the recorded
+    # arch present, nothing extra
+    missing = set(model_sds) - set(manifest["tensors"])
+    assert not missing, (f"checkpoint is missing {len(missing)} params of "
+                         f"{cfg.name}: {sorted(missing)[:5]}...")
+    n_quant = 0
+    for path, t in manifest["tensors"].items():
+        if path not in model_sds:
+            raise AssertionError(f"{path}: not a param of {cfg.name}")
+        want = tuple(model_sds[path].shape)
+        if t["kind"] == "dense":
+            got = tuple(t["planes"]["data"]["shape"])
+            assert got == want, (path, got, want)
+            continue
+        n_quant += 1
+        meta, stack = t["meta"], tuple(t["stack"])
+        d_in, d_out = meta["shape"]
+        assert stack + (d_in, d_out) == want, (path, stack, meta["shape"],
+                                               want)
+        ref = qformat.abstract_quantized(
+            d_in, d_out, meta["bits"], meta["group_size"],
+            stats_bits=meta["stats_bits"], stats_group=meta["stats_group"],
+            dtype=meta["dtype"], residual="resid.0" in t["planes"],
+            outlier_count=t["outlier_count"])
+        ref_entries = dict(qformat.qt_entries(ref))
+        assert set(t["planes"]) == set(ref_entries), (
+            path, sorted(t["planes"]), sorted(ref_entries))
+        for name, e in t["planes"].items():
+            want_p = stack + tuple(ref_entries[name].shape)
+            got_p = tuple(e["shape"])
+            assert got_p == want_p, (path, name, got_p, want_p)
+            assert e["dtype"] == jax.numpy.dtype(
+                ref_entries[name].dtype).name, (path, name, e["dtype"])
+    rep = {"arch": cfg.name, "tensors": len(manifest["tensors"]),
+           "quantized": n_quant,
+           "bytes": manifest_plane_bytes(manifest)}
+    if tp > 1:
+        from repro.dist.sharding import make_plan
+        from repro.serving.qserve.report import abstract_tp_mesh
+        plan = make_plan(cfg, abstract_tp_mesh(tp))
+        rep["bytes_tp"] = manifest_plane_bytes(manifest, plan)
+        rep["tp"] = tp
+    if verbose:
+        b = rep["bytes"]
+        print(f"[dryrun] ckpt {ckpt_dir}: OK — {rep['tensors']} tensors "
+              f"({n_quant} quantized), {b['total'] / 2**20:.2f} MiB packed "
+              f"planes, arch {cfg.name}")
+        if tp > 1:
+            bt = rep["bytes_tp"]
+            print(f"  tp={tp}: {bt['per_device'] / 2**20:.2f} MiB/device "
+                  f"(ratio {bt['ratio']:.3f})")
+    return rep
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
              save: bool = True, verbose: bool = True, quantized: bool = False,
              paged: bool = False, kv_bits: int = 16):
@@ -135,8 +212,18 @@ def main():
                     help="decode cells over the paged block-pool KV cache")
     ap.add_argument("--kv-bits", type=int, default=16, choices=[16, 8],
                     help="with --paged: int8 KV pool + scale planes")
+    ap.add_argument("--ckpt", default=None, metavar="DIR",
+                    help="verify a packed checkpoint's abstract shapes "
+                         "against its manifest (no plane reads) and exit")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="with --ckpt: also report per-device packed bytes "
+                         "under a tp-way plan (AbstractMesh)")
     ap.add_argument("--continue-on-error", action="store_true")
     args = ap.parse_args()
+
+    if args.ckpt:
+        verify_ckpt(args.ckpt, tp=args.tp)
+        return
 
     todo = []
     if args.all:

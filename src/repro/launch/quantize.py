@@ -1,0 +1,110 @@
+"""Calibration launcher: quantize a model and save a packed checkpoint.
+
+``python -m repro.launch.quantize --arch toy-llama --method spqr
+--hessian oac --wbits 2 --out /tmp/oac_ckpt`` runs the paper's Algorithm 1
+(``core.pipeline.quantize_model``) on a (optionally briefly trained) model,
+packs the per-layer results into stacked ``QuantizedTensor`` planes
+(``pack_results``), and writes the on-disk packed-checkpoint format
+(``serving.qserve.ckpt.save``) that ``launch/serve.py --ckpt`` loads.
+
+Calibration is resumable: per-layer results persist under ``<out>/calib``
+(the pipeline's existing manifest), so a preempted run re-invoked with the
+same arguments skips finished layer-kernels and still packs the full tree.
+
+``--method rtn`` is the zero-calibration path; ``spqr``/``optq`` calibrate
+with ``--hessian oac`` (paper) / ``l2`` / ``identity``; ``billm`` packs via
+the 1-bit residual carrier.  Calibration data comes from the synthetic
+corpus (the repo's offline stand-in for C4/WikiText2).
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import QuantConfig, TrainConfig
+from repro.core import pipeline
+from repro.core.qformat import QuantizedTensor
+from repro.data import DataIterator, SyntheticCorpus, make_calib_set
+from repro.models import build_model
+from repro.serving.qserve import ckpt as qckpt
+
+METHODS = ("rtn", "optq", "spqr", "billm")
+HESSIANS = ("oac", "l2", "identity")
+
+
+def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
+        n_calib: int = 8, calib_seq: int = 128, seed: int = 0,
+        dist_ctx=None, log=print) -> dict:
+    """Train (optionally) -> calibrate -> pack -> save; returns the manifest.
+
+    Callable from examples/tests with a concrete ModelConfig; the CLI is a
+    thin argv wrapper around this.
+    """
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(seed))
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=calib_seq, seed=7)
+    if train_steps > 0:
+        from repro.train.loop import train
+        tcfg = TrainConfig(steps=train_steps, lr=2e-3,
+                           warmup=min(30, train_steps // 2),
+                           ckpt_dir=os.path.join(out_dir, "train"))
+        params, _ = train(m, params, DataIterator(corpus, "train", 16),
+                          tcfg, log_every=max(train_steps // 4, 1))
+    calib = {"tokens": jnp.asarray(make_calib_set(corpus, n_calib)["tokens"])}
+
+    qp, results = pipeline.quantize_model(
+        m, params, calib, qcfg, ckpt_dir=os.path.join(out_dir, "calib"),
+        dist_ctx=dist_ctx, log=log)
+    packed = pipeline.pack_results(qp, results, qcfg)
+    manifest = qckpt.save(out_dir, packed, cfg, qcfg,
+                          extra={"seed": seed, "train_steps": train_steps,
+                                 "n_calib": n_calib, "calib_seq": calib_seq})
+
+    bits = [float(np.mean(v.storage_bits()))
+            for v in jax.tree.leaves(
+                packed, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+            if isinstance(v, QuantizedTensor)]
+    pf = manifest["plane_file"]
+    log(f"[quantize] saved {len(manifest['tensors'])} tensors "
+        f"({sum(1 for t in manifest['tensors'].values() if t['kind'] == 'quantized')} packed, "
+        f"avg {np.mean(bits):.2f} bits/weight) -> {out_dir} "
+        f"({pf['bytes'] / 1e6:.2f} MB planes)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="toy-llama")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family smoke config")
+    ap.add_argument("--method", default="spqr", choices=METHODS)
+    ap.add_argument("--hessian", default="oac", choices=HESSIANS)
+    ap.add_argument("--wbits", type=int, default=2)
+    ap.add_argument("--group-size", type=int, default=32)
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="Hessian regularization (default: 1.0 for oac, "
+                         "0.1 otherwise — paper App. C.2)")
+    ap.add_argument("--out", required=True, help="checkpoint directory")
+    ap.add_argument("--train-steps", type=int, default=0,
+                    help="briefly pre-train on the synthetic corpus "
+                         "(0 = quantize the random init; fine for smoke)")
+    ap.add_argument("--calib", type=int, default=8,
+                    help="calibration sequences (paper: 128)")
+    ap.add_argument("--calib-seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    alpha = args.alpha if args.alpha is not None else \
+        (1.0 if args.hessian == "oac" else 0.1)
+    qcfg = QuantConfig(wbits=args.wbits, group_size=args.group_size,
+                       method=args.method, hessian=args.hessian, alpha=alpha)
+    run(cfg, qcfg, args.out, train_steps=args.train_steps,
+        n_calib=args.calib, calib_seq=args.calib_seq, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,26 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--quant rtn-w4]``.
+"""Serving launcher: ``python -m repro.launch.serve [--ckpt DIR | --arch ID]``.
 
-Builds a (reduced) model, optionally RTN-quantizes it to packed low-bit
-storage (``--quant {none,rtn-w4,rtn-w3,rtn-w2}``), and serves a demo batch
-of requests through the engine (continuous-batching slot pool by default;
-``--engine paged`` adds the block-pool KV with prefix sharing, ``--engine
-static`` runs the cohort baseline).  ``--kv-bits 8`` (paged engine) stores
-the KV pool as int8 codes + per-token scale planes.  With ``--tp N`` the
-engine runs under a local (devices/N, N) mesh and a ``repro.dist``
-ShardingPlan — quantized decode then runs with the packed planes TP-sharded
-(``qserve``) on the same tensor-parallel layout the production mesh uses.
+Serves a demo batch of requests through the engine (continuous-batching
+slot pool by default; ``--engine paged`` adds the block-pool KV with prefix
+sharing, ``--engine static`` runs the cohort baseline).  Weights come from
+one of:
+
+  * ``--ckpt DIR`` — a packed checkpoint written by ``launch/quantize.py``
+    (or ``serving.qserve.ckpt.save``): the manifest names the model config
+    and the planes are memmap-loaded; under ``--tp N`` each plane shard is
+    placed directly per the ShardingPlan (the calibrated-OAC serving path).
+  * ``--quant {rtn-w4,rtn-w3,rtn-w2}`` — RTN-pack a fresh init in memory
+    (the zero-calibration fast path).
+  * neither — full-precision weights.
+
+``--kv-bits 8`` (paged engine) stores the KV pool as int8 codes +
+per-token scale planes.  ``--check-quant rtn-wN`` (with ``--ckpt``) also
+serves the same requests from an equivalent in-memory RTN tree and asserts
+the greedy tokens match — the CI ckpt-smoke tripwire.
 """
 import argparse
 import contextlib
+import sys
 
 import jax
 import numpy as np
@@ -27,13 +36,38 @@ from repro.serving.quantized import quantize_params_rtn
 QUANT_CHOICES = ("none", "rtn-w4", "rtn-w3", "rtn-w2")
 
 
+def _serve_requests(cfg, params, args, plan):
+    """Build the chosen engine, serve the demo batch, return the requests."""
+    if args.engine == "paged":
+        eng = PagedEngine(cfg, params, max_batch=args.requests,
+                          capacity=128, plan=plan,
+                          block_size=args.block_size, kv_bits=args.kv_bits)
+    else:
+        cls = Engine if args.engine == "continuous" else StaticEngine
+        eng = cls(cfg, params, max_batch=args.requests, capacity=128,
+                  plan=plan)
+    rng = np.random.default_rng(0)
+    rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
+                     max_tokens=args.max_tokens)
+          for _ in range(args.requests)]
+    eng.run()
+    return eng, rs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="toy-llama")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt", default=None,
+                    help="serve a packed checkpoint directory (overrides "
+                         "--arch/--smoke/--quant from its manifest)")
     ap.add_argument("--quant", default="none", choices=QUANT_CHOICES,
                     help="pack weights to rtn-w{4,3,2} QuantizedTensors "
                          "(the zero-calibration serving fast path)")
+    ap.add_argument("--check-quant", default=None,
+                    choices=QUANT_CHOICES[1:], metavar="rtn-wN",
+                    help="with --ckpt: also serve the same requests from an "
+                         "in-memory rtn tree and assert greedy tokens match")
     ap.add_argument("--kv-bits", type=int, default=16, choices=[16, 8],
                     help="paged engine: KV pool precision (8 = int8 codes "
                          "+ per-token scale planes, ~2x less KV HBM)")
@@ -53,41 +87,48 @@ def main():
     if args.kv_bits != 16 and args.engine != "paged":
         ap.error("--kv-bits 8 requires --engine paged (the int8 pool is "
                  "a block-pool layout)")
+    if args.check_quant and not args.ckpt:
+        ap.error("--check-quant only makes sense with --ckpt")
+    if args.ckpt and args.quant != "none":
+        ap.error("--ckpt already carries packed weights; drop --quant")
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
-    if args.quant != "none":
-        wbits = int(args.quant.rsplit("w", 1)[1])
-        params, skipped = quantize_params_rtn(
-            params, QuantConfig(wbits=wbits, group_size=32))
-        print(f"[serve] packed weights to w{wbits}"
-              + (f" ({len(skipped)} kernels left fp: {skipped})"
-                 if skipped else ""))
+    manifest = None
+    if args.ckpt:
+        from repro.serving.qserve import ckpt as qckpt
+        manifest = qckpt.load_manifest(args.ckpt)
+        cfg = qckpt.resolve_config(manifest)
+        qcfg = qckpt.quant_config(manifest)
+        print(f"[serve] ckpt {args.ckpt}: arch={cfg.name}"
+              + (f" {qcfg.method}/{qcfg.hessian} w{qcfg.wbits}"
+                 f"g{qcfg.group_size}" if qcfg else ""))
+    else:
+        cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
 
-    plan, mesh_ctx = None, contextlib.nullcontext()
+    plan, mesh = None, None
     if args.tp > 1:
         mesh = make_host_mesh(model=args.tp)
         plan = make_plan(cfg, mesh)
-        mesh_ctx = jax.set_mesh(mesh)
         print(f"[serve] mesh {dict(mesh.shape)} "
               f"(decode mode: {plan.ctx().attn_decode_mode})")
 
-    with mesh_ctx:
-        if args.engine == "paged":
-            eng = PagedEngine(cfg, params, max_batch=args.requests,
-                              capacity=128, plan=plan,
-                              block_size=args.block_size,
-                              kv_bits=args.kv_bits)
+    def mesh_ctx():
+        return jax.set_mesh(mesh) if mesh is not None \
+            else contextlib.nullcontext()
+
+    with mesh_ctx():
+        if args.ckpt:
+            from repro.serving.qserve import ckpt as qckpt
+            params = qckpt.load(args.ckpt, plan, manifest=manifest)
         else:
-            cls = Engine if args.engine == "continuous" else StaticEngine
-            eng = cls(cfg, params, max_batch=args.requests, capacity=128,
-                      plan=plan)
-        rng = np.random.default_rng(0)
-        rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
-                         max_tokens=args.max_tokens)
-              for _ in range(args.requests)]
-        eng.run()
+            params = build_model(cfg).init(jax.random.PRNGKey(0))
+            if args.quant != "none":
+                wbits = int(args.quant.rsplit("w", 1)[1])
+                params, skipped = quantize_params_rtn(
+                    params, QuantConfig(wbits=wbits, group_size=32))
+                print(f"[serve] packed weights to w{wbits}"
+                      + (f" ({len(skipped)} kernels left fp: {skipped})"
+                         if skipped else ""))
+        eng, rs = _serve_requests(cfg, params, args, plan)
     for r in rs:
         print(f"[serve] req {r.rid}: {r.out}")
     if args.engine == "paged":
@@ -95,12 +136,46 @@ def main():
               f"{eng.prefill_tokens_skipped}, peak blocks: "
               f"{eng.peak_blocks_in_use}/{eng.num_blocks}"
               + (f", kv pool int8" if args.kv_bits == 8 else ""))
-    if args.quant != "none" and plan is not None:
-        from repro.serving.qserve.report import packed_plane_bytes
-        rep = packed_plane_bytes(params, plan.param_shardings(params))
+    if plan is not None and (args.ckpt or args.quant != "none"):
+        from repro.serving.qserve.report import (device_plane_bytes,
+                                                 packed_plane_bytes)
+        rep = packed_plane_bytes(eng.params,
+                                 plan.param_shardings(eng.params))
         print(f"[serve] packed planes: {rep['total']} B total, "
               f"{rep['per_device']} B/device "
-              f"(ratio {rep['ratio']:.3f}, tp={plan.tp_size})")
+              f"(ratio {rep['ratio']:.3f}, tp={plan.tp_size}, "
+              f"resident max {device_plane_bytes(eng.params)} B/device)")
+
+    if args.check_quant:
+        from repro.serving.qserve import ckpt as qckpt
+        qcfg = qckpt.quant_config(manifest)
+        wbits = int(args.check_quant.rsplit("w", 1)[1])
+        extra = manifest.get("extra") or {}
+        # the check's contract is "ckpt == packing the same init in memory":
+        # it is only meaningful for untrained rtn checkpoints of matching
+        # bit-width — anything else would report a false MISMATCH
+        if extra.get("train_steps", 0):
+            print("[serve] --check-quant requires an untrained checkpoint "
+                  f"(this one trained {extra['train_steps']} steps)")
+            sys.exit(2)
+        if qcfg is not None and (qcfg.method != "rtn"
+                                 or qcfg.wbits != wbits):
+            print(f"[serve] --check-quant {args.check_quant} cannot verify "
+                  f"a {qcfg.method} w{qcfg.wbits} checkpoint")
+            sys.exit(2)
+        gs = qcfg.group_size if qcfg is not None else 32
+        ref = build_model(cfg).init(jax.random.PRNGKey(extra.get("seed", 0)))
+        ref, _ = quantize_params_rtn(ref, QuantConfig(wbits=wbits,
+                                                      group_size=gs))
+        with mesh_ctx():
+            _, ref_rs = _serve_requests(cfg, ref, args, plan)
+        for a, b in zip(rs, ref_rs):
+            if a.out != b.out:
+                print(f"[serve] MISMATCH req {a.rid}: ckpt {a.out} vs "
+                      f"in-memory {args.check_quant} {b.out}")
+                sys.exit(1)
+        print(f"[serve] OK: ckpt greedy tokens match in-memory "
+              f"{args.check_quant} serving ({len(rs)} requests)")
 
 
 if __name__ == "__main__":

@@ -12,13 +12,20 @@ Makes packed ``QuantizedTensor`` checkpoints the first-class serving format:
   ``benchmarks/bench_serving.py`` to prove planes are sharded, not
   replicated.
 
+* ``ckpt``    — the on-disk packed-checkpoint format (JSON manifest +
+  flat binary plane file): ``save`` persists calibrated
+  ``pack_results``/RTN trees, ``load`` memmaps planes back zero-copy and,
+  under a ``ShardingPlan``, places each plane shard directly per
+  ``param_shardings``.  See docs/qformat.md for the byte-level spec.
+
 The write side of plane sharding lives in ``dist/sharding.py``
 (``ShardingPlan.param_shardings`` understands ``QuantizedTensor`` nodes);
 this package is the read side plus the accounting.
 """
+from repro.serving.qserve import ckpt
 from repro.serving.qserve.kvquant import dequantize_kv, quantize_kv
 from repro.serving.qserve.linear import quantized_linear
 from repro.serving.qserve.report import packed_plane_bytes
 
-__all__ = ["quantized_linear", "quantize_kv", "dequantize_kv",
+__all__ = ["ckpt", "quantized_linear", "quantize_kv", "dequantize_kv",
            "packed_plane_bytes"]

@@ -1,0 +1,317 @@
+"""Packed-checkpoint format: calibrated QuantizedTensor trees on disk.
+
+This is the bridge between the paper's calibration output
+(``core.pipeline.quantize_model`` -> ``pack_results``) and the serving
+stack (``PagedEngine`` + the qserve fused-dequant dispatch): one directory
+holds
+
+  * ``manifest.json`` — format/version tags, the model config name, the
+    QuantConfig used, and one entry per param-tree leaf: dense leaves
+    record a single ``data`` plane; ``QuantizedTensor`` leaves record
+    their static meta (bits/group/shape/stats/outlier count) plus every
+    array field as a named plane in the stable ``qformat.qt_entries``
+    order.
+  * ``planes.bin``    — all plane bytes concatenated, each plane aligned
+    to ``ALIGN`` so a zero-copy ``np.memmap`` view exists for every entry.
+
+Loading is lazy and TP-aware: ``load(dir)`` memmaps the plane file and,
+given a ``ShardingPlan``, places each plane *per shard* via
+``plan.param_shardings`` + ``plan.place`` — only the slices this host's
+devices own are ever read, so a tp-sharded load never materializes the
+full tree in host memory.  ``abstract_params(manifest)`` rebuilds the
+ShapeDtypeStruct tree from the manifest alone (no plane reads) for
+dry-run lowering and shape verification (``launch/dryrun.py --ckpt``).
+
+Byte-level layout and the sharding contract are specified in
+``docs/qformat.md`` so external tools can write compatible checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import utils
+from repro.core import qformat
+from repro.core.qformat import QuantizedTensor
+
+FORMAT_NAME = "oac-qckpt"
+MANIFEST_NAME = "manifest.json"
+PLANES_NAME = "planes.bin"
+ALIGN = 64
+
+
+class CkptError(RuntimeError):
+    """Unloadable checkpoint: wrong format/version, truncated plane file,
+    or a manifest whose entries don't describe the plane bytes on disk."""
+
+
+def _is_qt(n):
+    return isinstance(n, QuantizedTensor)
+
+
+def _dtype_name(dt) -> str:
+    return jnp.dtype(dt).name
+
+
+def _np_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+def _tree_from_paths(entries):
+    """{'/a/b': leaf} -> nested dicts (the only container the format
+    supports; model param trees are pure dicts)."""
+    root: dict = {}
+    for path, leaf in entries:
+        parts = path.strip("/").split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+# --------------------------------------------------------------------------
+# save
+# --------------------------------------------------------------------------
+
+class _PlaneWriter:
+    def __init__(self, f):
+        self.f = f
+        self.off = 0
+
+    def write(self, arr) -> dict:
+        arr = np.asarray(arr)
+        pad = (-self.off) % ALIGN
+        if pad:
+            self.f.write(b"\0" * pad)
+            self.off += pad
+        entry = {"offset": self.off, "bytes": arr.nbytes,
+                 "shape": list(arr.shape),
+                 "dtype": _dtype_name(arr.dtype)}
+        self.f.write(np.ascontiguousarray(arr).tobytes())
+        self.off += arr.nbytes
+        return entry
+
+
+def save(ckpt_dir: str, params, cfg, qcfg=None, *, extra: Optional[dict] = None
+         ) -> dict:
+    """Write ``params`` (dense leaves + packed QuantizedTensors) as a
+    packed checkpoint under ``ckpt_dir``; returns the manifest dict.
+
+    The plane file is written first and the manifest is renamed into place
+    last, so a directory with a readable manifest is always complete.
+    """
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_qt)
+    tensors = {}
+    tmp_planes = os.path.join(ckpt_dir, PLANES_NAME + ".tmp")
+    with open(tmp_planes, "wb") as f:
+        w = _PlaneWriter(f)
+        for p, leaf in flat:
+            path = utils.path_str(p)
+            if _is_qt(leaf):
+                stack = list(leaf.planes[0].shape[:-2])
+                tensors[path] = {
+                    "kind": "quantized",
+                    "meta": qformat.qt_meta(leaf),
+                    "stack": stack,
+                    "outlier_count": int(leaf.out_vals.shape[-1]),
+                    "planes": {name: w.write(arr)
+                               for name, arr in qformat.qt_entries(leaf)},
+                }
+            else:
+                tensors[path] = {"kind": "dense",
+                                 "planes": {"data": w.write(leaf)}}
+    os.replace(tmp_planes, os.path.join(ckpt_dir, PLANES_NAME))
+
+    manifest = {
+        "format": FORMAT_NAME,
+        "version": qformat.QFORMAT_VERSION,
+        "arch": cfg.name,
+        "plane_file": {"name": PLANES_NAME, "bytes": w.off},
+        "qcfg": dataclasses.asdict(qcfg) if qcfg is not None else None,
+        "tensors": tensors,
+    }
+    if extra:
+        manifest["extra"] = extra
+    tmp = os.path.join(ckpt_dir, MANIFEST_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(ckpt_dir, MANIFEST_NAME))
+    return manifest
+
+
+# --------------------------------------------------------------------------
+# manifest reading / validation
+# --------------------------------------------------------------------------
+
+def load_manifest(ckpt_dir: str) -> dict:
+    """Read + validate ``manifest.json`` (format/version tags, every plane
+    entry self-consistent and inside the plane file).  Raises CkptError."""
+    mpath = os.path.join(ckpt_dir, MANIFEST_NAME)
+    if not os.path.exists(mpath):
+        raise CkptError(f"no {MANIFEST_NAME} under {ckpt_dir}")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CkptError(f"corrupt manifest {mpath}: {e}") from e
+    if manifest.get("format") != FORMAT_NAME:
+        raise CkptError(f"not an {FORMAT_NAME} checkpoint: "
+                        f"format={manifest.get('format')!r}")
+    if manifest.get("version") != qformat.QFORMAT_VERSION:
+        raise CkptError(
+            f"qformat version mismatch: checkpoint v{manifest.get('version')}"
+            f" vs this build v{qformat.QFORMAT_VERSION} — re-quantize or "
+            "use a matching build")
+    pf = manifest.get("plane_file", {})
+    ppath = os.path.join(ckpt_dir, pf.get("name", PLANES_NAME))
+    if not os.path.exists(ppath):
+        raise CkptError(f"missing plane file {ppath}")
+    size = os.path.getsize(ppath)
+    if size != pf.get("bytes"):
+        raise CkptError(f"plane file truncated/corrupt: {size} B on disk "
+                        f"vs {pf.get('bytes')} B in manifest")
+    for path, t in manifest.get("tensors", {}).items():
+        try:
+            kind, planes = t["kind"], t["planes"]
+            if kind not in ("dense", "quantized"):
+                raise CkptError(f"{path}: unknown tensor kind {kind!r}")
+            if kind == "quantized":
+                t["meta"]["bits"], t["stack"], t["outlier_count"]
+            for name, e in planes.items():
+                n = int(np.prod(e["shape"])) * _np_dtype(e["dtype"]).itemsize
+                if n != e["bytes"] or e["offset"] < 0 \
+                        or e["offset"] + e["bytes"] > size:
+                    raise CkptError(
+                        f"bad plane entry {path}:{name}: {e} (file {size} B)")
+                if kind == "quantized" and name not in qformat.ENTRY_NAMES:
+                    raise CkptError(f"unknown plane name {name!r} at {path} "
+                                    "(written by a newer qformat?)")
+            missing = _required_planes(t) - set(planes)
+            if missing:
+                raise CkptError(f"{path}: missing plane(s) "
+                                f"{sorted(missing)} (kind={kind})")
+        except (KeyError, TypeError) as e:
+            raise CkptError(
+                f"malformed manifest entry {path}: {e!r}") from e
+    return manifest
+
+
+def _required_planes(t: dict) -> set:
+    """The plane names a manifest tensor entry MUST carry (spec'd in
+    docs/qformat.md): dense needs ``data``; quantized needs every
+    non-optional ``qformat.ENTRY_NAMES`` entry for its bit-width, and the
+    residual pair travels together."""
+    if t["kind"] != "quantized":
+        return {"data"}
+    want = {"codes.0", "q_scales", "ss_scale", "ss_zero",
+            "q_zeros", "zz_scale", "zz_zero",
+            "out_rows", "out_cols", "out_vals"}
+    if int(t["meta"]["bits"]) == 3:
+        want.add("codes.1")
+    if "resid.0" in t["planes"] or "resid_scales" in t["planes"]:
+        want |= {"resid.0", "resid_scales"}
+    return want
+
+
+def resolve_config(manifest: dict):
+    """Model config recorded in the manifest -> ModelConfig.  Reduced smoke
+    configs round-trip through their ``<arch>-smoke`` name."""
+    from repro.configs import REGISTRY, get_config, get_smoke
+    name = manifest["arch"]
+    if name in REGISTRY:
+        return get_config(name)
+    if name.endswith("-smoke") and name[:-len("-smoke")] in REGISTRY:
+        return get_smoke(name[:-len("-smoke")])
+    raise CkptError(f"checkpoint arch {name!r} is not in the config "
+                    f"registry; available: {sorted(REGISTRY)}")
+
+
+def quant_config(manifest: dict):
+    """QuantConfig recorded in the manifest (None for hand-built trees)."""
+    from repro.configs.base import QuantConfig
+    if manifest.get("qcfg") is None:
+        return None
+    return QuantConfig(**manifest["qcfg"])
+
+
+# --------------------------------------------------------------------------
+# abstract tree (no plane reads)
+# --------------------------------------------------------------------------
+
+def abstract_params(manifest: dict):
+    """ShapeDtypeStruct tree of the checkpoint, from the manifest alone."""
+    def one(t):
+        sds = {name: jax.ShapeDtypeStruct(tuple(e["shape"]),
+                                          _np_dtype(e["dtype"]))
+               for name, e in t["planes"].items()}
+        if t["kind"] == "dense":
+            return sds["data"]
+        return qformat.qt_from_entries(sds, t["meta"])
+    return _tree_from_paths(
+        [(path, one(t)) for path, t in manifest["tensors"].items()])
+
+
+# --------------------------------------------------------------------------
+# load
+# --------------------------------------------------------------------------
+
+def _plane_view(mm, entry):
+    """Zero-copy typed view of one plane inside the memmap."""
+    off, nb = entry["offset"], entry["bytes"]
+    return mm[off:off + nb].view(_np_dtype(entry["dtype"])) \
+        .reshape(tuple(entry["shape"]))
+
+
+def load(ckpt_dir: str, plan=None, *, manifest: Optional[dict] = None):
+    """Load a packed checkpoint into a servable param tree.
+
+    Without a plan every plane is copied once memmap -> default device.
+    With a ``ShardingPlan`` each plane gets the sharding the plan assigns
+    the corresponding fp kernel (``param_shardings`` over the abstract
+    tree) and is built shard-by-shard via ``plan.place`` — per device only
+    its own slice of the memmap is read.
+    """
+    manifest = manifest or load_manifest(ckpt_dir)
+    pf = manifest["plane_file"]
+    mm = np.memmap(os.path.join(ckpt_dir, pf["name"]), dtype=np.uint8,
+                   mode="r")
+
+    shardings = {}
+    if plan is not None:
+        sds = abstract_params(manifest)
+        sh_tree = plan.param_shardings(sds)
+        flat, _ = jax.tree_util.tree_flatten_with_path(sh_tree,
+                                                       is_leaf=_is_qt)
+        for p, leaf in flat:
+            shardings[utils.path_str(p)] = leaf
+
+    def materialize(view, sharding):
+        if plan is None or sharding is None:
+            return jnp.asarray(view)
+        return plan.place(sharding, view.shape, view.dtype,
+                          lambda idx: view[idx])
+
+    def one(path, t):
+        if t["kind"] == "dense":
+            return materialize(_plane_view(mm, t["planes"]["data"]),
+                               shardings.get(path))
+        sh = shardings.get(path)
+        sh_by_name = dict(qformat.qt_entries(sh)) if sh is not None else {}
+        arrays = {name: materialize(_plane_view(mm, e),
+                                    sh_by_name.get(name))
+                  for name, e in t["planes"].items()}
+        return qformat.qt_from_entries(arrays, t["meta"])
+
+    return _tree_from_paths(
+        [(path, one(path, t)) for path, t in manifest["tensors"].items()])

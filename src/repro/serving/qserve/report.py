@@ -69,6 +69,33 @@ def packed_plane_bytes(params, shardings=None) -> dict:
             "ratio": per_device / total if total else 1.0}
 
 
+def manifest_plane_bytes(manifest: dict, plan=None) -> dict:
+    """``packed_plane_bytes`` straight from a checkpoint manifest — no
+    plane reads, no model build.  The abstract tree is rebuilt from the
+    manifest (``ckpt.abstract_params``); with a ``ShardingPlan`` (concrete
+    or AbstractMesh) the per-device count reflects the exact layout the
+    TP-aware loader will place."""
+    from repro.serving.qserve import ckpt
+    sds = ckpt.abstract_params(manifest)
+    sh = plan.param_shardings(sds) if plan is not None else None
+    return packed_plane_bytes(sds, sh)
+
+
+def device_plane_bytes(params) -> int:
+    """Max over devices of packed code-plane bytes *actually resident* on
+    that device for a loaded (committed) tree — the ground truth the
+    ``packed_plane_bytes`` shard-shape arithmetic predicts.  Used by the
+    tp=2 checkpoint test and ``launch/serve.py --ckpt`` reporting."""
+    per_dev: dict = {}
+    for qt in jax.tree.leaves(params, is_leaf=_is_qt):
+        if not _is_qt(qt):
+            continue
+        for plane in _plane_leaves(qt):
+            for s in getattr(plane, "addressable_shards", []):
+                per_dev[s.device] = per_dev.get(s.device, 0) + s.data.nbytes
+    return max(per_dev.values(), default=0)
+
+
 def abstract_tp_mesh(tp: int, dp: int = 1):
     """Device-free (dp, tp) AbstractMesh for layout-only accounting —
     ``make_plan``/``param_shardings``/``shard_shape`` all work on it."""

@@ -1,0 +1,339 @@
+"""Packed-checkpoint (`oac-qckpt`) tests: save/load round-trips across model
+families, calibrated-OAC end-to-end, resume-then-pack, manifest rejection,
+spec <-> code parity (docs/qformat.md), and tp=2 per-device plane bytes."""
+import json
+import os
+import re
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import ModelConfig, QuantConfig, reduce_cfg
+from repro.core import pipeline, qformat
+from repro.core.qformat import QuantizedTensor
+from repro.models import build_model
+from repro.serving.engine import StaticEngine
+from repro.serving.qserve import ckpt as qckpt
+from repro.serving.quantized import quantize_params_rtn
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+DOCS = os.path.join(os.path.dirname(__file__), "..", "docs", "qformat.md")
+KEY = jax.random.PRNGKey(0)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+
+
+def _serve_greedy(cfg, tree):
+    eng = StaticEngine(cfg, tree, max_batch=2, capacity=48)
+    rs = [eng.submit(np.arange(1, 9), max_tokens=4),
+          eng.submit(np.arange(3, 11), max_tokens=3)]
+    eng.run()
+    return [r.out for r in rs]
+
+
+def _assert_trees_equal(a, b):
+    fa, ta = jax.tree_util.tree_flatten(a)
+    fb, tb = jax.tree_util.tree_flatten(b)
+    assert str(ta) == str(tb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------- round trips
+@pytest.mark.parametrize("arch", [None, "gemma3-27b", "zamba2-7b",
+                                  "rwkv6-3b"])
+def test_rtn_roundtrip_greedy_identical_families(tmp_path, arch):
+    """save -> load must reproduce the in-memory packed tree bit-for-bit
+    and serve bit-identical greedy tokens, for all four model families
+    (dense / grouped-local / hybrid / ssm)."""
+    cfg = CFG if arch is None else get_smoke(arch)
+    params = build_model(cfg).init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    qckpt.save(str(tmp_path / "ck"), qp, cfg,
+               QuantConfig(wbits=4, group_size=16))
+    loaded = qckpt.load(str(tmp_path / "ck"))
+    _assert_trees_equal(qp, loaded)
+    assert _serve_greedy(cfg, qp) == _serve_greedy(cfg, loaded)
+
+
+def test_oac_calibrated_ckpt_serves_end_to_end(tmp_path):
+    """The acceptance loop: OAC-calibrate (Algorithm 1) -> pack_results ->
+    ckpt.save -> ckpt.load -> greedy tokens bit-identical to serving the
+    in-memory packed tree; manifest passes the dryrun shape verification
+    and records the QuantConfig."""
+    from repro.data import SyntheticCorpus, make_calib_set
+    cfg = reduce_cfg(get_config("toy-llama"))
+    m = build_model(cfg)
+    params = m.init(KEY)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=48, seed=3)
+    calib = {"tokens": jnp.asarray(make_calib_set(corpus, 4)["tokens"])}
+    q = QuantConfig(wbits=3, group_size=32, method="spqr", hessian="oac")
+    qp, results = pipeline.quantize_model(m, params, calib, q,
+                                          log=lambda *a: None)
+    packed = pipeline.pack_results(qp, results, q)
+    d = str(tmp_path / "oac")
+    qckpt.save(d, packed, cfg, q)
+    loaded = qckpt.load(d)
+    assert _serve_greedy(cfg, packed) == _serve_greedy(cfg, loaded)
+
+    from repro.launch.dryrun import verify_ckpt
+    rep = verify_ckpt(d, tp=2, verbose=False)
+    assert rep["quantized"] > 0 and rep["bytes"]["total"] > 0
+    assert rep["bytes_tp"]["ratio"] <= 0.75          # planes really shard
+    qcfg = qckpt.quant_config(qckpt.load_manifest(d))
+    assert (qcfg.method, qcfg.hessian, qcfg.wbits) == ("spqr", "oac", 3)
+
+
+def test_resume_then_pack_matches_uninterrupted(tmp_path):
+    """A pipeline killed mid-run and resumed must still pack — and pack to
+    the same planes as the uninterrupted run (per-layer npz now persists
+    the full CalibResult, not just w_hat)."""
+    from repro.data import SyntheticCorpus, make_calib_set
+    m = build_model(CFG)
+    params = m.init(KEY)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=32, seed=3)
+    calib = {"tokens": jnp.asarray(make_calib_set(corpus, 2)["tokens"])}
+    q = QuantConfig(wbits=4, group_size=16, method="optq", hessian="identity")
+    full, res_full = pipeline.quantize_model(m, params, calib, q,
+                                             log=lambda *a: None)
+    packed_full = pipeline.pack_results(full, res_full, q)
+
+    ck = str(tmp_path / "pipe")
+    calls = {"n": 0}
+    orig = pipeline._calibrate_kernel
+
+    def bomb(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 4:
+            raise RuntimeError("preempted")
+        return orig(*a, **k)
+
+    pipeline._calibrate_kernel = bomb
+    try:
+        with pytest.raises(RuntimeError):
+            pipeline.quantize_model(m, params, calib, q, ckpt_dir=ck,
+                                    log=lambda *a: None)
+    finally:
+        pipeline._calibrate_kernel = orig
+    qp2, res2 = pipeline.quantize_model(m, params, calib, q, ckpt_dir=ck,
+                                        log=lambda *a: None)
+    assert all(r.calib is not None for r in res2.values())
+    _assert_trees_equal(packed_full, pipeline.pack_results(qp2, res2, q))
+
+
+def test_resume_refuses_different_quant_config(tmp_path):
+    """Re-running calibration into the same dir with a different
+    QuantConfig must refuse, not silently re-pack stale results at the
+    wrong bit-width."""
+    from repro.data import SyntheticCorpus, make_calib_set
+    m = build_model(CFG)
+    params = m.init(KEY)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=32, seed=3)
+    calib = {"tokens": jnp.asarray(make_calib_set(corpus, 2)["tokens"])}
+    ck = str(tmp_path / "pipe")
+    q4 = QuantConfig(wbits=4, group_size=16, method="rtn")
+    pipeline.quantize_model(m, params, calib, q4, ckpt_dir=ck,
+                            log=lambda *a: None)
+    q2 = QuantConfig(wbits=2, group_size=16, method="rtn")
+    with pytest.raises(ValueError, match="different QuantConfig"):
+        pipeline.quantize_model(m, params, calib, q2, ckpt_dir=ck,
+                                log=lambda *a: None)
+
+
+def test_billm_residual_carrier_roundtrip(tmp_path):
+    """BiLLM results ride the v1 residual planes: the packed carrier
+    dequantizes to w_hat (bf16-exact) and round-trips through disk."""
+    w = jax.random.normal(KEY, (64, 48)) * 0.1
+    qt = qformat.make_residual_carrier(w, group_size=32)
+    assert qt.resid_planes is not None
+    back = qt.dequantize().astype(jnp.float32)
+    ref = jnp.abs(w).astype(jnp.bfloat16).astype(jnp.float32) * jnp.sign(w)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(ref))
+    tree = {"layers": {"a": {"kernel": qt}}}
+    d = str(tmp_path / "bl")
+    man = qckpt.save(d, tree, CFG, None)
+    t = man["tensors"]["/layers/a/kernel"]
+    assert "resid.0" in t["planes"] and "resid_scales" in t["planes"]
+    loaded = qckpt.load(d)
+    _assert_trees_equal(tree, loaded)
+
+
+# -------------------------------------------------------------- rejection
+def _small_ckpt(tmp_path):
+    params = build_model(CFG).init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    d = str(tmp_path / "ck")
+    qckpt.save(d, qp, CFG, None)
+    return d
+
+
+def test_version_mismatch_rejected(tmp_path):
+    d = _small_ckpt(tmp_path)
+    mpath = os.path.join(d, qckpt.MANIFEST_NAME)
+    man = json.load(open(mpath))
+    man["version"] = qformat.QFORMAT_VERSION + 1
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(qckpt.CkptError, match="version mismatch"):
+        qckpt.load(d)
+
+
+def test_corrupted_manifest_and_planes_rejected(tmp_path):
+    d = _small_ckpt(tmp_path)
+    ppath = os.path.join(d, qckpt.PLANES_NAME)
+    with open(ppath, "r+b") as f:          # truncate the plane file
+        f.truncate(os.path.getsize(ppath) - 100)
+    with pytest.raises(qckpt.CkptError, match="truncated"):
+        qckpt.load_manifest(d)
+
+    d2 = _small_ckpt(tmp_path / "b")
+    mpath = os.path.join(d2, qckpt.MANIFEST_NAME)
+    with open(mpath, "w") as f:
+        f.write("{not json")
+    with pytest.raises(qckpt.CkptError, match="corrupt manifest"):
+        qckpt.load_manifest(d2)
+
+    d3 = _small_ckpt(tmp_path / "c")
+    mpath = os.path.join(d3, qckpt.MANIFEST_NAME)
+    man = json.load(open(mpath))
+    man["format"] = "something-else"
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(qckpt.CkptError, match="not an oac-qckpt"):
+        qckpt.load_manifest(d3)
+
+    d4 = _small_ckpt(tmp_path / "d")    # a required plane dropped entirely
+    mpath = os.path.join(d4, qckpt.MANIFEST_NAME)
+    man = json.load(open(mpath))
+    qt_path = next(p for p, t in man["tensors"].items()
+                   if t["kind"] == "quantized")
+    del man["tensors"][qt_path]["planes"]["q_scales"]
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(qckpt.CkptError, match="missing plane"):
+        qckpt.load_manifest(d4)
+
+
+def test_verify_ckpt_catches_shape_drift(tmp_path):
+    cfg = reduce_cfg(get_config("toy-llama"))
+    params = build_model(cfg).init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    d = str(tmp_path / "ck")
+    qckpt.save(d, qp, cfg, None)
+    mpath = os.path.join(d, qckpt.MANIFEST_NAME)
+    man = json.load(open(mpath))
+    qt_path = next(p for p, t in man["tensors"].items()
+                   if t["kind"] == "quantized")
+    # bits drives the packed code-plane shape: claiming w2 for planes
+    # written at w4 must fail the abstract_quantized cross-check
+    man["tensors"][qt_path]["meta"]["bits"] = 2
+    json.dump(man, open(mpath, "w"))
+    from repro.launch.dryrun import verify_ckpt
+    with pytest.raises(AssertionError):
+        verify_ckpt(d, verbose=False)
+
+    # an incomplete checkpoint (param of the arch absent) must also fail
+    man["tensors"][qt_path]["meta"]["bits"] = 4
+    dense_path = next(p for p, t in man["tensors"].items()
+                      if t["kind"] == "dense")
+    del man["tensors"][dense_path]
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(AssertionError, match="missing"):
+        verify_ckpt(d, verbose=False)
+
+
+# ----------------------------------------------------- spec <-> code parity
+def test_spec_plane_names_match_code_and_manifest(tmp_path):
+    """docs/qformat.md's "Plane names" table must list exactly the entry
+    names the code writes (qformat.ENTRY_NAMES + the dense `data` plane),
+    and every plane a real manifest records must be spec'd."""
+    text = open(DOCS).read()
+    section = text.split("## Plane names")[1].split("\n## ")[0]
+    spec = set()
+    for line in section.splitlines():
+        m = re.match(r"\|\s*`([^`]+)`", line)
+        if m:
+            spec.add(m.group(1))
+    assert spec == set(qformat.ENTRY_NAMES) | {"data"}, spec
+
+    # a manifest exercising every optional plane: bits=3 (two code planes)
+    # + a residual carrier
+    params = build_model(CFG).init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=3, group_size=16))
+    qp["layers"]["carrier"] = {"kernel": qformat.make_residual_carrier(
+        jax.random.normal(KEY, (32, 16)), group_size=16)}
+    man = qckpt.save(str(tmp_path / "ck"), qp, CFG, None)
+    used = {name for t in man["tensors"].values() for name in t["planes"]}
+    assert used <= spec, used - spec
+    assert {"codes.0", "codes.1", "resid.0", "resid_scales",
+            "data"} <= used
+
+
+def test_quantize_run_matches_in_memory_rtn(tmp_path):
+    """launch/quantize.py's rtn path must serve bit-identically to the
+    in-memory `--quant rtn-w4` tree (the CI ckpt-smoke contract)."""
+    from repro.launch import quantize as ql
+    cfg = reduce_cfg(get_config("toy-llama"))
+    q = QuantConfig(wbits=4, group_size=32, method="rtn")
+    ql.run(cfg, q, str(tmp_path / "ck"), n_calib=2, calib_seq=32,
+           log=lambda *a: None)
+    loaded = qckpt.load(str(tmp_path / "ck"))
+    ref, _ = quantize_params_rtn(build_model(cfg).init(KEY),
+                                 QuantConfig(wbits=4, group_size=32))
+    assert _serve_greedy(cfg, loaded) == _serve_greedy(cfg, ref)
+
+
+# ------------------------------------------------------------------ tp = 2
+def test_tp2_per_device_bytes_match_report(tmp_path):
+    """Under a (1, 2) mesh the loader must place plane shards so that the
+    bytes actually resident per device equal the `packed_plane_bytes`
+    prediction (planes sharded, not replicated) — and the checkpoint must
+    still serve."""
+    params = build_model(CFG).init(KEY)
+    qp, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    d = str(tmp_path / "ck")
+    qckpt.save(d, qp, CFG, None)
+    eng = StaticEngine(CFG, qp, max_batch=1, capacity=32)
+    ref = eng.submit(np.arange(1, 9), max_tokens=3)
+    eng.run()
+    code = f"""
+        import jax, numpy as np
+        from repro.configs.base import ModelConfig
+        from repro.dist.sharding import make_plan
+        from repro.serving.engine import StaticEngine
+        from repro.serving.qserve import ckpt as qckpt
+        from repro.serving.qserve.report import (device_plane_bytes,
+                                                 packed_plane_bytes)
+
+        CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                          d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        plan = make_plan(CFG, mesh)
+        man = qckpt.load_manifest({d!r})
+        sds = qckpt.abstract_params(man)
+        rep = packed_plane_bytes(sds, plan.param_shardings(sds))
+        assert rep["per_device"] * 2 == rep["total"], rep   # fully sharded
+        with jax.set_mesh(mesh):
+            loaded = qckpt.load({d!r}, plan)
+            resident = device_plane_bytes(loaded)
+            assert resident == rep["per_device"], (resident, rep)
+            eng = StaticEngine(CFG, loaded, max_batch=1, capacity=32,
+                               plan=plan)
+            r = eng.submit(np.arange(1, 9), max_tokens=3)
+            eng.run()
+        assert r.done and r.out == {ref.out!r}, r.out   # == no-mesh greedy
+        print("OK", resident, rep["total"])
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=420)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "OK" in r.stdout
