@@ -61,11 +61,12 @@ def main():
     disk_bytes = os.path.getsize(os.path.join(ckpt_dir, qckpt.PLANES_NAME))
     print(f"checkpoint: {disk_bytes / 1e6:.2f} MB on disk -> {ckpt_dir}")
 
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=10) for _ in range(3)]
+
     def serve(tree):
         eng = Engine(cfg, tree, max_batch=3, capacity=64)
-        rng = np.random.default_rng(0)
-        rs = [eng.submit(rng.integers(0, cfg.vocab, size=10), max_tokens=8)
-              for _ in range(3)]
+        rs = [eng.submit(p, max_tokens=8) for p in prompts]
         eng.run()
         return rs
 
@@ -73,6 +74,37 @@ def main():
     for a, b in zip(rs, rs_disk):
         assert a.out == b.out, (a.rid, a.out, b.out)
         print(f"  req {a.rid} -> {a.out}")
+
+    # quality summary: teacher-force the demo prompts + their continuations
+    # through the scoring path (repro.eval).  The fused-dequant serve path
+    # must be argmax-LOSSLESS against serving the same dequantized weights
+    # as dense fp arrays — greedy-match-rate exactly 1.0 (asserted for the
+    # rtn-w4 toy model, the CI contract).  The match against the
+    # *unquantized* fp weights is the real quality number quantization
+    # degrades; `launch/eval.py` tracks it per method in BENCH_quality.json.
+    import dataclasses
+    from repro.core.qformat import dequantize_any
+    from repro.eval import metrics, runner
+    fp_ref = jax.tree_util.tree_map(
+        lambda v: dequantize_any(dataclasses.replace(v, dtype="float32"))
+        if isinstance(v, QuantizedTensor) else v,
+        qp, is_leaf=lambda v: isinstance(v, QuantizedTensor))
+    rows = np.stack([np.concatenate([p, np.asarray(r.out)])
+                     for p, r in zip(prompts, rs)]).astype(np.int32)
+    o_pack = runner.make_engine(cfg, loaded, capacity=32,
+                                max_batch=3).score(rows)
+    o_deq = runner.make_engine(cfg, fp_ref, capacity=32,
+                               max_batch=3).score(rows)
+    o_fp = runner.make_engine(cfg, params, capacity=32,
+                              max_batch=3).score(rows)
+    lossless = metrics.greedy_match_rate(o_pack["greedy"], o_deq["greedy"])
+    vs_fp = metrics.greedy_match_rate(o_pack["greedy"], o_fp["greedy"])
+    print(f"quality: greedy-match {lossless:.3f} vs dequantized fp "
+          f"(serve path lossless), {vs_fp:.3f} vs unquantized fp16, "
+          f"ppl {metrics.perplexity(o_pack['nll']):.2f} "
+          f"(fp16 {metrics.perplexity(o_fp['nll']):.2f})")
+    if cfg.name.startswith("toy-llama") and args.wbits == 4:
+        assert lossless == 1.0, lossless
     print("OK: batched decode through packed weights; on-disk checkpoint "
           "serves bit-identically.")
 

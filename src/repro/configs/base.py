@@ -170,7 +170,7 @@ SHAPES_BY_NAME = {s.name: s for s in LM_SHAPES}
 class QuantConfig:
     wbits: int = 2                 # 1 (binary) | 2 | 3 | 4 | 8 | 16 (off)
     group_size: int = 64
-    # calibration method: rtn | optq | spqr | billm
+    # calibration method: rtn | optq | spqr | billm | adpq | quantease
     method: str = "spqr"
     # hessian source: oac (paper) | l2 (output-agnostic baseline) | identity
     hessian: str = "oac"
@@ -193,6 +193,7 @@ class QuantConfig:
     n_calib: int = 128
     calib_seq: int = 2048
     solver_block: int = 128        # OPTQ column block size
+    cd_iters: int = 3              # QuantEase coordinate-descent epochs
 
 
 @dataclasses.dataclass(frozen=True)

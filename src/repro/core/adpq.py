@@ -1,0 +1,93 @@
+"""AdpQ-style zero-shot calibration (arXiv 2405.13358).
+
+AdpQ removes the calibration set entirely: instead of ranking weights by a
+Hessian-weighted sensitivity (SpQR, eq. 4), it identifies outliers from the
+weight distribution alone with an adaptive soft-threshold — the
+adaptive-LASSO view of quantization: weights whose magnitude survives a
+per-column shrinkage proportional to the quantization step are kept in
+precision, everything else is round-to-nearest on a grid fitted to the
+inliers.  No Hessian, no activations, no data — the whole "calibration" is
+one pass over the kernel, which makes it the near-free rival baseline for
+the OAC method matrix.
+
+This implementation keeps the repo's fixed-COO-budget contract: the
+shrinkage score ranks every weight, the top ``capacity * d_in * d_out``
+survivors become additive COO corrections (exactly the
+``solver.CalibResult`` / ``QuantizedTensor`` outlier encoding), so AdpQ
+checkpoints pack into the same ``oac-qckpt`` container as OAC/SpQR and
+serve through the identical fused-dequant path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as qz
+from repro.core import solver
+
+
+def adpq_scores(W: jnp.ndarray, group_size: int, bits: int) -> jnp.ndarray:
+    """Soft-threshold saliency: how far |w| overshoots its group's RTN step.
+
+    The adaptive-LASSO threshold for a uniform grid of step ``s`` is
+    proportional to ``s``; weights with ``|w| >> s`` carry most of the
+    column's l2 mass and dominate the quantization error when clipped to
+    the grid, so the score is the magnitude measured in *steps of its own
+    group's grid* — scale-free across columns and groups.
+    """
+    d_in, d_out = W.shape
+    G = d_in // group_size
+    Wg = W.reshape(G, group_size, d_out)
+    grid = qz.fit_grid(Wg, bits)                 # scale (G, d_out)
+    step = grid.scale[:, None, :]                # broadcast over the group
+    return (jnp.abs(Wg) / step).reshape(d_in, d_out)
+
+
+def adpq_result(W: jnp.ndarray, *, bits: int, group_size: int,
+                outlier_capacity: float = 0.005) -> solver.CalibResult:
+    """Zero-shot AdpQ calibration of one kernel -> ``solver.CalibResult``.
+
+    1. score every weight by grid-relative magnitude (``adpq_scores``);
+    2. keep the global top ``capacity`` fraction as outliers (fixed COO
+       budget, same shapes as SpQR so packing is uniform);
+    3. refit each group's grid with outliers masked out — inliers get the
+       full code range instead of being crushed by the outlier span;
+    4. RTN-quantize everything on the refit grid; outlier positions store
+       the additive correction ``w - dequant(code)``.
+    """
+    if W.ndim == 3:                               # stacked layer kernels
+        fn = lambda w: adpq_result(w, bits=bits, group_size=group_size,
+                                   outlier_capacity=outlier_capacity)
+        return jax.vmap(fn)(W)
+    W = W.astype(jnp.float32)
+    d_in, d_out = W.shape
+    assert d_in % group_size == 0, (d_in, group_size)
+    G = d_in // group_size
+
+    s = adpq_scores(W, group_size, bits)
+    # adaptive threshold: relative to the mean score, like solver.detect_
+    # outliers' relative tau — keeps the selection meaningful whether the
+    # kernel is near-Gaussian (few outliers) or heavy-tailed (many)
+    cap = max(int(outlier_capacity * d_in * d_out), 8)
+    thresh = 2.0 * jnp.mean(s)
+    flat = jnp.where(s > thresh, s, -jnp.inf).ravel()
+    vals, idx = jax.lax.top_k(flat, cap)
+    keep = jnp.isfinite(vals)
+    rows = jnp.where(keep, idx // d_out, 0).astype(jnp.int32)
+    cols = jnp.where(keep, idx % d_out, 0).astype(jnp.int32)
+    omask = jnp.zeros((d_in, d_out), bool).at[rows, cols].set(keep)
+
+    # grid refit with outliers excluded (they are stored exactly anyway)
+    Wg = W.reshape(G, group_size, d_out)
+    og = omask.reshape(G, group_size, d_out)
+    grid = qz.fit_grid(Wg, bits, mask=1.0 - og.astype(W.dtype))
+    g2 = qz.Grid(grid.scale[:, None], grid.zero[:, None], bits)
+    q = qz.quantize(Wg, g2)
+    w_grid = qz.dequantize(q, g2).reshape(d_in, d_out)
+
+    o_vals = jnp.where(keep, W[rows, cols] - w_grid[rows, cols], 0.0)
+    w_hat = w_grid.at[rows, cols].add(o_vals)
+    err = jnp.sum((W - w_hat) ** 2)
+    return solver.CalibResult(
+        q.reshape(d_in, d_out).astype(jnp.uint8), grid.scale, grid.zero,
+        rows, cols, o_vals, w_hat, err)

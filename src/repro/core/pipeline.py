@@ -238,12 +238,27 @@ def _load_layer_result(path):
     return data["w_hat"], calib, binary
 
 
+# methods that never consume a Hessian (zero-shot / data-free)
+HESSIAN_FREE = ("rtn", "adpq")
+
+
 def _calibrate_kernel(W, H, qcfg: QuantConfig):
     if qcfg.method == "rtn":
         if W.ndim == 3:
             return jax.vmap(lambda w: solver.rtn_result(
                 w, bits=qcfg.wbits, group_size=qcfg.group_size))(W)
         return solver.rtn_result(W, bits=qcfg.wbits, group_size=qcfg.group_size)
+    if qcfg.method == "adpq":
+        from repro.core import adpq
+        return adpq.adpq_result(W, bits=qcfg.wbits,
+                                group_size=qcfg.group_size,
+                                outlier_capacity=qcfg.outlier_capacity)
+    if qcfg.method == "quantease":
+        from repro.core import quantease
+        fn = lambda w, h: quantease.quantease_result(
+            w, h, bits=qcfg.wbits, group_size=qcfg.group_size,
+            alpha=qcfg.alpha, cd_iters=qcfg.cd_iters)
+        return jax.vmap(fn)(W, H) if W.ndim == 3 else fn(W, H)
     if qcfg.method == "billm":
         fn = lambda w, h: bl.calibrate_binary(
             w, h, group_size=qcfg.group_size, alpha=qcfg.alpha)
@@ -285,6 +300,16 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
             # manifest is {"qcfg": ..., "done": ...}; flat pre-qcfg-stamp
             # manifests (legacy) are the done-dict itself
             done = stored["done"] if "done" in stored else stored
+            # method mismatch gets its own refusal: two calibrators'
+            # resume dirs must never silently collide (a half-finished
+            # adpq dir re-run with --method oac would pack a chimera)
+            stored_method = stored.get("method") or \
+                (stored.get("qcfg") or {}).get("method")
+            if stored_method is not None and stored_method != qcfg.method:
+                raise ValueError(
+                    f"calibration dir {ckpt_dir} holds {stored_method!r} "
+                    f"results; refusing to resume with method "
+                    f"{qcfg.method!r} — use a fresh ckpt_dir")
             # resuming under a different QuantConfig would silently pack
             # stale results (e.g. w4 codes re-packed at w2) — refuse
             if stored.get("qcfg") not in (None, qcfg_dict):
@@ -301,8 +326,8 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
     H_all = None
     any_todo = any(f"{j}:{n}" not in done
                    for j in range(n_layers) for n in names)
-    if qcfg.method != "rtn" and qcfg.hessian == "oac" and any_todo \
-            and qcfg.oac_grads == "precompute":
+    if qcfg.method not in HESSIAN_FREE and qcfg.hessian == "oac" \
+            and any_todo and qcfg.oac_grads == "precompute":
         # precompute BEFORE any per-layer restore so a resumed run sees the
         # same (full-precision) model as the uninterrupted one; park the
         # (L, d, d) stacks in host memory — keeping every layer's Hessian
@@ -311,7 +336,7 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
             model, params, batches, grad_dtype=qcfg.grad_dtype,
             reduction=qcfg.hessian_reduction, dist_ctx=dist_ctx))
     for j in range(n_layers):
-        needs_h = qcfg.method != "rtn"
+        needs_h = qcfg.method not in HESSIAN_FREE
         H_blk = None
         todo = [n for n in names if f"{j}:{n}" not in done]
         if needs_h and qcfg.hessian == "oac" and todo:
@@ -366,7 +391,8 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
                     tmp, os.path.join(ckpt_dir, fname), res, w_hat)
                 done[key] = fname
                 with open(manifest_path + ".tmp", "w") as f:
-                    json.dump({"qcfg": qcfg_dict, "done": done}, f)
+                    json.dump({"qcfg": qcfg_dict, "method": qcfg.method,
+                               "done": done}, f)
                 os.replace(manifest_path + ".tmp", manifest_path)
         log(f"[pipeline] layer {j + 1}/{n_layers} done "
             f"({qcfg.method}/{qcfg.hessian}, {qcfg.wbits}-bit)")

@@ -1,3 +1,5 @@
-from repro.data.pipeline import (SyntheticCorpus, DataIterator, make_calib_set)
+from repro.data.pipeline import (SyntheticCorpus, DataIterator,
+                                 make_calib_set, make_eval_set)
 
-__all__ = ["SyntheticCorpus", "DataIterator", "make_calib_set"]
+__all__ = ["SyntheticCorpus", "DataIterator", "make_calib_set",
+           "make_eval_set"]

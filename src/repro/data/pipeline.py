@@ -18,7 +18,19 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-_SPLIT_SALT = {"train": 0x1, "valid": 0x2, "calib": 0x3, "test": 0x4}
+# "calib" and "eval" share a salt but live in disjoint step ranges (see
+# SyntheticCorpus.batch): quantization calibration and quality eval draw
+# from the same distribution but provably disjoint RNG streams, so
+# perplexity is never measured on the sequences a method calibrated on.
+_SPLIT_SALT = {"train": 0x1, "valid": 0x2, "calib": 0x3, "eval": 0x3,
+               "test": 0x4}
+
+# eval step k draws from base step 2**20 + k.  The seed mixer multiplies
+# the step by an ODD constant (invertible mod 2**31 under the mask), so
+# distinct base steps always yield distinct seeds: any calib set smaller
+# than 2**20 batches is guaranteed disjoint from the eval stream, and the
+# calib stream itself stays byte-identical to what it always was.
+_EVAL_STEP_BASE = 1 << 20
 
 
 @dataclasses.dataclass
@@ -63,6 +75,9 @@ class SyntheticCorpus:
               shard_id: int = 0, num_shards: int = 1) -> Dict[str, np.ndarray]:
         assert batch_size % num_shards == 0
         per = batch_size // num_shards
+        # calib/eval disjointness: see _EVAL_STEP_BASE.
+        if split == "eval":
+            step = _EVAL_STEP_BASE + step
         rng = np.random.default_rng(
             (self.seed * 1_000_003 + _SPLIT_SALT[split]) ^
             (step * 2_654_435_761 + shard_id) & 0x7FFFFFFF)
@@ -101,4 +116,12 @@ def make_calib_set(corpus: SyntheticCorpus, n: int, batch: int = 1
                    ) -> Dict[str, np.ndarray]:
     """The paper's calibration set: n sequences stacked (n, seq_len)."""
     out = [corpus.batch("calib", i, batch)["tokens"] for i in range(n)]
+    return {"tokens": np.concatenate(out, axis=0)}
+
+
+def make_eval_set(corpus: SyntheticCorpus, n: int, batch: int = 1
+                  ) -> Dict[str, np.ndarray]:
+    """Held-out quality-eval sequences: same distribution as the calib
+    set, guaranteed-disjoint RNG stream (see ``SyntheticCorpus.batch``)."""
+    out = [corpus.batch("eval", i, batch)["tokens"] for i in range(n)]
     return {"tokens": np.concatenate(out, axis=0)}

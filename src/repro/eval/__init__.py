@@ -1,0 +1,5 @@
+"""Quality-at-scale eval harness: datasets, metrics, engine-path runner,
+and the per-(arch, method, bits, kv_bits) scorecard (BENCH_quality.json)."""
+from repro.eval import datasets, metrics, runner, scorecard
+
+__all__ = ["datasets", "metrics", "runner", "scorecard"]

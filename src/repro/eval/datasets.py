@@ -1,0 +1,92 @@
+"""Deterministic offline eval sets (no downloads — CI-safe).
+
+Stand-ins for the paper's quality benchmarks, synthesized from the same
+Zipf-Markov corpus the toy LM trains on (``benchmarks/prep_toy_lm.py``):
+
+  * ``ppl_stream``  — a wikitext-style perplexity stream: held-out
+    ``split="eval"`` sequences (guaranteed disjoint from the calibration
+    split, see ``data.pipeline``), scored teacher-forced end to end.
+  * ``choice_set``  — a tiny-MMLU-style multiple-choice set: each item is
+    a prompt whose *true* Markov continuation is the gold answer and
+    whose distractors are continuations lifted from other eval
+    sequences.  A trained LM assigns the gold continuation higher
+    likelihood than the distractors well above the 1/K chance floor, so
+    choice accuracy degrades measurably with quantization error.
+
+Everything is a pure function of (corpus seed, item count, shape
+parameters) — any host regenerates the identical benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data import SyntheticCorpus, make_eval_set
+
+# the corpus the toy LM (benchmarks/prep_toy_lm.py, launch/quantize.py)
+# trains on; eval draws from the same distribution's held-out split
+TOY_CORPUS_SEED = 7
+
+
+def toy_corpus(cfg, seq_len: int = 128,
+               seed: int = TOY_CORPUS_SEED) -> SyntheticCorpus:
+    """The corpus matching ``cfg``'s toy-LM training distribution."""
+    return SyntheticCorpus(vocab=cfg.vocab, seq_len=seq_len, seed=seed)
+
+
+def ppl_stream(corpus: SyntheticCorpus, n_seq: int) -> np.ndarray:
+    """(n_seq, seq_len) held-out token windows for teacher-forced ppl."""
+    return make_eval_set(corpus, n_seq)["tokens"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChoiceSet:
+    prompts: np.ndarray      # (n, P) int32
+    choices: np.ndarray      # (n, K, C) int32 — choices[i, gold[i]] is true
+    gold: np.ndarray         # (n,) int64
+
+    @property
+    def n_choices(self) -> int:
+        return self.choices.shape[1]
+
+    def rows(self) -> np.ndarray:
+        """(n*K, P+C) prompt++choice rows for ``Engine.score`` (row
+        ``i*K + k`` is item i's k-th choice)."""
+        n, K, C = self.choices.shape
+        rep = np.repeat(self.prompts, K, axis=0)
+        return np.concatenate([rep, self.choices.reshape(n * K, C)], axis=1)
+
+
+def choice_set(corpus: SyntheticCorpus, n_items: int, *,
+               prompt_len: int = 24, choice_len: int = 8,
+               n_choices: int = 4, seed: int = 0) -> ChoiceSet:
+    """Synthesize a deterministic multiple-choice set from the eval split.
+
+    Item i's prompt is the first ``prompt_len`` tokens of eval sequence i;
+    the gold choice is that sequence's actual continuation; the K-1
+    distractors are the continuations of the *next* K-1 eval sequences
+    (same marginal statistics, wrong context).  Gold positions are
+    shuffled with a seeded RNG so position carries no signal.
+    """
+    if prompt_len + choice_len > corpus.seq_len:
+        raise ValueError(f"prompt {prompt_len} + choice {choice_len} "
+                         f"exceeds corpus seq_len {corpus.seq_len}")
+    toks = make_eval_set(corpus, n_items)["tokens"]
+    prompts = toks[:, :prompt_len].astype(np.int32)
+    conts = toks[:, prompt_len:prompt_len + choice_len].astype(np.int32)
+    rng = np.random.default_rng(corpus.seed * 7919 + seed)
+    gold = rng.integers(0, n_choices, size=n_items)
+    choices = np.empty((n_items, n_choices, choice_len), np.int32)
+    for i in range(n_items):
+        # distractor pool: other items' continuations, in deterministic
+        # rotation so no two choices of one item coincide
+        pool = [conts[(i + d) % n_items] for d in range(1, n_choices)]
+        k_d = 0
+        for k in range(n_choices):
+            if k == gold[i]:
+                choices[i, k] = conts[i]
+            else:
+                choices[i, k] = pool[k_d]
+                k_d += 1
+    return ChoiceSet(prompts, choices, gold)

@@ -1,0 +1,61 @@
+"""Quality metrics: teacher-forced NLL/perplexity, multiple-choice
+accuracy, and greedy-match-rate against a reference (fp16) model.
+
+``nll_greedy`` is the single jnp kernel every scoring path shares —
+``Engine.score`` jits it inside the serving decode step and the dense
+reference loop (``runner.dense_reference_score``) applies it to bare
+forward logits — so "bit-identical" comparisons between the paged
+serving path and a dense forward compare the same floating-point ops,
+not two reimplementations of log-softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def nll_greedy(logits, targets):
+    """Per-row teacher-forced metrics from one step's logits.
+
+    logits (B, V), targets (B,) int32 ->
+      nll    (B,) float32: -log softmax(logits)[target]
+      greedy (B,) int32:   argmax prediction
+    """
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    greedy = jnp.argmax(lp, axis=-1).astype(jnp.int32)
+    return nll, greedy
+
+
+def perplexity(nll) -> float:
+    """exp(mean token NLL) over an (B, T) or flat NLL array."""
+    return float(np.exp(np.mean(np.asarray(nll, np.float64))))
+
+
+def greedy_match_rate(greedy_a, greedy_b) -> float:
+    """Fraction of positions where two models' greedy predictions agree —
+    the serving-quality headline for a quantized model vs its fp16
+    reference (1.0 = decoding is indistinguishable under argmax)."""
+    a, b = np.asarray(greedy_a), np.asarray(greedy_b)
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch: {a.shape} vs {b.shape}")
+    return float(np.mean(a == b))
+
+
+def choice_logprobs(nll, prompt_len: int) -> np.ndarray:
+    """Sum continuation log-probs from score() NLLs of prompt+choice rows.
+
+    ``nll`` (N, P+C-1) scores sequences ``prompt (P) ++ choice (C)``;
+    positions P-1 .. P+C-2 predict the choice tokens, so the choice's
+    total log-prob is minus that slice's sum."""
+    nll = np.asarray(nll, np.float64)
+    return -nll[:, prompt_len - 1:].sum(axis=-1)
+
+
+def choice_accuracy(logprobs, gold) -> float:
+    """logprobs (n, K) per-choice totals, gold (n,) -> accuracy."""
+    lp = np.asarray(logprobs)
+    pred = lp.argmax(axis=-1)
+    return float(np.mean(pred == np.asarray(gold)))

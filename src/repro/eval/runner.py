@@ -1,0 +1,141 @@
+"""Batched teacher-forced scoring through the real serving path.
+
+The runner never calls ``model.apply`` for quality numbers: scoring goes
+through ``PagedEngine.score`` (paged KV pool, block tables, optional int8
+KV, fused dequant decode for packed weights), so every eval row exercises
+the exact code production decode runs — a perplexity regression here is a
+*serving* regression, not just a math one.  ``dense_reference_score`` is
+the per-row dense-cache oracle tests compare the engine against
+(bit-identity: same metric kernel, same bucketed first-token prefill,
+dense KV instead of the paged pool).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.eval import datasets as ds
+from repro.eval import metrics as M
+from repro.models import build_model
+from repro.serving.engine import PagedEngine
+
+
+def make_engine(cfg, params, *, capacity: int, max_batch: int = 8,
+                kv_bits: int = 16, block_size: int = 16) -> PagedEngine:
+    """The scoring engine: paged KV, capacity rounded up to whole blocks."""
+    capacity += (-capacity) % block_size
+    return PagedEngine(cfg, params, max_batch=max_batch, capacity=capacity,
+                       block_size=block_size, kv_bits=kv_bits)
+
+
+def score_choices(engine, cs: ds.ChoiceSet) -> np.ndarray:
+    """(n, K) summed continuation log-probs via the engine scoring path."""
+    rows = cs.rows()
+    P = cs.prompts.shape[1]
+    out = engine.score(rows)
+    lp = M.choice_logprobs(out["nll"], P)
+    n, K, _ = cs.choices.shape
+    return lp.reshape(n, K)
+
+
+def dense_reference_score(cfg, params, tokens, *,
+                          capacity: int) -> Dict[str, np.ndarray]:
+    """Per-row dense teacher-forced oracle for ``Engine.score``.
+
+    Mirrors the engine's computation shape-for-shape — bucketed B=1
+    first-token prefill (exact length for recurrent families), then a
+    B=1 dense-cache ``decode_step`` per position — with no slot pool, no
+    paged blocks, no batch padding.  ``PagedEngine.score`` reproduces
+    this bit-for-bit at kv_bits=16 when decoding one row at a time
+    (``max_batch=1``); at larger batches the paged and dense-slot engines
+    remain bitwise-identical to *each other*, but recurrent families
+    (ssm/hybrid) reassociate state math under batching (~1e-6 nll drift
+    vs B=1 — greedy argmax is unaffected).  tests/test_eval.py pins all
+    three contracts.
+    """
+    model = build_model(cfg)
+    tokens = np.asarray(tokens, np.int32)
+    B, S = tokens.shape
+    bucketable = cfg.family not in ("ssm", "hybrid")
+    prefill = jax.jit(model.prefill)
+    first = jax.jit(M.nll_greedy)
+
+    def _step(params, tok, tgt, cache, pos):
+        logits, cache = model.decode_step(params, tok, cache, pos)
+        nll, greedy = M.nll_greedy(logits[:, 0], tgt)
+        return nll, greedy, cache
+    step = jax.jit(_step, donate_argnums=(3,))
+
+    nll = np.zeros((B, S - 1), np.float32)
+    greedy = np.zeros((B, S - 1), np.int32)
+    for i in range(B):
+        cache = model.init_cache(1, capacity, dtype=jnp.float32)
+        if bucketable:
+            Sp = min(max(8, 1), capacity)        # Engine._bucket(1)
+            toks = np.zeros((1, Sp), np.int32)
+            toks[0, 0] = tokens[i, 0]
+            logits, cache, _ = prefill(params, {"tokens": jnp.asarray(toks)},
+                                       cache, jnp.asarray(1, jnp.int32))
+        else:
+            logits, cache, _ = prefill(
+                params, {"tokens": jnp.asarray(tokens[i:i + 1, :1])}, cache)
+        nll0, g0 = first(logits[:, 0], jnp.asarray(tokens[i:i + 1, 1]))
+        nll[i, 0] = np.asarray(nll0)[0]
+        greedy[i, 0] = np.asarray(g0)[0]
+        for t in range(1, S - 1):
+            nll_t, g_t, cache = step(
+                params, jnp.asarray(tokens[i:i + 1, t:t + 1]),
+                jnp.asarray(tokens[i:i + 1, t + 1]), cache,
+                jnp.full((1,), t, jnp.int32))
+            nll[i, t] = np.asarray(nll_t)[0]
+            greedy[i, t] = np.asarray(g_t)[0]
+    return {"nll": nll, "greedy": greedy}
+
+
+def evaluate(cfg, params, *, ref_params=None, corpus=None, n_seq: int = 8,
+             n_choice_items: int = 16, prompt_len: int = 24,
+             choice_len: int = 8, kv_bits: int = 16, max_batch: int = 8,
+             log=print) -> Dict[str, object]:
+    """Full quality eval of one param tree through the serving path.
+
+    Scores the held-out perplexity stream and the multiple-choice set on
+    a ``PagedEngine`` built from ``params``; with ``ref_params`` (the
+    fp16 model) the same engine path scores the reference too, yielding
+    the ppl ratio and the greedy-match-rate.  Returns a scorecard-ready
+    dict plus the raw greedy arrays (for callers that chain comparisons).
+    """
+    corpus = corpus or ds.toy_corpus(cfg)
+    stream = ds.ppl_stream(corpus, n_seq)
+    cs = ds.choice_set(corpus, n_choice_items, prompt_len=prompt_len,
+                       choice_len=choice_len)
+    cap = max(corpus.seq_len, prompt_len + choice_len)
+    eng = make_engine(cfg, params, capacity=cap, max_batch=max_batch,
+                      kv_bits=kv_bits)
+    out = eng.score(stream)
+    ppl = M.perplexity(out["nll"])
+    acc = M.choice_accuracy(score_choices(eng, cs), cs.gold)
+    res: Dict[str, object] = {
+        "ppl": ppl, "choice_acc": acc, "kv_bits": kv_bits,
+        "n_tokens": int(out["nll"].size), "greedy": out["greedy"],
+    }
+    if ref_params is not None:
+        reng = make_engine(cfg, ref_params, capacity=cap,
+                           max_batch=max_batch, kv_bits=kv_bits)
+        rout = reng.score(stream)
+        res["fp16_ppl"] = M.perplexity(rout["nll"])
+        res["ppl_ratio"] = ppl / res["fp16_ppl"]
+        res["fp16_choice_acc"] = M.choice_accuracy(
+            score_choices(reng, cs), cs.gold)
+        res["greedy_match"] = M.greedy_match_rate(out["greedy"],
+                                                  rout["greedy"])
+    log(f"[eval] ppl {ppl:.3f}"
+        + (f" (fp16 {res['fp16_ppl']:.3f}, x{res['ppl_ratio']:.3f})"
+           if ref_params is not None else "")
+        + f", choice acc {acc:.3f}"
+        + (f", greedy match {res['greedy_match']:.3f}"
+           if ref_params is not None else "")
+        + f", {res['n_tokens']} tokens, kv{kv_bits}")
+    return res

@@ -1,0 +1,96 @@
+"""Quality scorecard: per-(arch, method, bits, kv_bits) matrix on disk.
+
+``BENCH_quality.json`` is the committed quality ledger the way
+``BENCH.md`` is the speed one: each row is one end-to-end measurement —
+an ``oac-qckpt`` checkpoint scored through the ``PagedEngine`` path
+(``launch/eval.py``) — keyed by ``(arch, method, wbits, kv_bits)``.
+``upsert`` replaces the row with the same key (re-running an eval updates
+its cell, never duplicates it); rows stay sorted by key so diffs are
+stable.
+
+``check`` is the CI tripwire: every row's quantized-vs-fp16 perplexity
+ratio must stay under the bound for its bit-width.  Bounds are loose
+enough for run-to-run training noise but catch a broken calibrator or
+dequant path (which shows up as 2-10x ppl, not 1.0x).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+FORMAT = "oac-bench-quality"
+VERSION = 1
+KEY_FIELDS = ("arch", "method", "wbits", "kv_bits")
+
+# max quantized/fp16 ppl ratio per weight bit-width (CI tripwire).
+# Measured on the trained toy-llama-smoke matrix (BENCH_quality.json):
+# w4 lands at 1.01-1.03 across all methods, w2 at 1.43 (quantease) -
+# 1.91 (rtn).  Bounds sit ~2x above the worst measured method so retrain
+# noise passes while a broken calibrator or dequant path (2-10x ppl)
+# fails hard.
+PPL_RATIO_BOUNDS: Dict[int, float] = {
+    1: 40.0, 2: 4.0, 3: 2.0, 4: 1.25, 8: 1.05, 16: 1.01,
+}
+
+
+def row_key(row: dict) -> tuple:
+    return tuple(row[k] for k in KEY_FIELDS)
+
+
+def load(path: str) -> List[dict]:
+    """Rows of an existing scorecard ([] if the file doesn't exist)."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("format") != FORMAT:
+        raise ValueError(f"{path} is not an {FORMAT} file "
+                         f"(format={doc.get('format')!r})")
+    return doc["rows"]
+
+
+def save(path: str, rows: List[dict]) -> None:
+    rows = sorted(rows, key=lambda r: [str(v) for v in row_key(r)])
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"format": FORMAT, "version": VERSION, "rows": rows},
+                  f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def upsert(path: str, row: dict) -> List[dict]:
+    """Insert ``row``, replacing any existing row with the same
+    (arch, method, wbits, kv_bits) key; persists and returns all rows."""
+    missing = [k for k in KEY_FIELDS if k not in row]
+    if missing:
+        raise ValueError(f"scorecard row missing key fields {missing}")
+    rows = [r for r in load(path) if row_key(r) != row_key(row)]
+    rows.append(row)
+    save(path, rows)
+    return rows
+
+
+def check(rows: List[dict],
+          bounds: Optional[Dict[int, float]] = None) -> List[str]:
+    """Regression tripwires -> list of failure strings (empty = pass).
+
+    A row fails when its ``ppl_ratio`` exceeds the bound for its
+    ``wbits``; rows without a ratio (no fp16 reference recorded) are
+    skipped — they carry absolute ppl only.
+    """
+    bounds = bounds or PPL_RATIO_BOUNDS
+    fails = []
+    for r in rows:
+        ratio = r.get("ppl_ratio")
+        if ratio is None:
+            continue
+        bound = bounds.get(int(r["wbits"]))
+        if bound is None:
+            continue
+        if ratio > bound:
+            fails.append(
+                f"{r['arch']} {r['method']} w{r['wbits']} kv{r['kv_bits']}: "
+                f"ppl_ratio {ratio:.3f} > bound {bound}")
+    return fails

@@ -1,0 +1,160 @@
+"""Quality-eval launcher: score a checkpoint (or in-memory method spec)
+through the ``PagedEngine`` serving path and append to the scorecard.
+
+``python -m repro.launch.eval --ckpt /tmp/oac_ckpt --scorecard
+BENCH_quality.json --check`` loads an ``oac-qckpt`` directory, rebuilds
+the fp16 reference its manifest ``extra`` describes (same seed /
+train-steps / corpus — the ``launch/quantize.py`` recipe), scores both
+through ``eval.runner.evaluate`` (held-out perplexity stream +
+multiple-choice accuracy + greedy-match-rate), upserts the
+``(arch, method, wbits, kv_bits)`` row, and — with ``--check`` — fails
+(exit 1) if any row trips the per-bit-width perplexity-ratio bound.
+
+Without ``--ckpt``, an in-memory spec (``--arch/--method/--wbits/...``)
+quantizes on the fly: ``--method none`` scores the fp model against
+itself (sanity row), ``rtn`` packs via ``quantize_params_rtn``, and the
+calibrated methods run the full pipeline before scoring.
+"""
+import argparse
+import sys
+import tempfile
+
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import QuantConfig
+from repro.core import pipeline
+from repro.data import SyntheticCorpus, make_calib_set
+from repro.eval import runner, scorecard
+from repro.launch.quantize import HESSIANS, METHODS, prepare_params
+
+
+def _eval_ckpt(args, log=print):
+    """-> (cfg, qcfg, quantized params, fp reference params, source str)."""
+    from repro.serving.qserve import ckpt as qckpt
+    manifest = qckpt.load_manifest(args.ckpt)
+    cfg = qckpt.resolve_config(manifest)
+    qcfg = qckpt.quant_config(manifest)
+    params = qckpt.load(args.ckpt, manifest=manifest)
+    extra = manifest.get("extra") or {}
+    seed = int(extra.get("seed", 0))
+    train_steps = int(extra.get("train_steps", 0))
+    calib_seq = int(extra.get("calib_seq", 128))
+    log(f"[eval] ckpt {args.ckpt}: arch={cfg.name} "
+        f"method={manifest.get('method')} "
+        f"(rebuilding fp16 ref: seed={seed}, train_steps={train_steps})")
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=calib_seq, seed=7)
+    _, ref = prepare_params(cfg, corpus, train_steps=train_steps, seed=seed,
+                            work_dir=tempfile.mkdtemp(prefix="oac_eval_"),
+                            log=log)
+    return cfg, qcfg, params, ref, args.ckpt
+
+
+def _eval_spec(args, log=print):
+    """In-memory spec: init/train, then quantize with the chosen method."""
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=args.calib_seq, seed=7)
+    m, ref = prepare_params(cfg, corpus, train_steps=args.train_steps,
+                            seed=args.seed,
+                            work_dir=tempfile.mkdtemp(prefix="oac_eval_"),
+                            log=log)
+    src = f"memory:{args.method}-w{args.wbits}"
+    if args.method == "none":
+        return cfg, None, ref, ref, "memory:fp"
+    qcfg = QuantConfig(wbits=args.wbits, group_size=args.group_size,
+                       method=args.method, hessian=args.hessian,
+                       alpha=1.0 if args.hessian == "oac" else 0.1)
+    if args.method == "rtn":
+        from repro.serving.quantized import quantize_params_rtn
+        qp, _ = quantize_params_rtn(ref, qcfg)
+        return cfg, qcfg, qp, ref, src
+    calib = {"tokens": jnp.asarray(
+        make_calib_set(corpus, args.calib)["tokens"])}
+    fq, results = pipeline.quantize_model(m, ref, calib, qcfg, log=log)
+    return cfg, qcfg, pipeline.pack_results(fq, results, qcfg), ref, src
+
+
+def run(args, log=print) -> dict:
+    """Score, upsert the scorecard row, return it."""
+    if args.ckpt:
+        cfg, qcfg, params, ref, src = _eval_ckpt(args, log)
+    else:
+        cfg, qcfg, params, ref, src = _eval_spec(args, log)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=args.eval_seq, seed=7)
+    res = runner.evaluate(cfg, params, ref_params=ref, corpus=corpus,
+                          n_seq=args.eval_seqs, kv_bits=args.kv_bits,
+                          max_batch=args.max_batch, log=log)
+    row = {
+        "arch": cfg.name,
+        "method": qcfg.method if qcfg is not None else "fp16",
+        "hessian": qcfg.hessian
+        if qcfg is not None and qcfg.method not in pipeline.HESSIAN_FREE
+        else None,
+        "wbits": qcfg.wbits if qcfg is not None else 16,
+        "group_size": qcfg.group_size if qcfg is not None else None,
+        "kv_bits": args.kv_bits,
+        "ppl": round(res["ppl"], 4),
+        "fp16_ppl": round(res["fp16_ppl"], 4),
+        "ppl_ratio": round(res["ppl_ratio"], 4),
+        "choice_acc": round(res["choice_acc"], 4),
+        "fp16_choice_acc": round(res["fp16_choice_acc"], 4),
+        "greedy_match": round(res["greedy_match"], 4),
+        "n_tokens": res["n_tokens"],
+        "source": src,
+    }
+    if args.scorecard:
+        rows = scorecard.upsert(args.scorecard, row)
+        log(f"[eval] scorecard {args.scorecard}: {len(rows)} rows "
+            f"(updated {scorecard.row_key(row)})")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", default=None,
+                    help="score a packed oac-qckpt directory (the fp16 "
+                         "reference is rebuilt from its manifest extra)")
+    ap.add_argument("--arch", default="toy-llama")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--method", default="rtn",
+                    choices=("none",) + METHODS,
+                    help="in-memory spec (no --ckpt): quantizer to apply "
+                         "(none = score the fp model against itself)")
+    ap.add_argument("--hessian", default="oac", choices=HESSIANS)
+    ap.add_argument("--wbits", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=32)
+    ap.add_argument("--train-steps", type=int, default=0)
+    ap.add_argument("--calib", type=int, default=8)
+    ap.add_argument("--calib-seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[16, 8],
+                    help="KV-pool precision of the scoring engine")
+    ap.add_argument("--eval-seqs", type=int, default=8,
+                    help="held-out perplexity sequences")
+    ap.add_argument("--eval-seq", type=int, default=128,
+                    help="eval sequence length (= engine capacity)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--scorecard", default=None,
+                    help="upsert the row into this BENCH_quality.json")
+    ap.add_argument("--check", action="store_true",
+                    help="after upserting, run the scorecard tripwires "
+                         "and exit 1 on any perplexity regression")
+    args = ap.parse_args()
+
+    row = run(args)
+    print(f"[eval] {row['arch']} {row['method']} w{row['wbits']} "
+          f"kv{row['kv_bits']}: ppl {row['ppl']} "
+          f"(x{row['ppl_ratio']} fp16), choice {row['choice_acc']}, "
+          f"greedy match {row['greedy_match']}")
+    if args.check:
+        rows = scorecard.load(args.scorecard) if args.scorecard else [row]
+        fails = scorecard.check(rows)
+        for f in fails:
+            print(f"[eval] TRIPWIRE: {f}")
+        if fails:
+            sys.exit(1)
+        print(f"[eval] tripwires OK ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

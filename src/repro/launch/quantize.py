@@ -13,8 +13,11 @@ same arguments skips finished layer-kernels and still packs the full tree.
 
 ``--method rtn`` is the zero-calibration path; ``spqr``/``optq`` calibrate
 with ``--hessian oac`` (paper) / ``l2`` / ``identity``; ``billm`` packs via
-the 1-bit residual carrier.  Calibration data comes from the synthetic
-corpus (the repo's offline stand-in for C4/WikiText2).
+the 1-bit residual carrier; ``adpq`` (arXiv 2405.13358) is the zero-shot
+adaptive-outlier rival and ``quantease`` (arXiv 2309.01885) the
+coordinate-descent one — all six emit the same ``oac-qckpt`` container.
+Calibration data comes from the synthetic corpus (the repo's offline
+stand-in for C4/WikiText2).
 """
 import argparse
 import os
@@ -31,8 +34,29 @@ from repro.data import DataIterator, SyntheticCorpus, make_calib_set
 from repro.models import build_model
 from repro.serving.qserve import ckpt as qckpt
 
-METHODS = ("rtn", "optq", "spqr", "billm")
+METHODS = ("rtn", "optq", "spqr", "billm", "adpq", "quantease")
 HESSIANS = ("oac", "l2", "identity")
+
+
+def prepare_params(cfg, corpus, *, train_steps: int = 0, seed: int = 0,
+                   work_dir: str = "/tmp/oac_prep", log=print):
+    """init (+ optional brief training) -> (model, params).
+
+    This is the deterministic fp-reference recipe: given the same
+    (cfg, corpus, seed, train_steps), any process rebuilds the exact
+    params a checkpoint was quantized from — ``launch/eval.py`` uses it
+    to reconstruct the fp16 baseline a ckpt's manifest ``extra`` names.
+    """
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(seed))
+    if train_steps > 0:
+        from repro.train.loop import train
+        tcfg = TrainConfig(steps=train_steps, lr=2e-3,
+                           warmup=min(30, train_steps // 2),
+                           ckpt_dir=os.path.join(work_dir, "train"))
+        params, _ = train(m, params, DataIterator(corpus, "train", 16),
+                          tcfg, log_every=max(train_steps // 4, 1))
+    return m, params
 
 
 def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
@@ -43,16 +67,9 @@ def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
     Callable from examples/tests with a concrete ModelConfig; the CLI is a
     thin argv wrapper around this.
     """
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(seed))
     corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=calib_seq, seed=7)
-    if train_steps > 0:
-        from repro.train.loop import train
-        tcfg = TrainConfig(steps=train_steps, lr=2e-3,
-                           warmup=min(30, train_steps // 2),
-                           ckpt_dir=os.path.join(out_dir, "train"))
-        params, _ = train(m, params, DataIterator(corpus, "train", 16),
-                          tcfg, log_every=max(train_steps // 4, 1))
+    m, params = prepare_params(cfg, corpus, train_steps=train_steps,
+                               seed=seed, work_dir=out_dir, log=log)
     calib = {"tokens": jnp.asarray(make_calib_set(corpus, n_calib)["tokens"])}
 
     qp, results = pipeline.quantize_model(

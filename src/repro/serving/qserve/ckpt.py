@@ -139,6 +139,11 @@ def save(ckpt_dir: str, params, cfg, qcfg=None, *, extra: Optional[dict] = None
         "arch": cfg.name,
         "plane_file": {"name": PLANES_NAME, "bytes": w.off},
         "qcfg": dataclasses.asdict(qcfg) if qcfg is not None else None,
+        # top-level calibrator stamp: every method (oac/spqr, rtn, adpq,
+        # quantease, billm) shares this v1 container, so tools that route
+        # on provenance (eval scorecard, resume guards) read it without
+        # parsing the full qcfg
+        "method": qcfg.method if qcfg is not None else None,
         "tensors": tensors,
     }
     if extra:

@@ -1,0 +1,333 @@
+"""repro.eval tests: metric math against hand-computed cross-entropy,
+``PagedEngine.score`` bit-identity vs the dense teacher-forced reference
+across all four model families, rival-calibrator (AdpQ / QuantEase)
+checkpoint round-trips, calib/eval split disjointness, method provenance
+stamps, and the quality scorecard tripwires."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import pipeline
+from repro.core import quantizers as qz
+from repro.data import SyntheticCorpus, make_calib_set, make_eval_set
+from repro.eval import datasets as ds
+from repro.eval import metrics as M
+from repro.eval import runner, scorecard
+from repro.models import build_model
+from repro.serving.engine import Engine, StaticEngine
+from repro.serving.qserve import ckpt as qckpt
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+
+
+def _hand_nll(logits_row, target):
+    """float64 log-sum-exp cross-entropy, written out by hand."""
+    l = np.asarray(logits_row, np.float64)
+    m = l.max()
+    lse = m + np.log(np.exp(l - m).sum())
+    return lse - l[int(target)]
+
+
+# ----------------------------------------------------------------- metrics
+def test_nll_greedy_matches_hand_computed():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(5, 17)) * 3.0, jnp.float32)
+    targets = jnp.asarray(rng.integers(0, 17, size=5), jnp.int32)
+    nll, greedy = jax.jit(M.nll_greedy)(logits, targets)
+    ref = [_hand_nll(logits[i], targets[i]) for i in range(5)]
+    np.testing.assert_allclose(np.asarray(nll), ref, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.argmax(np.asarray(logits), axis=-1))
+    hand_ppl = float(np.exp(np.mean(ref)))
+    assert abs(M.perplexity(nll) - hand_ppl) / hand_ppl < 1e-5
+
+
+def test_choice_and_match_helpers():
+    # rows score prompt(P=3) ++ choice(C=2): positions P-1..P span the choice
+    nll = np.array([[9.0, 9.0, 1.0, 2.0],
+                    [9.0, 9.0, 0.5, 0.5]])
+    lp = M.choice_logprobs(nll, prompt_len=3)
+    np.testing.assert_allclose(lp, [-3.0, -1.0])
+    assert M.choice_accuracy(lp.reshape(1, 2), np.array([1])) == 1.0
+    assert M.greedy_match_rate(np.array([1, 2, 3]), np.array([1, 0, 3])) \
+        == pytest.approx(2 / 3)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        M.greedy_match_rate(np.zeros(3), np.zeros(4))
+
+
+def test_engine_ppl_matches_hand_cross_entropy():
+    """Toy-model perplexity off the serving path == an independently
+    hand-computed (float64 log-sum-exp over raw forward logits)
+    cross-entropy, to 1e-5."""
+    model = build_model(CFG)
+    params = model.init(KEY)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=16, seed=7)
+    toks = ds.ppl_stream(corpus, 2)
+    eng = runner.make_engine(CFG, params, capacity=16, max_batch=2)
+    ppl = M.perplexity(eng.score(toks)["nll"])
+
+    step = jax.jit(model.decode_step)
+    nll = []
+    for i in range(2):
+        cache = model.init_cache(1, 16, dtype=jnp.float32)
+        logits, cache, _ = jax.jit(model.prefill)(
+            params, {"tokens": jnp.asarray(toks[i:i + 1, :1])}, cache)
+        nll.append(_hand_nll(np.asarray(logits)[0, 0], toks[i, 1]))
+        for t in range(1, 15):
+            logits, cache = step(params, jnp.asarray(toks[i:i + 1, t:t + 1]),
+                                 cache, jnp.full((1,), t, jnp.int32))
+            nll.append(_hand_nll(np.asarray(logits)[0, 0], toks[i, t + 1]))
+    hand = float(np.exp(np.mean(nll)))
+    assert abs(ppl - hand) / hand < 1e-5
+
+
+# ---------------------------------------------------------- bit identity
+@pytest.mark.parametrize("arch", [None, "gemma3-27b", "zamba2-7b",
+                                  "rwkv6-3b"])
+def test_score_bit_identical_to_dense_reference(arch):
+    """Three contracts, per model family:
+
+    1. ``PagedEngine(max_batch=1).score`` is fully bitwise (nll AND
+       greedy) vs the per-row dense teacher-forced reference — the paged
+       path adds zero numeric drift at matched decode batch.
+    2. At production batch, paged and dense-slot engines stay bitwise
+       identical to each other (block tables vs flat slots is pure
+       storage).
+    3. Greedy argmax is batch-invariant even for recurrent families,
+       whose batched state math reassociates floats (~1e-6 nll drift).
+    """
+    cfg = CFG if arch is None else get_smoke(arch)
+    params = build_model(cfg).init(KEY)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=12, seed=7)
+    toks = ds.ppl_stream(corpus, 3)
+    ref = runner.dense_reference_score(cfg, params, toks, capacity=16)
+
+    o1 = runner.make_engine(cfg, params, capacity=16, max_batch=1).score(toks)
+    np.testing.assert_array_equal(o1["nll"], ref["nll"])
+    np.testing.assert_array_equal(o1["greedy"], ref["greedy"])
+
+    op = runner.make_engine(cfg, params, capacity=16, max_batch=3).score(toks)
+    od = Engine(cfg, params, max_batch=3, capacity=16).score(toks)
+    np.testing.assert_array_equal(op["nll"], od["nll"])
+    np.testing.assert_array_equal(op["greedy"], od["greedy"])
+    np.testing.assert_array_equal(op["greedy"], ref["greedy"])
+    np.testing.assert_allclose(op["nll"], ref["nll"], atol=2e-5)
+
+
+def test_score_input_validation():
+    eng = runner.make_engine(CFG, build_model(CFG).init(KEY), capacity=16)
+    with pytest.raises(ValueError, match=r"\(B, S>=2\)"):
+        eng.score(np.zeros((2, 1), np.int32))
+    with pytest.raises(ValueError, match="exceeds the"):
+        eng.score(np.zeros((1, 64), np.int32))
+
+
+def test_score_leaves_engine_reusable():
+    """score() must fully release its rows: a subsequent generate run and
+    a second score() see a clean engine (paged blocks returned)."""
+    params = build_model(CFG).init(KEY)
+    eng = runner.make_engine(CFG, params, capacity=16, max_batch=2)
+    toks = ds.ppl_stream(SyntheticCorpus(vocab=64, seq_len=12, seed=7), 3)
+    a = eng.score(toks)
+    r = eng.submit(np.arange(1, 6), max_tokens=3)
+    eng.run()
+    assert r.done and len(r.out) == 3
+    b = eng.score(toks)
+    np.testing.assert_array_equal(a["nll"], b["nll"])
+
+
+def test_int8_kv_scoring_close_to_fp16_kv():
+    params = build_model(CFG).init(KEY)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=16, seed=7)
+    toks = ds.ppl_stream(corpus, 4)
+    p16 = M.perplexity(runner.make_engine(
+        CFG, params, capacity=16, kv_bits=16).score(toks)["nll"])
+    p8 = M.perplexity(runner.make_engine(
+        CFG, params, capacity=16, kv_bits=8).score(toks)["nll"])
+    assert abs(p8 - p16) / p16 < 0.1, (p8, p16)
+
+
+# ------------------------------------------------------------- eval sets
+def test_calib_eval_splits_disjoint_and_deterministic():
+    corpus = SyntheticCorpus(vocab=64, seq_len=32, seed=7)
+    calib = make_calib_set(corpus, 8)["tokens"]
+    ev = make_eval_set(corpus, 8)["tokens"]
+    seen = {bytes(row.astype(np.int32).tobytes()) for row in calib}
+    for row in ev:
+        assert bytes(row.astype(np.int32).tobytes()) not in seen
+    np.testing.assert_array_equal(ev, make_eval_set(corpus, 8)["tokens"])
+
+
+def test_choice_set_shapes_and_gold():
+    corpus = SyntheticCorpus(vocab=64, seq_len=32, seed=7)
+    cs = ds.choice_set(corpus, 6, prompt_len=8, choice_len=4)
+    assert cs.prompts.shape == (6, 8) and cs.choices.shape == (6, 4, 4)
+    toks = make_eval_set(corpus, 6)["tokens"]
+    for i in range(6):
+        # the gold choice is the sequence's true continuation; distractors
+        # all differ from it
+        np.testing.assert_array_equal(cs.choices[i, cs.gold[i]],
+                                      toks[i, 8:12])
+        for k in range(4):
+            if k != cs.gold[i]:
+                assert not np.array_equal(cs.choices[i, k],
+                                          cs.choices[i, cs.gold[i]])
+    rows = cs.rows()
+    assert rows.shape == (24, 12)
+    np.testing.assert_array_equal(rows[5], np.concatenate(
+        [cs.prompts[1], cs.choices[1, 1]]))
+    with pytest.raises(ValueError, match="exceeds corpus seq_len"):
+        ds.choice_set(corpus, 2, prompt_len=30, choice_len=4)
+
+
+# ------------------------------------------------------- rival calibrators
+def test_adpq_and_quantease_beat_rtn():
+    """AdpQ must beat RTN in l2 (outliers reconstructed exactly);
+    QuantEase must beat RTN on the Hessian-weighted objective it
+    descends (starting from the RTN warm start, CD can only help)."""
+    from repro.core.adpq import adpq_result
+    from repro.core.quantease import quantease_result
+    k1, k2 = jax.random.split(KEY)
+    W = jax.random.normal(k1, (64, 48)) * 0.1
+    spikes = jax.random.normal(k2, (12,)) * 2.0
+    W = W.at[jnp.arange(12) * 5, jnp.arange(12) * 4 % 48].add(spikes)
+
+    _, _, _, w_rtn = qz.rtn_quantize(W, 4, 16)
+    rtn_l2 = float(jnp.sum((W - w_rtn) ** 2))
+    r = adpq_result(W, bits=4, group_size=16, outlier_capacity=0.01)
+    assert float(r.err_trace) < rtn_l2
+    live = np.asarray(r.out_vals) != 0          # COO tail is zero-padded
+    rows, cols = np.asarray(r.out_rows)[live], np.asarray(r.out_cols)[live]
+    assert live.sum() >= 12                     # the planted spikes made it
+    np.testing.assert_allclose(np.asarray(r.w_hat)[rows, cols],
+                               np.asarray(W)[rows, cols], atol=1e-5)
+
+    X = jax.random.normal(k2, (256, 64))
+    H = X.T @ X / 256.0
+    q = quantease_result(W, H, bits=4, group_size=16, cd_iters=3)
+    Hn = H / jnp.mean(jnp.diag(H))
+
+    def obj(w_hat):
+        E = w_hat - W
+        return float(jnp.trace(E.T @ Hn @ E))
+    assert obj(q.w_hat) < obj(w_rtn)
+
+
+@pytest.mark.parametrize("method,hessian", [("adpq", "identity"),
+                                            ("quantease", "l2")])
+def test_rival_calibrator_ckpt_roundtrip_greedy(tmp_path, method, hessian):
+    """AdpQ / QuantEase results pack into the same oac-qckpt container:
+    save -> load reproduces the tree bit-for-bit and serves bit-identical
+    greedy tokens (mirror of test_ckpt's OAC round-trip)."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=32, seed=3)
+    calib = {"tokens": jnp.asarray(make_calib_set(corpus, 2)["tokens"])}
+    q = QuantConfig(wbits=4, group_size=16, method=method, hessian=hessian,
+                    alpha=0.1, cd_iters=2)
+    qp, results = pipeline.quantize_model(m, params, calib, q,
+                                          log=lambda *a: None)
+    packed = pipeline.pack_results(qp, results, q)
+    d = str(tmp_path / method)
+    man = qckpt.save(d, packed, CFG, q)
+    assert man["method"] == method
+    loaded = qckpt.load(d)
+    fa, ta = jax.tree_util.tree_flatten(packed)
+    fb, tb = jax.tree_util.tree_flatten(loaded)
+    assert str(ta) == str(tb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def greedy(tree):
+        eng = StaticEngine(CFG, tree, max_batch=2, capacity=48)
+        rs = [eng.submit(np.arange(1, 9), max_tokens=4),
+              eng.submit(np.arange(3, 11), max_tokens=3)]
+        eng.run()
+        return [r.out for r in rs]
+    assert greedy(packed) == greedy(loaded)
+
+
+# -------------------------------------------------------- method stamping
+def test_pipeline_stamps_method_and_refuses_mismatch(tmp_path):
+    m = build_model(CFG)
+    params = m.init(KEY)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=32, seed=3)
+    calib = {"tokens": jnp.asarray(make_calib_set(corpus, 2)["tokens"])}
+    ck = str(tmp_path / "pipe")
+    q = QuantConfig(wbits=4, group_size=16, method="rtn")
+    pipeline.quantize_model(m, params, calib, q, ckpt_dir=ck,
+                            log=lambda *a: None)
+    stored = json.load(open(os.path.join(ck, "pipeline.json")))
+    assert stored["method"] == "rtn"
+    q2 = QuantConfig(wbits=4, group_size=16, method="adpq")
+    with pytest.raises(ValueError, match="refusing to resume with method"):
+        pipeline.quantize_model(m, params, calib, q2, ckpt_dir=ck,
+                                log=lambda *a: None)
+
+
+# -------------------------------------------------------------- scorecard
+def _row(method="rtn", wbits=4, ratio=1.01, **kw):
+    r = {"arch": "t", "method": method, "wbits": wbits, "kv_bits": 16,
+         "ppl": 10.0, "fp16_ppl": 10.0 / ratio, "ppl_ratio": ratio}
+    r.update(kw)
+    return r
+
+
+def test_scorecard_upsert_replaces_and_sorts(tmp_path):
+    p = str(tmp_path / "q.json")
+    scorecard.upsert(p, _row("rtn", 4, ratio=1.02))
+    scorecard.upsert(p, _row("adpq", 4))
+    rows = scorecard.upsert(p, _row("rtn", 4, ratio=1.05))   # same key
+    assert len(rows) == 2
+    loaded = scorecard.load(p)
+    assert [r["method"] for r in loaded] == ["adpq", "rtn"]   # key-sorted
+    assert next(r for r in loaded if r["method"] == "rtn")["ppl_ratio"] \
+        == 1.05
+    with pytest.raises(ValueError, match="missing key fields"):
+        scorecard.upsert(p, {"arch": "t", "method": "rtn"})
+    with open(p, "w") as f:
+        json.dump({"format": "other", "rows": []}, f)
+    with pytest.raises(ValueError, match="not an oac-bench-quality"):
+        scorecard.load(p)
+
+
+def test_scorecard_tripwires():
+    ok = [_row("rtn", 4, ratio=1.1), _row("spqr", 2, ratio=3.0),
+          {"arch": "t", "method": "fp16", "wbits": 16, "kv_bits": 16,
+           "ppl": 10.0}]                     # no ratio -> not tripwired
+    assert scorecard.check(ok) == []
+    bad = [_row("rtn", 4, ratio=2.0)]
+    fails = scorecard.check(bad)
+    assert len(fails) == 1 and "ppl_ratio 2.000" in fails[0]
+    assert scorecard.check(bad, bounds={4: 3.0}) == []
+
+
+# ------------------------------------------------------------- end to end
+def test_evaluate_fp_self_identity(tmp_path):
+    """The fp model scored against itself through two engine instances:
+    ratio exactly 1.0, greedy match exactly 1.0 — and the resulting
+    scorecard row passes the tripwires."""
+    params = build_model(CFG).init(KEY)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=32, seed=7)
+    res = runner.evaluate(CFG, params, ref_params=params, corpus=corpus,
+                          n_seq=2, n_choice_items=4, prompt_len=8,
+                          choice_len=4, max_batch=2, log=lambda *a: None)
+    assert res["ppl_ratio"] == 1.0
+    assert res["greedy_match"] == 1.0
+    assert res["choice_acc"] == res["fp16_choice_acc"]
+    assert res["n_tokens"] == 2 * 31
+    row = {"arch": CFG.name, "method": "rtn", "wbits": 4, "kv_bits": 16,
+           "ppl": res["ppl"], "fp16_ppl": res["fp16_ppl"],
+           "ppl_ratio": res["ppl_ratio"]}
+    rows = scorecard.upsert(str(tmp_path / "q.json"), row)
+    assert scorecard.check(rows) == []
