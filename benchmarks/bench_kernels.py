@@ -1,5 +1,16 @@
 """Kernel microbenchmarks (CPU wall time of the jnp paths + interpret-mode
-checks; BlockSpec sweeps report the tiling chosen for TPU)."""
+checks; BlockSpec sweeps report the tiling chosen for TPU).
+
+Run as a module (``python -m benchmarks.bench_kernels --out
+BENCH_kernels.json``) to also write the serving-kernel roofline report:
+predicted fused-vs-unfused HBM bytes/token for ``kernels.paged_attn`` and
+``kernels.moe_dequant`` (the analytic models in ``roofline.analysis``) next
+to the bytes the *current* lowering actually compiles to, plus a tripwire
+that fails if any fused kernel stops predicting <= 0.5x the unfused
+gather+dequant traffic."""
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -12,6 +23,9 @@ from repro.core import hessian as hess
 from repro.core import qformat
 from repro.kernels.dequant_matmul import ops as dq_ops
 from repro.kernels.hessian_gg import ops as gg_ops
+from repro.kernels.moe_dequant import ops as moe_ops
+from repro.kernels.paged_attn import ops as pa_ops
+from repro.roofline import analysis
 
 
 def _time(fn, *args, reps=5):
@@ -71,4 +85,155 @@ def bench_calib_blocks(ctx=None):
                     f"cols_per_s={d_in / (us / 1e6):.0f}")
 
 
-ALL = [bench_dequant, bench_hessian_gg, bench_calib_blocks]
+def paged_attn_report():
+    """Timing + bytes/token for the paged decode: bounded vs full tables,
+    predicted fused-vs-unfused traffic (fp16 and int8 KV), achieved bytes
+    of the compiled fallback lowering."""
+    from repro.serving.qserve import kvquant as KQ
+    rng = np.random.default_rng(3)
+    B, bs, live, mb, KV, H, Dh = 4, 16, 8, 32, 4, 8, 64
+    nb = B * live + 1                        # block 0 reserved scratch
+    kp = jnp.asarray(rng.normal(size=(nb, bs, KV, Dh)), jnp.bfloat16)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, KV, Dh)), jnp.bfloat16)
+    tbl = np.full((B, mb), -1, np.int32)
+    tbl[:, :live] = 1 + np.arange(B * live).reshape(B, live)
+    bt_full, bt_live = jnp.asarray(tbl), jnp.asarray(tbl[:, :live])
+    q = jnp.asarray(rng.normal(size=(B, 1, H, Dh)), jnp.bfloat16)
+    pos = jnp.full((B,), live * bs - 1, jnp.int32)
+    kq, ks = KQ.quantize_kv(kp)
+    vq, vs = KQ.quantize_kv(vp)
+
+    def fp(qq, bt):
+        return pa_ops.paged_decode(qq, kp, vp, bt, pos)
+
+    def i8(qq, bt):
+        return pa_ops.paged_decode(qq, kq, vq, bt, pos,
+                                   k_scale=ks, v_scale=vs)
+
+    us_full = _time(jax.jit(fp), q, bt_full)
+    us_live = _time(jax.jit(fp), q, bt_live)
+    o_ref = fp(q, bt_live)
+    o_k = pa_ops.paged_decode(q, kp, vp, bt_live, pos,
+                              force_kernel=True, interpret=True)
+    parity = float(jnp.max(jnp.abs(o_k.astype(jnp.float32)
+                                   - o_ref.astype(jnp.float32))))
+    return {
+        "geom": {"B": B, "block_size": bs, "live_blocks": live,
+                 "max_blocks": mb, "n_kv": KV, "n_heads": H, "d_head": Dh},
+        "us_fallback_full_table": us_full,
+        "us_fallback_live_table": us_live,
+        "kernel_interpret_max_abs_diff": parity,
+        "predicted_bytes_per_token": {
+            "fp16": analysis.paged_attn_bytes(1, live, bs, KV, Dh, H, 16),
+            "int8": analysis.paged_attn_bytes(1, live, bs, KV, Dh, H, 8)},
+        "achieved_bytes_per_token": {
+            "fallback_full_table": analysis.achieved_bytes(
+                fp, q, bt_full) / B,
+            "fallback_live_table": analysis.achieved_bytes(
+                fp, q, bt_live) / B,
+            "fallback_live_table_int8": analysis.achieved_bytes(
+                i8, q, bt_live) / B},
+    }
+
+
+def moe_dequant_report():
+    """Timing + bytes for the stacked-expert contraction: per-expert scan
+    over the compacted routed set vs the dense all-experts reconstruction."""
+    from repro.configs.base import QuantConfig
+    from repro.kernels.moe_dequant.ref import moe_dequant_matmul_ref
+    from repro.serving.quantized import _quantize_leaf
+    rng = np.random.default_rng(4)
+    E, Er, T, K, N, bits, gs = 8, 4, 16, 256, 256, 4, 64
+    W = jnp.asarray(rng.normal(size=(E, K, N)).astype(np.float32))
+    qt = _quantize_leaf(W, QuantConfig(wbits=bits, group_size=gs,
+                                       method="rtn"))
+    xe = jnp.asarray(rng.normal(size=(E, T, K)), jnp.bfloat16)
+    eidx = jnp.arange(Er, dtype=jnp.int32)
+    qt_r = jax.tree.map(lambda a: a[eidx], qt)
+    xe_r = xe[:Er]
+
+    def routed(x):
+        return moe_ops.moe_dequant_matmul(x, qt_r)
+
+    def dense(x):
+        return moe_dequant_matmul_ref(x, qt)
+
+    us_routed = _time(jax.jit(routed), xe_r)
+    us_dense = _time(jax.jit(dense), xe)
+    y_k = moe_ops.moe_dequant_matmul(xe_r, qt_r, force_kernel=True,
+                                     interpret=True)
+    parity = float(jnp.max(jnp.abs(y_k.astype(jnp.float32)
+                                   - routed(xe_r).astype(jnp.float32))))
+    return {
+        "geom": {"n_experts": E, "n_routed": Er, "T": T, "K": K, "N": N,
+                 "bits": bits, "group_size": gs},
+        "us_scan_routed": us_routed,
+        "us_dense_all_experts": us_dense,
+        "kernel_interpret_max_abs_diff": parity,
+        "predicted_bytes": analysis.moe_dequant_bytes(Er, E, T, K, N,
+                                                      bits, gs),
+        "achieved_bytes": {
+            "scan_routed": analysis.achieved_bytes(routed, xe_r),
+            "dense_all_experts": analysis.achieved_bytes(dense, xe)},
+    }
+
+
+def bench_paged_attn(ctx=None):
+    r = paged_attn_report()
+    pred = r["predicted_bytes_per_token"]
+    common.emit(
+        "kernels/paged_attn_decode_B4_live8_mb32",
+        r["us_fallback_live_table"],
+        f"full_table_us={r['us_fallback_full_table']:.0f};"
+        f"pred_fused_ratio_fp16={pred['fp16']['ratio']:.3f};"
+        f"pred_fused_ratio_int8={pred['int8']['ratio']:.3f};"
+        f"interp_diff={r['kernel_interpret_max_abs_diff']:.2e}")
+
+
+def bench_moe_dequant(ctx=None):
+    r = moe_dequant_report()
+    common.emit(
+        "kernels/moe_dequant_E8_routed4_w4",
+        r["us_scan_routed"],
+        f"dense_us={r['us_dense_all_experts']:.0f};"
+        f"pred_fused_ratio={r['predicted_bytes']['ratio']:.3f};"
+        f"interp_diff={r['kernel_interpret_max_abs_diff']:.2e}")
+
+
+ALL = [bench_dequant, bench_hessian_gg, bench_calib_blocks,
+       bench_paged_attn, bench_moe_dequant]
+
+TRIPWIRE_RATIO = 0.5   # fused kernels must predict <= half the unfused bytes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write the serving-kernel roofline report (JSON)")
+    args = ap.parse_args(argv)
+    pa = paged_attn_report()
+    moe = moe_dequant_report()
+    ratios = {
+        "paged_attn_fp16": pa["predicted_bytes_per_token"]["fp16"]["ratio"],
+        "paged_attn_int8": pa["predicted_bytes_per_token"]["int8"]["ratio"],
+        "moe_dequant_w4": moe["predicted_bytes"]["ratio"],
+    }
+    ok = all(r <= TRIPWIRE_RATIO for r in ratios.values())
+    report = {"paged_attn": pa, "moe_dequant": moe,
+              "tripwire": {"max_ratio": TRIPWIRE_RATIO, "ratios": ratios,
+                           "pass": ok}}
+    for k, v in ratios.items():
+        print(f"kernels/bytes_ratio/{k},{v:.4f},"
+              f"{'OK' if v <= TRIPWIRE_RATIO else 'TRIP'}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.out}")
+    if not ok:
+        print("# roofline tripwire: fused kernel predicts > "
+              f"{TRIPWIRE_RATIO}x unfused bytes", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -232,7 +232,8 @@ def make_residual_carrier(w_hat, *, group_size: int, stats_bits=3,
     scales -> contributes exactly 0) and ``resid_planes``/``resid_scales``
     carry ``sign(w_hat) * |w_hat|``.  This keeps BiLLM checkpoints in the
     same v1 container the sharded serving stack already understands (the
-    matmul falls back to the whole-tensor op on residual tensors); storage
+    fused matmuls add the residual per tile after the grouped dequant, on
+    the unsharded and the tp col/row paths alike); storage
     accounting for the *method* stays with ``BinaryResult.avg_bits`` — the
     carrier's own ``storage_bits()`` reports the bf16-residual cost.
     """

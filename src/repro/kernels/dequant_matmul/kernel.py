@@ -40,10 +40,32 @@ def _unpack_plane(p, bits: int):
     return vals.reshape(rows * per, bn)
 
 
-def _kernel(x_ref, *refs, bits, group_size, out_dtype):
+def _dequant_tile(planes, s_ref, z_ref, r_ref, rs_ref, *, bits, group_size,
+                  bk, bn, in_dtype):
+    """Unpack + dequantize one (bk, bn) weight tile in VREGs.
+
+    ``r_ref``/``rs_ref`` (optional) are the BiLLM residual-carrier planes:
+    a 1-bit sign plane and a per-element |w_hat| magnitude, added on top of
+    the grouped grid exactly as ``QuantizedTensor.dequantize`` does."""
+    codes = _unpack_block(planes, bits, bk).astype(jnp.float32)  # (bk, bn)
+    gb = bk // group_size
+    q = codes.reshape(gb, group_size, bn)
+    w = (q - z_ref[...][:, None, :]) * s_ref[...][:, None, :]
+    w = w.reshape(bk, bn)
+    if r_ref is not None:
+        rb = _unpack_plane(r_ref[...], 1).astype(jnp.float32)
+        w = w + (rb * 2.0 - 1.0) * rs_ref[...].astype(jnp.float32)
+    return w.astype(in_dtype)
+
+
+def _kernel(x_ref, *refs, bits, group_size, resid, out_dtype):
     n_planes = 2 if bits == 3 else 1
     planes = refs[:n_planes]
-    s_ref, z_ref, o_ref = refs[n_planes:]
+    if resid:
+        s_ref, z_ref, r_ref, rs_ref, o_ref = refs[n_planes:]
+    else:
+        s_ref, z_ref, o_ref = refs[n_planes:]
+        r_ref = rs_ref = None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -52,11 +74,9 @@ def _kernel(x_ref, *refs, bits, group_size, out_dtype):
 
     bk = x_ref.shape[1]
     bn = o_ref.shape[1]
-    codes = _unpack_block(planes, bits, bk).astype(jnp.float32)  # (bk, bn)
-    gb = bk // group_size
-    q = codes.reshape(gb, group_size, bn)
-    w = (q - z_ref[...][:, None, :]) * s_ref[...][:, None, :]
-    w = w.reshape(bk, bn).astype(x_ref.dtype)
+    w = _dequant_tile(planes, s_ref, z_ref, r_ref, rs_ref, bits=bits,
+                      group_size=group_size, bk=bk, bn=bn,
+                      in_dtype=x_ref.dtype)
     o_ref[...] += jax.lax.dot(x_ref[...], w,
                               preferred_element_type=jnp.float32)
 
@@ -69,15 +89,20 @@ def _plane_rows(bits: int):
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm",
                                              "bn", "bk", "interpret"))
-def dequant_matmul_kernel(x, planes, scales, zeros, *, bits, group_size,
+def dequant_matmul_kernel(x, planes, scales, zeros, resid_planes=None,
+                          resid_scales=None, *, bits, group_size,
                           bm=128, bn=256, bk=512, interpret=False):
     """x (M, K) x packed (K, N) -> (M, N) f32.
 
     planes: tuple of uint8 arrays ((K*b/8, N)) per qformat packing.
     scales/zeros: (K//gs, N) f32 (already double-dequantized).
+    resid_planes/resid_scales (optional): BiLLM residual carrier — 1-bit
+    sign plane (K/8, N) + per-element |w_hat| (K, N); fused into the tile
+    dequant so residual checkpoints stay on the packed-stream path.
     """
     M, K = x.shape
     N = scales.shape[1]
+    resid = resid_planes is not None
     bm = min(bm, M)
     bn = min(bn, N)
     bk = min(bk, K)
@@ -92,10 +117,15 @@ def dequant_matmul_kernel(x, planes, scales, zeros, *, bits, group_size,
     gb = bk // group_size
     in_specs.append(pl.BlockSpec((gb, bn), lambda i, j, k: (k, j)))
     in_specs.append(pl.BlockSpec((gb, bn), lambda i, j, k: (k, j)))
+    ins = [x, *planes, scales, zeros]
+    if resid:
+        in_specs.append(pl.BlockSpec((bk // 8, bn), lambda i, j, k: (k, j)))
+        in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)))
+        ins += [*resid_planes, resid_scales]
 
     return pl.pallas_call(
         functools.partial(_kernel, bits=bits, group_size=group_size,
-                          out_dtype=jnp.float32),
+                          resid=resid, out_dtype=jnp.float32),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
@@ -103,4 +133,4 @@ def dequant_matmul_kernel(x, planes, scales, zeros, *, bits, group_size,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, *planes, scales, zeros)
+    )(*ins)

@@ -81,13 +81,13 @@ def dequant_matmul_parts(x2, planes, scales, zeros, *, bits, group_size,
     operands, so a column (N/T) or row (K/T, group-aligned) slice lowers to
     the same kernel as the full tensor."""
     on_tpu = jax.default_backend() == "tpu"
-    if (force_kernel or on_tpu) and resid_planes is None:
+    if force_kernel or on_tpu:
         M = x2.shape[0]
         bm = M if M < 128 else 128
         return _k.dequant_matmul_kernel(
             x2, planes, scales.astype(jnp.float32),
-            zeros.astype(jnp.float32), bits=bits,
-            group_size=group_size, bm=bm,
+            zeros.astype(jnp.float32), resid_planes, resid_scales,
+            bits=bits, group_size=group_size, bm=bm,
             interpret=interpret or not on_tpu)
     return _jnp_blockwise(x2, planes, scales, zeros, bits=bits,
                           group_size=group_size, resid_planes=resid_planes,

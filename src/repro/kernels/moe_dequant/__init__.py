@@ -1,0 +1,1 @@
+# Fused stacked-expert dequant matmul (see ops.py).

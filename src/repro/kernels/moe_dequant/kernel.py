@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused stacked-expert group-dequant matmul.
+
+The MoE serving hot-spot: expert weights live as one *stacked*
+``QuantizedTensor`` (packed planes ``(E, K*b/8, N)``), and the dispatch
+buffers are ``(E, T, K)`` routed-token stacks.  The grid walks
+``(E, T/bm, N/bn, K/bk)``; each step streams one expert's packed tile
+HBM->VMEM, unpacks + dequantizes it in VREGs (the same per-tile math as
+``kernels.dequant_matmul``, including the BiLLM residual carrier), and
+accumulates on the MXU — the dense ``(E, K, N)`` bf16 expert stack never
+exists in HBM, which is the whole point: per decode step only the routed
+experts' packed bytes move.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+import repro.dist.compat  # noqa: F401  (aliases pltpu.CompilerParams on older jax)
+from repro.kernels.dequant_matmul.kernel import _plane_rows, _unpack_plane
+
+
+def _kernel(x_ref, *refs, bits, group_size, resid):
+    n_planes = 2 if bits == 3 else 1
+    planes = refs[:n_planes]
+    if resid:
+        s_ref, z_ref, r_ref, rs_ref, o_ref = refs[n_planes:]
+    else:
+        s_ref, z_ref, o_ref = refs[n_planes:]
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bk = x_ref.shape[2]
+    bn = o_ref.shape[2]
+    if bits == 3:
+        codes = _unpack_plane(planes[0][0], 2) + \
+            (_unpack_plane(planes[1][0], 1) << 2)
+    else:
+        codes = _unpack_plane(planes[0][0], bits)
+    q = codes.astype(jnp.float32).reshape(bk // group_size, group_size, bn)
+    w = (q - z_ref[0][:, None, :]) * s_ref[0][:, None, :]
+    w = w.reshape(bk, bn)
+    if resid:
+        rb = _unpack_plane(r_ref[0], 1).astype(jnp.float32)
+        w = w + (rb * 2.0 - 1.0) * rs_ref[0].astype(jnp.float32)
+    w = w.astype(x_ref.dtype)
+    o_ref[...] += jax.lax.dot(x_ref[0], w,
+                              preferred_element_type=jnp.float32)[None]
+
+
+def _fit(b, total, step=1):
+    """Largest block <= b that is a multiple of ``step`` and divides total."""
+    b = min(b, total)
+    b = max((b // step) * step, step)
+    while total % b:
+        b -= step
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm",
+                                             "bn", "bk", "interpret"))
+def moe_dequant_matmul_kernel(xe, planes, scales, zeros, resid_planes=None,
+                              resid_scales=None, *, bits, group_size,
+                              bm=128, bn=256, bk=512, interpret=False):
+    """xe (E, T, K) x stacked packed (E, K, N) -> (E, T, N) f32.
+
+    planes: tuple of uint8 arrays ((E, K*b/8, N)); scales/zeros (E, K//gs, N)
+    f32 (already double-dequantized, see ``ops.stacked_scales_zeros``).
+    COO outliers are the caller's job (global indices, applied per expert
+    outside the kernel).
+    """
+    E, T, K = xe.shape
+    N = scales.shape[-1]
+    resid = resid_planes is not None
+    bm = _fit(bm, T)
+    bn = _fit(bn, N)
+    bk = _fit(bk, K, group_size)
+    grid = (E, T // bm, N // bn, K // bk)
+
+    in_specs = [pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k))]
+    for per in _plane_rows(bits):
+        in_specs.append(
+            pl.BlockSpec((1, bk // per, bn), lambda e, i, j, k: (e, k, j)))
+    gb = bk // group_size
+    in_specs += [pl.BlockSpec((1, gb, bn), lambda e, i, j, k: (e, k, j))] * 2
+    ins = [xe, *planes, scales, zeros]
+    if resid:
+        in_specs.append(
+            pl.BlockSpec((1, bk // 8, bn), lambda e, i, j, k: (e, k, j)))
+        in_specs.append(
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)))
+        ins += [*resid_planes, resid_scales]
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group_size=group_size,
+                          resid=resid),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, T, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(*ins)

@@ -1,0 +1,61 @@
+"""Public op: batched y[e] = x[e] @ W_quant[e] over a stacked expert tensor.
+
+Dispatch:
+  * TPU (or ``force_kernel``): the fused Pallas kernel (kernel.py) — packed
+    expert planes stream HBM->VMEM per tile; the dense ``(E, K, N)`` weight
+    stack never materializes.
+  * otherwise (CPU container, dry-run lowering): a scan over experts, each
+    step running the whole-tensor ``dequant_matmul`` (itself blockwise) —
+    peak transient memory is ONE expert's weight tile, not all ``E`` of
+    them, which is the interim fix for ``moe_apply`` densely dequantizing
+    every expert per layer.
+
+The stacked ``QuantizedTensor`` is exactly what ``serving.quantized``
+produces (vmapped quantization: every data leaf gains a leading ``E``) and
+both paths consume the full reconstruction: grouped grid, BiLLM residual
+carrier, and per-expert COO outlier correction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qformat import QuantizedTensor, dequantize_stats
+from repro.kernels.dequant_matmul import ops as dq_ops
+from repro.kernels.moe_dequant import kernel as _k
+
+
+def stacked_scales_zeros(qt: QuantizedTensor):
+    """Double-dequantized (E, G, N) stats of an expert-stacked tensor.
+
+    ``QuantizedTensor.scales_zeros`` indexes ``[:, None]`` and is not
+    stack-safe, so the second-level dequant is vmapped over the stack dim.
+    """
+    G = qt.n_groups
+    dq = jax.vmap(dequantize_stats, in_axes=(0, 0, 0, None))
+    scales = dq(qt.q_scales, qt.ss_scale, qt.ss_zero, G)
+    zeros = dq(qt.q_zeros, qt.zz_scale, qt.zz_zero, G)
+    return scales, zeros
+
+
+def moe_dequant_matmul(xe, qt: QuantizedTensor, *, force_kernel: bool = False,
+                       interpret: bool = False):
+    """xe (E, T, K) x stacked packed (E, K, N) -> (E, T, N) in xe.dtype."""
+    on_tpu = jax.default_backend() == "tpu"
+    if force_kernel or on_tpu:
+        T = xe.shape[1]
+        scales, zeros = stacked_scales_zeros(qt)
+        y = _k.moe_dequant_matmul_kernel(
+            xe, qt.planes, scales.astype(jnp.float32),
+            zeros.astype(jnp.float32), qt.resid_planes, qt.resid_scales,
+            bits=qt.bits, group_size=qt.group_size,
+            bm=T if T < 128 else 128, interpret=interpret or not on_tpu)
+        y = jax.vmap(dq_ops.outlier_correction)(xe, qt, y)
+        return y.astype(xe.dtype)
+
+    def step(_, ev):
+        x_e, qt_e = ev
+        return None, dq_ops.dequant_matmul(x_e, qt_e)
+
+    _, ys = jax.lax.scan(step, None, (xe, qt))
+    return ys

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the stacked-expert dequant matmul.
+
+Densely reconstructs every expert (the thing the fused kernel avoids) and
+contracts — the most literal statement of the math: for each expert ``e``,
+``y[e] = x[e] @ dequantize(W[e])`` with the full qformat reconstruction
+(grouped grid, BiLLM residual carrier, COO outliers).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.qformat import dequantize_any
+
+
+def moe_dequant_matmul_ref(xe, qt):
+    """xe (E, T, K) x stacked packed (E, K, N) -> (E, T, N) in xe.dtype."""
+    w = dequantize_any(qt).astype(xe.dtype)          # (E, K, N) dense
+    return jnp.einsum("etk,ekn->etn", xe, w)

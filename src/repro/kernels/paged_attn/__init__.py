@@ -1,0 +1,1 @@
+# Table-walking paged-attention decode kernel (see ops.py).

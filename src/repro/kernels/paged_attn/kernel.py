@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: table-walking paged-attention decode.
+
+One query token per row attends its whole paged KV history by *walking the
+block table*: the grid is ``(B, max_blocks)`` and the pool BlockSpecs index
+physical block ``block_tables[b, j]`` directly via scalar prefetch
+(``PrefetchScalarGridSpec``) — the dense per-row KV view the XLA fallback
+materializes never exists.  Unmapped table slots resolve to physical block
+0 (the pool's reserved write scratch); consecutive repeats of the same
+block index are not re-fetched by the pipeline emitter, so a row's empty
+table tail costs ~one block DMA instead of ``max_blocks``.
+
+int8 pools pass their ``k_scale``/``v_scale`` planes and the kernel fuses
+dequant into the score loop (codes * scale in VREGs): quantized KV bytes
+stream HBM->VMEM at 1B+scale per element and the bf16/f32 KV tile never
+exists in HBM.
+
+Softmax is the online (flash-decoding) recurrence: running (o_unnorm, m, l)
+live in the output VMEM blocks across the ``j`` walk (block index depends
+only on ``b``; ``dimension_semantics=(parallel, arbitrary)``), and the
+caller normalizes or psum-combines — the same partials contract as
+``models.attention.decode_attention_partial``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+import repro.dist.compat  # noqa: F401  (aliases pltpu.CompilerParams on older jax)
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest, window, quant):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        o_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    bs, KV, Dh = k_ref.shape[1:]
+    H = q_ref.shape[1]
+    rep = H // KV
+    k = k_ref[0].astype(jnp.float32)                  # (bs, KV, Dh)
+    v = v_ref[0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0].astype(jnp.float32)[..., None]
+        v = v * vs_ref[0].astype(jnp.float32)[..., None]
+    qg = (q_ref[0].astype(jnp.float32) * Dh ** -0.5).reshape(KV, rep, Dh)
+    # s[g, r, t] = sum_d qg[g, r, d] * k[t, g, d]
+    s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                            preferred_element_type=jnp.float32)
+    posn = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    pr = pos_ref[b]
+    valid = (bt_ref[b, j] >= 0) & (posn <= pr)
+    if window:
+        valid &= (pr - posn) < window
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m_prev = m_ref[...].reshape(KV, rep)
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l_ref[...].reshape(KV, rep) * alpha + p.sum(-1)
+    # pv[g, r, d] = sum_t p[g, r, t] * v[t, g, d]
+    pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                             preferred_element_type=jnp.float32)
+    o_new = o_ref[...].reshape(KV, rep, Dh) * alpha[..., None] + pv
+    o_ref[...] = o_new.reshape(1, H, Dh)
+    m_ref[...] = m_new.reshape(1, H)
+    l_ref[...] = l_new.reshape(1, H)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_kernel(q, k_pool, v_pool, block_tables, pos,
+                        k_scale=None, v_scale=None, *, window=0,
+                        interpret=False):
+    """q (B,1,H,Dh) vs paged pools -> (o_unnorm (B,H,Dh) f32, m, l (B,H)).
+
+    ``block_tables (B, mb)`` int32 (-1 unmapped), ``pos (B,)`` row clocks;
+    position ``p`` lives at ``(block_tables[b, p // bs], p % bs)``.  Pass
+    ``k_scale``/``v_scale (num_blocks, bs, KV)`` for int8 pools (fused
+    dequant).  Partials combine exactly like ``decode_attention_partial``.
+    """
+    B, _, H, Dh = q.shape
+    bs, KV = k_pool.shape[1:3]
+    mb = block_tables.shape[1]
+    quant = k_scale is not None
+    q2 = q.reshape(B, H, Dh)
+
+    def pool_blk(b, j, bt, pos_s):
+        return (jnp.where(bt[b, j] >= 0, bt[b, j], 0), 0, 0, 0)
+
+    def scale_blk(b, j, bt, pos_s):
+        return (jnp.where(bt[b, j] >= 0, bt[b, j], 0), 0, 0)
+
+    in_specs = [pl.BlockSpec((1, H, Dh), lambda b, j, bt, pos_s: (b, 0, 0)),
+                pl.BlockSpec((1, bs, KV, Dh), pool_blk),
+                pl.BlockSpec((1, bs, KV, Dh), pool_blk)]
+    ins = [q2, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, KV), scale_blk)] * 2
+        ins += [k_scale, v_scale]
+    row = lambda b, j, bt, pos_s: (b, 0)              # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, mb),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, H, Dh),
+                                lambda b, j, bt, pos_s: (b, 0, 0)),
+                   pl.BlockSpec((1, H), row), pl.BlockSpec((1, H), row)])
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, quant=quant),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H), jnp.float32)),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32), *ins)

@@ -1,0 +1,128 @@
+"""Public op: paged-attention decode over a block-table-addressed KV pool.
+
+Dispatch:
+  * TPU (or ``force_kernel``): the table-walking Pallas kernel (kernel.py)
+    — walks ``block_tables`` via scalar prefetch, reads the pool in place,
+    and fuses int8 dequant into the score loop.  Online-softmax partials,
+    normalized here (or handed back raw for the flash psum combine).
+  * otherwise (CPU container, dry-run lowering): the XLA block-gather
+    fallback — gathers each row's blocks into a dense view and runs the
+    exact pre-kernel lowering, so every committed bit-identity contract
+    (paged vs dense greedy, flash stripe combine) is preserved verbatim.
+
+Both paths share one addressing/masking contract: position ``p`` of row
+``b`` lives at ``(block_tables[b, p // bs], p % bs)``, valid iff the
+logical block is mapped (table entry >= 0) and ``p <= pos[b]`` (and inside
+the sliding window when ``window > 0``).  Callers with a tp block stripe
+(``_paged_flash_write``) pass stripe-local tables (foreign blocks -1) and
+``pos_offset`` = the absolute position of table slot 0; masking is done in
+int32 so the offset form is exact, not approximately equal.
+
+``paged_view`` (the bounded gather) is exposed for the roofline byte
+accounting of the unfused path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attn import kernel as _k
+
+NEG_INF = -1e30
+
+
+def paged_view(k_pool, block_tables, scale=None, dtype=None):
+    """XLA gather: dense (B, mb*bs, KV, Dh) view of one pool.
+
+    The gather is bounded by the table width callers pass — the serving
+    engine slices tables to the live-block bucket, so the fallback stops
+    paying for empty tail slots (ISSUE 7 satellite).  Unmapped entries
+    clamp to physical block 0 (the reserved scratch block); the caller
+    masks them via the returned ``mapped`` (B, mb*bs)."""
+    B, mb = block_tables.shape
+    bs, KV, Dh = k_pool.shape[1:]
+    safe = jnp.clip(block_tables, 0, k_pool.shape[0] - 1)
+    k = k_pool[safe]
+    if scale is not None:
+        from repro.serving.qserve import kvquant as KQ
+        k = KQ.dequantize_kv(k, scale[safe])
+    mapped = jnp.repeat(block_tables >= 0, bs, axis=1)
+    return k.reshape(B, mb * bs, KV, Dh), mapped
+
+
+def paged_scores(q, k, mapped, pos, window):
+    """Masked (B, KV, rep, mb*bs) f32 scores — the pre-kernel lowering."""
+    B, _, H, Dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = (q[:, 0] * Dh ** -0.5).reshape(B, KV, rep, Dh)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    posr = pos[:, None]
+    posn = jnp.arange(k.shape[1])[None]
+    valid = mapped & (posn <= posr)
+    if window:
+        valid &= (posr - posn) < window
+    return jnp.where(valid[:, None, None], s, NEG_INF)
+
+
+def _pos_eff(pos, pos_offset, B):
+    """Stripe-local row clocks: integer shift keeps every mask bit exact."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    return pos.astype(jnp.int32) - pos_offset
+
+
+def paged_decode_partial(q, k_pool, v_pool, block_tables, pos, *, window=0,
+                         k_scale=None, v_scale=None, pos_offset=0,
+                         force_kernel=False, interpret=False):
+    """Flash-decoding partials (o_unnorm (B,H,Dh) f32, m (B,H), l (B,H)).
+
+    Combine across shards as ``psum(o*exp(m-M)) / psum(l*exp(m-M))`` with
+    ``M = pmax(m)`` — the contract of ``decode_attention_partial``."""
+    B = q.shape[0]
+    posv = _pos_eff(pos, pos_offset, B)
+    on_tpu = jax.default_backend() == "tpu"
+    if force_kernel or on_tpu:
+        return _k.paged_decode_kernel(
+            q, k_pool, v_pool, block_tables, posv, k_scale, v_scale,
+            window=window, interpret=interpret or not on_tpu)
+    k, mapped = paged_view(k_pool, block_tables, k_scale)
+    v, _ = paged_view(v_pool, block_tables, v_scale)
+    s = paged_scores(q, k, mapped, posv, window)
+    m = s.max(axis=-1)
+    e = jnp.exp(s - m[..., None])
+    l = e.sum(axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", e, v.astype(jnp.float32))
+    B, _, H, Dh = q.shape
+    return (o.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))
+
+
+def paged_decode(q, k_pool, v_pool, block_tables, pos, *, window=0,
+                 k_scale=None, v_scale=None, force_kernel=False,
+                 interpret=False):
+    """Normalized paged decode: q (B,1,H,Dh) -> (B,1,H,Dh).
+
+    Output dtype follows the pre-kernel contract: fp pools return in the
+    pool dtype (softmax weights are cast to it before the PV matmul);
+    int8 pools compute in f32 and cast back to ``q.dtype``."""
+    B, _, H, Dh = q.shape
+    quant = k_scale is not None
+    posv = _pos_eff(pos, 0, B)
+    on_tpu = jax.default_backend() == "tpu"
+    if force_kernel or on_tpu:
+        o, m, l = _k.paged_decode_kernel(
+            q, k_pool, v_pool, block_tables, posv, k_scale, v_scale,
+            window=window, interpret=interpret or not on_tpu)
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        o = o.astype(q.dtype if quant else k_pool.dtype)
+        return o.reshape(B, 1, H, Dh)
+    k, mapped = paged_view(k_pool, block_tables, k_scale)
+    v, _ = paged_view(v_pool, block_tables, v_scale)
+    s = paged_scores(q, k, mapped, posv, window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v.dtype), v)
+    if quant:
+        o = o.astype(q.dtype)
+    return o.reshape(B, 1, H, Dh)

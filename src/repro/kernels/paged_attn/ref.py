@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for paged-attention decode.
+
+Materializes the dense per-row view (the thing the kernel avoids) and runs
+a two-pass softmax — the most literal possible statement of the math the
+table-walking kernel must reproduce: position ``p`` of row ``b`` lives at
+``(block_tables[b, p // bs], p % bs)`` in the pool, valid iff the logical
+block is mapped and ``p <= pos[b]`` (and inside the sliding window when
+``window > 0``).  int8 pools dequantize with the per-(token, kv-head)
+scale planes exactly as ``qserve.kvquant.dequantize_kv`` does.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_gather_ref(k_pool, block_tables, k_scale=None):
+    """Dense (B, mb*bs, KV, Dh) f32 view of one pool + (B, mb*bs) mapped."""
+    B, mb = block_tables.shape
+    bs, KV, Dh = k_pool.shape[1:]
+    safe = jnp.clip(block_tables, 0, k_pool.shape[0] - 1)
+    k = k_pool[safe].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[safe].astype(jnp.float32)[..., None]
+    mapped = jnp.repeat(block_tables >= 0, bs, axis=1)
+    return k.reshape(B, mb * bs, KV, Dh), mapped
+
+
+def paged_decode_ref(q, k_pool, v_pool, block_tables, pos, *, window=0,
+                     k_scale=None, v_scale=None, pos_offset=0):
+    """q (B,1,H,Dh) vs the paged pool -> (o_unnorm (B,H,Dh) f32, m, l).
+
+    Returns flash-decoding partials (unnormalized out, row max, sumexp);
+    normalize as ``o = o_unnorm / max(l, tiny)``.  ``pos_offset`` is the
+    absolute position of the first table slot (tp stripe offset)."""
+    B, _, H, Dh = q.shape
+    KV = k_pool.shape[2]
+    rep = H // KV
+    k, mapped = paged_gather_ref(k_pool, block_tables, k_scale)
+    v, _ = paged_gather_ref(v_pool, block_tables, v_scale)
+    qg = (q[:, 0].astype(jnp.float32) * Dh ** -0.5).reshape(B, KV, rep, Dh)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg, k)
+    posr = jnp.asarray(pos).reshape(B, 1)
+    posn = pos_offset + jnp.arange(k.shape[1])[None]
+    valid = mapped & (posn <= posr)
+    if window:
+        valid &= (posr - posn) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1)
+    e = jnp.exp(s - m[..., None])
+    l = e.sum(axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", e, v)
+    return (o.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))

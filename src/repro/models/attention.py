@@ -19,6 +19,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attn import ops as PA
 from repro.models import layers as L
 
 NEG_INF = -1e30
@@ -322,51 +323,16 @@ def cache_prefill(cache, k_all, v_all, start=0, valid_len=None):
     return KVCache(k, v, sp)
 
 
-def _paged_view(cache: PagedKVCache, need_v: bool = True):
-    """Gather each row's blocks into a dense (B, max_blocks*bs, KV, Dh)
-    view plus the per-position "mapped" mask.  Position ``p`` of the view
-    is absolute position ``p`` (linear paged addressing), so downstream
-    masks are identical to a never-wrapping dense cache.  This XLA gather
-    is the reference lowering; a Pallas paged-attention kernel that walks
-    tables block-by-block (no materialized view) is the real-TPU follow-up.
-    """
-    bt = cache.block_tables
-    B, mb = bt.shape
-    bs, KV, Dh = cache.k.shape[1:]
-    safe = jnp.clip(bt, 0, cache.k.shape[0] - 1)
-    if cache.quantized:
-        from repro.serving.qserve import kvquant as KQ
-        k = KQ.dequantize_kv(cache.k[safe], cache.k_scale[safe])
-        v = KQ.dequantize_kv(cache.v[safe], cache.v_scale[safe]) \
-            if need_v else None
-        k = k.reshape(B, mb * bs, KV, Dh)
-        v = v.reshape(B, mb * bs, KV, Dh) if need_v else None
-    else:
-        k = cache.k[safe].reshape(B, mb * bs, KV, Dh)
-        v = cache.v[safe].reshape(B, mb * bs, KV, Dh) if need_v else None
-    mapped = jnp.repeat(bt >= 0, bs, axis=1)          # (B, mb*bs)
-    return k, v, mapped
-
-
-def _paged_decode_scores(q, cache: PagedKVCache, pos, window, k, mapped):
-    B, one, H, Dh = q.shape
-    KV = cache.k.shape[2]
-    rep = H // KV
-    qg = (q[:, 0] * Dh ** -0.5).reshape(B, KV, rep, Dh)
-    s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
-                   k.astype(jnp.float32))
-    posr = _pos_rows(pos, B)[:, None]                 # (B,1) row clocks
-    posn = jnp.arange(k.shape[1])[None]               # slot j holds pos j
-    valid = mapped & (posn <= posr)
-    if window:
-        valid &= (posr - posn) < window
-    return jnp.where(valid[:, None, None], s, NEG_INF)
+def _paged_scales(cache: PagedKVCache):
+    return (cache.k_scale, cache.v_scale) if cache.quantized else (None, None)
 
 
 def _decode_scores(q, cache, pos, window):
     if isinstance(cache, PagedKVCache):
-        k, _, mapped = _paged_view(cache, need_v=False)
-        return _paged_decode_scores(q, cache, pos, window, k, mapped)
+        ks, _ = _paged_scales(cache)
+        k, mapped = PA.paged_view(cache.k, cache.block_tables, ks)
+        return PA.paged_scores(q, k, mapped, _pos_rows(pos, q.shape[0]),
+                               window)
     B, one, H, Dh = q.shape
     KV = cache.k.shape[2]
     rep = H // KV
@@ -383,20 +349,20 @@ def _decode_scores(q, cache, pos, window):
 def decode_attention(q, cache, pos, window: int = 0):
     """Dense decode: q (B,1,H,Dh) against the full cache -> (B,1,H,Dh).
     ``pos`` is a scalar clock or a (B,) per-row clock vector.  Paged caches
-    score against the gathered block view; the dense lowering is unchanged.
+    dispatch to ``kernels.paged_attn`` (table-walking Pallas kernel on TPU,
+    the exact pre-kernel XLA gather lowering elsewhere); the dense lowering
+    is unchanged.
     """
     B, _, H, Dh = q.shape
     if isinstance(cache, PagedKVCache):
-        k, v, mapped = _paged_view(cache)
-        s = _paged_decode_scores(q, cache, pos, window, k, mapped)
-    else:
-        v = cache.v
-        s = _decode_scores(q, cache, pos, window)
+        ks, vs = _paged_scales(cache)
+        return PA.paged_decode(q, cache.k, cache.v, cache.block_tables,
+                               _pos_rows(pos, B), window=window,
+                               k_scale=ks, v_scale=vs)
+    v = cache.v
+    s = _decode_scores(q, cache, pos, window)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v.dtype), v)
-    if isinstance(cache, PagedKVCache) and cache.quantized:
-        o = o.astype(q.dtype)     # dequantized view is f32; don't let it
-                                  # promote the residual stream
     return o.reshape(B, 1, H, Dh)
 
 
@@ -411,11 +377,12 @@ def decode_attention_partial(q, cache, pos, window: int = 0):
     KV = cache.k.shape[2]
     rep = H // KV
     if isinstance(cache, PagedKVCache):
-        k, v, mapped = _paged_view(cache)
-        s = _paged_decode_scores(q, cache, pos, window, k, mapped)
-    else:
-        v = cache.v
-        s = _decode_scores(q, cache, pos, window)    # (B,KV,rep,Lc)
+        ks, vs = _paged_scales(cache)
+        return PA.paged_decode_partial(
+            q, cache.k, cache.v, cache.block_tables, _pos_rows(pos, B),
+            window=window, k_scale=ks, v_scale=vs)
+    v = cache.v
+    s = _decode_scores(q, cache, pos, window)        # (B,KV,rep,Lc)
     m = s.max(axis=-1)
     e = jnp.exp(s - m[..., None])
     l = e.sum(axis=-1)
@@ -584,7 +551,6 @@ def _paged_flash_write(q, k_new, v_new, cache: PagedKVCache, pos, window, c):
         pbs = jnp.where(ok, pb, 0)        # local block 0 = shard scratch
         # non-owner rows collapse onto the shard's scratch block (never
         # read), so the scatter needs no read-back select
-        safe = jnp.clip(btl - blk0, 0, nbl - 1)
         if quant:
             from repro.serving.qserve import kvquant as KQ
             kscl, vscl = sc
@@ -594,29 +560,19 @@ def _paged_flash_write(q, k_new, v_new, cache: PagedKVCache, pos, window, c):
             vl = vl.at[pbs, off].set(vq)
             kscl = kscl.at[pbs, off].set(ks)
             vscl = vscl.at[pbs, off].set(vs)
-            kg = KQ.dequantize_kv(kl[safe], kscl[safe])
-            vg = KQ.dequantize_kv(vl[safe], vscl[safe])
         else:
+            kscl = vscl = None
             kl = kl.at[pbs, off].set(knl[:, 0].astype(kl.dtype))
             vl = vl.at[pbs, off].set(vnl[:, 0].astype(vl.dtype))
-            kg, vg = kl[safe], vl[safe]
-        # ---- partial scores over my stripe only
-        kg = kg.reshape(Bl, mbl * bs, KV, Dh)
-        vg = vg.reshape(Bl, mbl * bs, KV, Dh)
-        mapped = jnp.repeat((btl >= blk0) & (btl < blk0 + nbl), bs, axis=1)
-        posn = pos0 + jnp.arange(mbl * bs)[None]
-        posr = posl[:, None]
-        valid = mapped & (posn <= posr)
-        if window:
-            valid &= (posr - posn) < window
-        qg = (ql[:, 0] * Dh ** -0.5).reshape(Bl, KV, rep, Dh)
-        s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
-                       kg.astype(jnp.float32))
-        s = jnp.where(valid[:, None, None], s, NEG_INF)
-        m = s.max(axis=-1)
-        e = jnp.exp(s - m[..., None])
-        l = e.sum(axis=-1)
-        o = jnp.einsum("bgrk,bkgd->bgrd", e, vg.astype(jnp.float32))
+        # ---- partials over my stripe only: localize the table (foreign
+        # blocks -> -1) and shift the row clocks by my stripe's base
+        # position; integer masks make the shifted form exact, and fully
+        # foreign garbage is nulled bit-exactly by the psum combine weights
+        btl_local = jnp.where((btl >= blk0) & (btl < blk0 + nbl),
+                              btl - blk0, -1)
+        o, m, l = PA.paged_decode_partial(
+            ql, kl, vl, btl_local, posl, window=window,
+            k_scale=kscl, v_scale=vscl, pos_offset=pos0)
         M = jax.lax.pmax(m, c.tp)
         w = jnp.exp(m - M)
         o = jax.lax.psum(o * w[..., None], c.tp)

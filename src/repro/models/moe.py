@@ -10,6 +10,15 @@ all-to-all-ing tokens.  A shard_map EP variant is the grok-1 hillclimb lever
 Dispatch is one-hot-cumsum based (no sort): slot_j = #earlier assignments to
 the same expert in the group; assignments beyond capacity are dropped (their
 tokens fall through via the residual connection, Switch-style).
+
+Quantized expert stacks (``serving.quantized`` packs them as one stacked
+``QuantizedTensor`` per projection) never dense-dequantize all ``E`` experts
+off-mesh: routing first *compacts* the expert axis to the <= B*S*k experts
+actually routed this step, then ``kernels.moe_dequant`` contracts the
+dispatch buffers against the packed planes directly (Pallas fused kernel on
+TPU, per-expert scan elsewhere).  On a tensor-parallel mesh the GSPMD einsum
+lowering is kept, so the dense reconstruction only survives where the
+collective schedule depends on it.
 """
 from __future__ import annotations
 
@@ -50,15 +59,23 @@ def _act(h, g, kind):
 
 def moe_apply(p, x, cfg):
     """x (B, S, d) -> (B, S, d).  Routing groups = batch rows."""
-    from repro.core.qformat import dequantize_any
-    p = {k: ({"kernel": dequantize_any(v["kernel"])}
-             if isinstance(v, dict) and "kernel" in v else v)
-         for k, v in p.items()}
+    from repro.core.qformat import QuantizedTensor, dequantize_any
+    from repro.dist import ctx as dctx
     m = cfg.moe
     B, S, d = x.shape
     E, k = m.n_experts, m.top_k
     C = capacity(S, k, E, m.capacity_factor)
     C = min(C, S * k)
+
+    c = dctx.get()
+    quant = isinstance(p["wi"]["kernel"], QuantizedTensor)
+    # packed expert stacks stay packed off-mesh (compaction + fused op
+    # below); everywhere else reconstruct upfront as before
+    fused = quant and m.moe_impl != "dense" and (c is None or c.tp_size <= 1)
+    if not fused:
+        p = {n: ({"kernel": dequantize_any(v["kernel"])}
+                 if isinstance(v, dict) and "kernel" in v else v)
+             for n, v in p.items()}
 
     logits = L.linear(p["router"], x)                       # (B,S,E)
     topv, topi = jax.lax.top_k(logits, k)                   # (B,S,k)
@@ -79,7 +96,6 @@ def moe_apply(p, x, cfg):
     # explicit batch-dim constraints throughout: GSPMD does not partition
     # batched scatter/gather reliably and otherwise replicates the (B,E,C,*)
     # buffers over the data axes (measured on grok-1: 5 GiB x182 copies)
-    from repro.dist import ctx as dctx
     flat_e = topi.reshape(B, S * k)                         # expert of each slot
     onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # (B,S*k,E)
     slot = jnp.cumsum(onehot, axis=1) - 1                   # position in expert
@@ -89,34 +105,62 @@ def moe_apply(p, x, cfg):
     tok = jnp.repeat(jnp.arange(S)[None, :, None], k, axis=2).reshape(1, S * k)
     tok = jnp.broadcast_to(tok, (B, S * k))
 
-    # scatter tokens into (B, E, C, d); out-of-capacity assignments drop via
+    # off-mesh packed path: compact the expert axis to the routed set — at
+    # most B*S*k distinct experts receive tokens, so the top-Eh by count
+    # provably covers every routed expert; unrouted experts' packed bytes
+    # are never touched
+    Eh, flat_ec = E, flat_e
+    wsel = None
+    if fused and E > B * S * k:
+        Eh = B * S * k
+        _, eidx = jax.lax.top_k(onehot.sum(axis=(0, 1)), Eh)
+        inv = jnp.zeros((E,), jnp.int32).at[eidx].set(
+            jnp.arange(Eh, dtype=jnp.int32))
+        flat_ec = inv[flat_e]
+        wsel = lambda qt: jax.tree.map(lambda a: a[eidx], qt)  # noqa: E731
+
+    # scatter tokens into (B, Eh, C, d); out-of-capacity assignments drop via
     # out-of-bounds scatter mode
-    dst = jnp.where(keep, flat_e * C + slot, E * C)         # E*C -> dropped
-    buf = jnp.zeros((B, E * C, d), x.dtype)
+    dst = jnp.where(keep, flat_ec * C + slot, Eh * C)       # Eh*C -> dropped
+    buf = jnp.zeros((B, Eh * C, d), x.dtype)
     buf = dctx.wsc(buf, "b", None, None)
     xi = jnp.take_along_axis(
         x, tok[..., None].astype(jnp.int32), axis=1)        # (B,S*k,d)
     buf = jax.vmap(lambda b, i, u: b.at[i].set(u, mode="drop"))(buf, dst, xi)
-    # expert dim shards over tp when divisible (granite 32e); else the
-    # buffers stay tp-replicated and only the ffn dim is tp-sharded (grok 8e)
-    etp = dctx.tp_if(E)
-    xe = buf.reshape(B, E, C, d)
-    xe = dctx.wsc(xe, "b", etp, None, None)
+    xe = buf.reshape(B, Eh, C, d)
 
-    ftp = "tp" if etp is None else None
-    h = jnp.einsum("becd,edf->becf", xe, p["wi"]["kernel"])
-    h = dctx.wsc(h, "b", etp, None, ftp)
-    if "wg" in p:
-        g = jnp.einsum("becd,edf->becf", xe, p["wg"]["kernel"])
-        h = _act(h, dctx.wsc(g, "b", etp, None, ftp), cfg.mlp)
+    if fused:
+        from repro.kernels.moe_dequant import ops as mops
+        sel = wsel if wsel is not None else (lambda qt: qt)
+        xef = xe.transpose(1, 0, 2, 3).reshape(Eh, B * C, d)
+        h = mops.moe_dequant_matmul(xef, sel(p["wi"]["kernel"]))
+        if "wg" in p:
+            g = mops.moe_dequant_matmul(xef, sel(p["wg"]["kernel"]))
+            h = _act(h, g, cfg.mlp)
+        else:
+            h = _act(h, None, cfg.mlp)
+        ye = mops.moe_dequant_matmul(h, sel(p["wo"]["kernel"]))
+        ye = ye.reshape(Eh, B, C, d).transpose(1, 0, 2, 3)  # (B,Eh,C,d)
     else:
-        h = _act(h, None, cfg.mlp)
-    ye = jnp.einsum("becf,efd->becd", h, p["wo"]["kernel"])  # (B,E,C,d)
-    ye = dctx.wsc(ye, "b", etp, None, None)
+        # expert dim shards over tp when divisible (granite 32e); else the
+        # buffers stay tp-replicated and only the ffn dim is tp-sharded
+        # (grok 8e)
+        etp = dctx.tp_if(E)
+        xe = dctx.wsc(xe, "b", etp, None, None)
+        ftp = "tp" if etp is None else None
+        h = jnp.einsum("becd,edf->becf", xe, p["wi"]["kernel"])
+        h = dctx.wsc(h, "b", etp, None, ftp)
+        if "wg" in p:
+            g = jnp.einsum("becd,edf->becf", xe, p["wg"]["kernel"])
+            h = _act(h, dctx.wsc(g, "b", etp, None, ftp), cfg.mlp)
+        else:
+            h = _act(h, None, cfg.mlp)
+        ye = jnp.einsum("becf,efd->becd", h, p["wo"]["kernel"])  # (B,E,C,d)
+        ye = dctx.wsc(ye, "b", etp, None, None)
 
     # gather back, weighted by gates
-    ye_flat = ye.reshape(B, E * C, d)
-    src = jnp.where(keep, flat_e * C + slot, 0)
+    ye_flat = ye.reshape(B, Eh * C, d)
+    src = jnp.where(keep, flat_ec * C + slot, 0)
     yo = jnp.take_along_axis(ye_flat, src[..., None].astype(jnp.int32), axis=1)
     yo = yo * (keep[..., None] * gates.reshape(B, S * k)[..., None]).astype(x.dtype)
     yo = dctx.wsc(yo, "b", None, None)

@@ -136,6 +136,15 @@ def _paged_tables(kvc, block_tables):
     return kvc.block_tables if block_tables is None else block_tables
 
 
+def _paged_store_tables(kvc):
+    """The table to store in the cache handed back to callers: always the
+    cache-resident one.  The per-tick override is a compute-only view — the
+    serving engine narrows it to the live-block bucket (fewer gathered
+    blocks per decode step), so persisting it would shrink the cache leaf
+    shapes across jit ticks and break donation."""
+    return kvc.block_tables if isinstance(kvc, A.PagedKVCache) else None
+
+
 def _layer_apply(p, x, cfg, *, positions, window, kv=None, pos=None,
                  mode="train"):
     """One transformer layer.  mode: train/prefill use full-seq attention;
@@ -379,7 +388,8 @@ class Model:
                 group_body, x, (params["groups"], params["shared_in"]),
                 (caches["mamba_g"], _paged_kv_state(caches["kv"])), ng)
             new_states["mamba_g"] = mg
-            new_states["kv"] = _paged_kv_rebuild(kvs, bt)
+            new_states["kv"] = _paged_kv_rebuild(
+                kvs, _paged_store_tables(caches["kv"]))
             if "tail" in params:
                 x, mt = _scan_with_state(mamba_decode, x, params["tail"],
                                          caches["mamba_t"],
@@ -584,7 +594,8 @@ class Model:
             x, kvs = _scan_with_state(body, x, params["layers"],
                                       _paged_kv_state(cache["kv"]),
                                       cfg.n_layers)
-            new_cache = {"kv": _paged_kv_rebuild(kvs, bt)}
+            new_cache = {"kv": _paged_kv_rebuild(
+                kvs, _paged_store_tables(cache["kv"]))}
         return self._logits(params, x), new_cache
 
     def _grouped_decode(self, params, x, positions, cache, pos,
@@ -612,7 +623,8 @@ class Model:
         x, (lkvs, gkvs) = _scan_with_state(
             group_body, x, params["groups"],
             (cache["local"], _paged_kv_state(cache["global"])), ng)
-        new_cache = {"local": lkvs, "global": _paged_kv_rebuild(gkvs, bt)}
+        new_cache = {"local": lkvs, "global": _paged_kv_rebuild(
+            gkvs, _paged_store_tables(cache["global"]))}
         if "tail" in params:
             x, tkv = _scan_with_state(local_body, x, params["tail"],
                                       cache["tail"], cfg.n_layers % ge)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Dict
 
+import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -75,3 +76,67 @@ def analyze_lowered(lowered, compiled, cfg: ModelConfig, shape: ShapeConfig,
         "roofline_fraction": (mf / (chips * PEAK_FLOPS)) / t_bound
         if t_bound else 0.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel byte models for the Pallas serving kernels (kernels/paged_attn,
+# kernels/moe_dequant).  "fused" is the table-walking / packed-plane kernel:
+# it streams only the bytes that physically exist in HBM.  "unfused" is the
+# XLA fallback it replaces: gather (or dequant) materializes a dense
+# intermediate that is written out and read back.  Ratios are analytic and
+# backend-independent; ``achieved_bytes`` measures what the *current*
+# lowering actually compiles to (hlo_parse on the optimized module), so
+# benchmarks can report achieved-vs-predicted side by side.
+# ---------------------------------------------------------------------------
+
+def paged_attn_bytes(B, live_blocks, block_size, n_kv, d_head, n_heads,
+                     kv_bits=16) -> Dict[str, float]:
+    """Predicted HBM bytes per decode step: fused table-walk vs dense gather.
+
+    ``live_blocks`` is the bounded table width the engine passes (logical
+    blocks actually mapped), not ``max_blocks``.  At ``kv_bits=8`` the fused
+    kernel reads int8 code planes + bf16 per-(block, slot, head) scales and
+    dequantizes in VREGs; the fallback materializes the dequantized bf16
+    pool view before attending.
+    """
+    el = 1 if kv_bits == 8 else 2
+    rows = B * live_blocks * block_size * n_kv            # gathered KV slots
+    pool = 2 * rows * d_head * el                         # K + V code reads
+    scales = 2 * rows * 2 if kv_bits == 8 else 0          # k_scale + v_scale
+    q = B * n_heads * d_head * 2
+    out = B * n_heads * d_head * 2
+    tables = B * live_blocks * 4
+    fused = pool + scales + q + out + tables
+    # fallback: the gathered (and, for int8, dequantized) dense (B, L, KV, Dh)
+    # K and V views are written to HBM and read back by the attention einsums
+    dense = 2 * rows * d_head * 2
+    unfused = pool + scales + tables + 2 * dense + q + out
+    return {"fused": fused, "unfused": unfused, "ratio": fused / unfused}
+
+
+def moe_dequant_bytes(n_routed, n_experts, T, K, N, bits, group_size,
+                      resid=False) -> Dict[str, float]:
+    """Predicted HBM bytes per MoE layer step: fused packed-plane contraction
+    over the ``n_routed`` compacted experts vs the dense path that
+    reconstructs all ``n_experts`` bf16 weight stacks before the einsum."""
+    def packed(e):
+        b = e * K * N * bits / 8.0                        # code planes
+        b += 2 * e * (K // group_size) * N                # uint8 stats codes
+        if resid:
+            b += e * K * N / 8.0 + e * K * N * 2.0        # sign + |w_hat|
+        return b
+
+    x = n_routed * T * K * 2
+    out = n_routed * T * N * 4
+    fused = x + packed(n_routed) + out
+    dense = n_experts * K * N * 2
+    unfused = x + packed(n_experts) + 2 * dense + out
+    return {"fused": fused, "unfused": unfused, "ratio": fused / unfused}
+
+
+def achieved_bytes(fn, *args) -> float:
+    """Per-device HBM bytes of ``fn``'s compiled lowering on this backend
+    (hlo_parse over the optimized module — post-fusion operand+output
+    traffic, the same count ``analyze_lowered`` uses)."""
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    return hlo_parse.analyze(hlo)["hbm_bytes"]

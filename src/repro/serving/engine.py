@@ -865,7 +865,24 @@ class PagedEngine(Engine):
                 self._ensure_block(i, int(self._pos[i]))
 
     def _decode_extra_args(self):
-        return (jnp.asarray(self._tables),)
+        # Bound the per-tick table view to the live logical depth: the decode
+        # gather touches max_blocks*block_size rows otherwise, even when every
+        # sequence is ten tokens deep.  Width is bucketed to powers of two
+        # (floor 4) so jit retraces O(log max_blocks) times, not per step; the
+        # model stores the cache-resident full-width table back into the
+        # returned cache (see transformer._paged_store_tables), so narrowing
+        # never changes donated cache leaf shapes.  Flash-striped pools
+        # (stripes > 1) keep the full table: the stripe invariant addresses
+        # the whole logical range on every shard.
+        tables = self._tables
+        if self._has_paged and self.alloc.stripes == 1:
+            live = np.flatnonzero((tables >= 0).any(axis=0))
+            deep = int(live[-1]) + 1 if live.size else 1
+            w = 4
+            while w < deep:
+                w *= 2
+            tables = tables[:, :min(w, self.max_blocks)]
+        return (jnp.asarray(tables),)
 
 
 class StaticEngine(_EngineBase):

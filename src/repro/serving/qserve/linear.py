@@ -19,10 +19,14 @@ shard_map so each shard touches only its local plane slab:
     tp (group-aligned) — each shard computes a partial product and one psum
     combines, mirroring the fp row-parallel "one all-reduce" contract.
 
+BiLLM residual-carrier planes (1-bit sign + |w_hat|) ride the same sharded
+fused path: they split along the same axis as the code planes (N for "col",
+K for "row" — the sign plane packs along K, so its byte rows follow the K
+split) and the kernel adds them during tile dequant, so w2 checkpoints no
+longer drop to the whole-tensor unfused op.
+
 The SpQR COO outlier correction uses global (row, col) indices and is
-applied outside the shard_map on the assembled output.  BiLLM residual
-planes fall back to the whole-tensor path (their serve traffic is the w1
-research config, not the production rtn/OAC fast path).
+applied outside the shard_map on the assembled output.
 """
 from __future__ import annotations
 
@@ -40,14 +44,31 @@ def _row_aligned(qt: QuantizedTensor, T: int) -> bool:
     K = qt.shape[0]
     if K % T or (K // T) % qt.group_size:
         return False
-    return all(p.shape[0] % T == 0 for p in qt.planes)
+    if not all(p.shape[0] % T == 0 for p in qt.planes):
+        return False
+    if qt.resid_planes is not None and \
+            any(p.shape[0] % T for p in qt.resid_planes):
+        return False
+    return True
 
 
-def _local_matmul(bits, group_size):
-    def local(xl, planes_l, s_l, z_l):
-        return dq_ops.dequant_matmul_parts(
-            xl, planes_l, s_l, z_l, bits=bits, group_size=group_size)
+def _local_matmul(bits, group_size, resid):
+    if resid:
+        def local(xl, planes_l, s_l, z_l, rp_l, rs_l):
+            return dq_ops.dequant_matmul_parts(
+                xl, planes_l, s_l, z_l, bits=bits, group_size=group_size,
+                resid_planes=rp_l, resid_scales=rs_l)
+    else:
+        def local(xl, planes_l, s_l, z_l):
+            return dq_ops.dequant_matmul_parts(
+                xl, planes_l, s_l, z_l, bits=bits, group_size=group_size)
     return local
+
+
+def _resid_args(qt):
+    if qt.resid_planes is None:
+        return ()
+    return (qt.resid_planes, qt.resid_scales)
 
 
 def _col_sharded(x2, qt, scales, zeros, c):
@@ -56,27 +77,36 @@ def _col_sharded(x2, qt, scales, zeros, c):
     tp = c.tp
     rep = P(None, None)
     col = P(None, tp)
+    resid = qt.resid_planes is not None
+    in_specs = (rep, tuple(col for _ in qt.planes), col, col)
+    if resid:
+        in_specs += (tuple(col for _ in qt.resid_planes), col)
     return jax.shard_map(
-        _local_matmul(qt.bits, qt.group_size), mesh=c.mesh,
-        in_specs=(rep, tuple(col for _ in qt.planes), col, col),
-        out_specs=col)(x2, qt.planes, scales, zeros)
+        _local_matmul(qt.bits, qt.group_size, resid), mesh=c.mesh,
+        in_specs=in_specs,
+        out_specs=col)(x2, qt.planes, scales, zeros, *_resid_args(qt))
 
 
 def _row_sharded(x2, qt, scales, zeros, c):
     """K splits over tp; partial products psum (fp row-parallel analogue)."""
     from jax.sharding import PartitionSpec as P
     tp = c.tp
-    core = _local_matmul(qt.bits, qt.group_size)
+    resid = qt.resid_planes is not None
+    core = _local_matmul(qt.bits, qt.group_size, resid)
 
-    def local(xl, planes_l, s_l, z_l):
-        return jax.lax.psum(core(xl, planes_l, s_l, z_l), tp)
+    def local(xl, planes_l, s_l, z_l, *rl):
+        return jax.lax.psum(core(xl, planes_l, s_l, z_l, *rl), tp)
 
     rowx = P(None, tp)
     row = P(tp, None)
+    in_specs = (rowx, tuple(row for _ in qt.planes), row, row)
+    if resid:
+        in_specs += (tuple(row for _ in qt.resid_planes), row)
     return jax.shard_map(
         local, mesh=c.mesh,
-        in_specs=(rowx, tuple(row for _ in qt.planes), row, row),
-        out_specs=P(None, None))(x2, qt.planes, scales, zeros)
+        in_specs=in_specs,
+        out_specs=P(None, None))(x2, qt.planes, scales, zeros,
+                                 *_resid_args(qt))
 
 
 def quantized_linear(x, qt: QuantizedTensor, *, kind: str = "col"):
@@ -85,11 +115,11 @@ def quantized_linear(x, qt: QuantizedTensor, *, kind: str = "col"):
     ``kind`` names the fp-parallel layout of the kernel this tensor packs:
     "col" shards the output dim, "row" the contraction dim (the
     ``_ROW_SHARDED`` projections in ``dist/sharding.py``).  Non-divisible
-    shapes and BiLLM-residual tensors fall back to the whole-tensor op —
-    GSPMD then reshards as needed, so the fallback is a layout decision,
-    never a correctness one."""
+    shapes fall back to the whole-tensor op — GSPMD then reshards as
+    needed, so the fallback is a layout decision, never a correctness
+    one."""
     c = dctx.get()
-    if c is None or c.tp_size <= 1 or qt.resid_planes is not None:
+    if c is None or c.tp_size <= 1:
         return dq_ops.dequant_matmul(x, qt)
     lead = x.shape[:-1]
     K, N = qt.shape
@@ -106,6 +136,7 @@ def quantized_linear(x, qt: QuantizedTensor, *, kind: str = "col"):
     else:
         y = dq_ops.dequant_matmul_parts(
             x2, qt.planes, scales, zeros, bits=qt.bits,
-            group_size=qt.group_size)
+            group_size=qt.group_size, resid_planes=qt.resid_planes,
+            resid_scales=qt.resid_scales)
     y = dq_ops.outlier_correction(x2, qt, y)
     return y.reshape(*lead, N).astype(x.dtype)

@@ -1,0 +1,172 @@
+"""Kernel-vs-ref parity for the Pallas serving kernels (ISSUE 7).
+
+Runs the TPU kernels in interpret mode on CPU against the pure-jnp oracles
+and the XLA fallback lowerings.  Attention geometries (GQA ratio, head dim,
+sliding window) are drawn from four assigned model families' smoke configs;
+the MoE contraction sweeps bit-widths and family (d_model, d_ff) shapes.
+Also covered: int8-KV decode tolerance vs the fp pool, w2 residual-carrier
+bit-identity through ``dequant_matmul``, and the bounded-table contract
+(narrowed live-width tables are output-identical to full-width ones).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import QuantConfig
+from repro.core import qformat
+from repro.kernels.dequant_matmul import ops as dq_ops
+from repro.kernels.moe_dequant import ops as moe_ops
+from repro.kernels.moe_dequant.ref import moe_dequant_matmul_ref
+from repro.kernels.paged_attn import ops as pa_ops
+from repro.kernels.paged_attn import ref as pa_ref
+from repro.serving.qserve import kvquant as KQ
+
+ARCHS = ["qwen2-1.5b", "gemma3-27b", "granite-moe-1b-a400m", "grok-1-314b"]
+BS, MB = 8, 6        # block size, table width
+
+
+def _geom(arch):
+    cfg = get_smoke(arch)
+    return cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, \
+        cfg.local_window
+
+
+def _paged_setup(arch, seed=0, dtype=jnp.float32, deepest=BS * MB - 1):
+    """Pools + tables with per-row depths (and unmapped tail holes)."""
+    H, KV, Dh, win = _geom(arch)
+    rng = np.random.default_rng(seed)
+    B = 3
+    pos = np.array([5, deepest, 2 * BS + 3], np.int32)
+    nb = 1 + B * MB
+    kp = jnp.asarray(rng.normal(size=(nb, BS, KV, Dh)), dtype)
+    vp = jnp.asarray(rng.normal(size=(nb, BS, KV, Dh)), dtype)
+    tbl = np.full((B, MB), -1, np.int32)
+    nxt = 1
+    for b in range(B):
+        for j in range(pos[b] // BS + 1):
+            tbl[b, j] = nxt
+            nxt += 1
+    q = jnp.asarray(rng.normal(size=(B, 1, H, Dh)), dtype)
+    return q, kp, vp, jnp.asarray(tbl), jnp.asarray(pos), win
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_attn_kernel_matches_ref(arch):
+    """Interpret-mode kernel partials == two-pass oracle == XLA fallback,
+    at the family's GQA/head geometry (and sliding window where set)."""
+    q, kp, vp, bt, pos, win = _paged_setup(arch)
+    for window in {0, win}:
+        o_r, m_r, l_r = pa_ref.paged_decode_ref(q, kp, vp, bt, pos,
+                                                window=window)
+        o_k, m_k, l_k = pa_ops.paged_decode_partial(
+            q, kp, vp, bt, pos, window=window,
+            force_kernel=True, interpret=True)
+        np.testing.assert_allclose(o_k, o_r, atol=1e-4)
+        np.testing.assert_allclose(m_k, m_r, atol=1e-5)
+        np.testing.assert_allclose(l_k, l_r, atol=1e-4)
+        y_k = pa_ops.paged_decode(q, kp, vp, bt, pos, window=window,
+                                  force_kernel=True, interpret=True)
+        y_f = pa_ops.paged_decode(q, kp, vp, bt, pos, window=window)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_f, np.float32), atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_attn_int8_kv(arch):
+    """Fused int8 dequant in the score loop: kernel matches the fallback
+    (which dequantizes the gathered view) tightly, and both stay within
+    the documented int8 tolerance of the fp pool."""
+    q, kp, vp, bt, pos, _ = _paged_setup(arch, seed=1)
+    kq, ks = KQ.quantize_kv(kp)
+    vq, vs = KQ.quantize_kv(vp)
+    y_k = pa_ops.paged_decode(q, kq, vq, bt, pos, k_scale=ks, v_scale=vs,
+                              force_kernel=True, interpret=True)
+    y_f = pa_ops.paged_decode(q, kq, vq, bt, pos, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_f, np.float32), atol=1e-5)
+    y_fp = pa_ops.paged_decode(q, kp, vp, bt, pos)
+    err = np.abs(np.asarray(y_k, np.float32) - np.asarray(y_fp, np.float32))
+    assert err.max() <= 0.05 * np.abs(np.asarray(y_fp)).max(), err.max()
+
+
+def test_paged_attn_bounded_tables():
+    """Slicing the table to the live width (the engine's bounded gather)
+    is value-preserving: unmapped tail slots carry exactly zero softmax
+    weight, so dropping them only shortens the contraction axis — outputs
+    agree to reduction-order (ulp) level and greedy decode is unchanged
+    (the engine bit-identity tests cover the token-level contract)."""
+    q, kp, vp, bt, pos, _ = _paged_setup(ARCHS[0], seed=2,
+                                         deepest=3 * BS + 1)
+    live = int(np.asarray(pos).max()) // BS + 1
+    assert live < bt.shape[1]                       # tail actually dropped
+    y_full = pa_ops.paged_decode(q, kp, vp, bt, pos)
+    y_live = pa_ops.paged_decode(q, kp, vp, bt[:, :live], pos)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_live),
+                               atol=1e-6)
+    o_k = pa_ops.paged_decode(q, kp, vp, bt[:, :live], pos,
+                              force_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(y_full),
+                               atol=1e-5)
+
+
+def _stacked_qt(E, K, N, bits, gs, seed=0):
+    from repro.serving.quantized import _quantize_leaf
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(rng.normal(size=(E, K, N)).astype(np.float32))
+    return _quantize_leaf(W, QuantConfig(wbits=bits, group_size=gs,
+                                         method="rtn"))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_moe_dequant_kernel_matches_ref(bits):
+    """Interpret-mode fused kernel == per-expert scan fallback == dense
+    reconstruction oracle, across bit-widths (3-bit = two planes)."""
+    E, T, K, N, gs = 4, 8, 64, 48, 16
+    qt = _stacked_qt(E, K, N, bits, gs, seed=bits)
+    xe = jnp.asarray(np.random.default_rng(9).normal(size=(E, T, K)),
+                     jnp.bfloat16)
+    y_k = moe_ops.moe_dequant_matmul(xe, qt, force_kernel=True,
+                                     interpret=True)
+    y_s = moe_ops.moe_dequant_matmul(xe, qt)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_s, np.float32), atol=1e-2)
+    y_r = moe_dequant_matmul_ref(xe, qt)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), atol=1e-1)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_moe_dequant_family_geometries(arch):
+    """Kernel-vs-scan parity at each family's smoke (d_model, d_ff) shape
+    (the expert contraction is family-agnostic; shapes are not)."""
+    cfg = get_smoke(arch)
+    K = cfg.d_model
+    N = cfg.moe.d_ff if cfg.moe is not None else cfg.d_ff
+    gs = 16
+    if K % gs or N % 8:
+        pytest.skip(f"unaligned smoke geometry {K}x{N}")
+    qt = _stacked_qt(4, K, N, 4, gs, seed=5)
+    xe = jnp.asarray(np.random.default_rng(6).normal(size=(4, 8, K)),
+                     jnp.bfloat16)
+    y_k = moe_ops.moe_dequant_matmul(xe, qt, force_kernel=True,
+                                     interpret=True)
+    y_s = moe_ops.moe_dequant_matmul(xe, qt)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_s, np.float32), atol=1e-2)
+
+
+def test_resid_carrier_kernel_bit_identity():
+    """BiLLM w2 residual-carrier planes through the fused kernel must be
+    bit-identical to the blockwise fallback: same unpack, same residual
+    add, same dot (single K/N block at this geometry)."""
+    rng = np.random.default_rng(11)
+    w_hat = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+    qt = qformat.make_residual_carrier(w_hat, group_size=16)
+    assert qt.resid_planes is not None
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.bfloat16)
+    y_k = dq_ops.dequant_matmul(x, qt, force_kernel=True, interpret=True)
+    y_f = dq_ops.dequant_matmul(x, qt)
+    np.testing.assert_array_equal(np.asarray(y_k, np.float32),
+                                  np.asarray(y_f, np.float32))
