@@ -21,14 +21,29 @@ tp** (over a device-free AbstractMesh, via ``qserve.report``): sharded
 planes report ~total/tp, replicated planes would report ~total — the
 tripwire that proves plane sharding is real.
 
+The scheduling section (``--sched-smoke`` for the CI cell) adds two
+latency-shaped workloads:
+
+  * adversarial: one very long prompt dropped mid-stream of 64 short chat
+    sessions (alternating interactive/batch SLO classes).  Reports
+    per-token inter-tick latency p50/p99 per SLO class from
+    ``Request.token_times``; blocking admission stalls every co-resident
+    chat for the full prefill, chunked admission bounds the stall at one
+    chunk (CI tripwire: chunked interactive p99 <= 0.5x blocking p99).
+  * shared-prefix speculative: target-only decode vs self-speculative
+    decode from a draft of the same weights.  CI tripwires: greedy output
+    bit-identical for both the perfect draft and the rtn-w4 draft
+    (rollback-heavy), and perfect-draft tokens/sec >= 1.2x target-only.
+
 Each cell gets one untimed warmup pass so jit compilation does not pollute
 the walls.
 
-    python benchmarks/bench_serving.py [--smoke | --quant-smoke]
+    python benchmarks/bench_serving.py [--smoke | --quant-smoke |
+                                        --sched-smoke]
                                        [--out BENCH_serving.json]
 
-Emits ``BENCH_serving.json``; CI runs the --smoke and --quant-smoke
-invocations on the tiny config as regression tripwires.
+Emits ``BENCH_serving.json``; CI runs the --smoke, --quant-smoke and
+--sched-smoke invocations on the tiny config as regression tripwires.
 """
 import argparse
 import json
@@ -64,6 +79,15 @@ MIN_PREFIX_SKIP_FRACTION = 0.30
 # 0.508 at head_dim=128 -- so 0.6 trips on any layout regression
 # (scale-plane bloat, codes stored wider than int8)
 MAX_INT8_KV_RATIO = 0.60
+# chunked prefill must cut the interactive-class inter-token p99 on the
+# adversarial workload to at most this fraction of blocking admission's
+# (the long prompt's one-shot prefill IS the blocking p99; a chunk costs
+# well under half of it)
+MAX_CHUNKED_P99_RATIO = 0.50
+# perfect-draft speculative decode must beat target-only tokens/sec by at
+# least this factor on the shared-prefix workload (each tick emits up to
+# spec_k+1 tokens per row for one fused dispatch + one host sync)
+MIN_SPEC_SPEEDUP = 1.20
 
 
 def workload(cfg, n_requests, seed=0):
@@ -87,6 +111,159 @@ def workload_shared_prefix(cfg, n_requests, prefix_len=48, seed=0):
                             size=int(rng.choice([3, 5, 8]))).astype(np.int32)
         out.append((np.concatenate([sysp, tail]), int(rng.integers(4, 17))))
     return out
+
+
+def workload_adversarial(cfg, n_chat=64, long_len=2048, seed=0):
+    """The ROADMAP adversarial shape: one very long prompt dropped
+    mid-stream of ``n_chat`` short chat sessions.  Chats alternate
+    interactive/batch SLO classes; the long prompt is interactive so
+    SLO-ordered FIFO admission lands it mid-stream, where its prefill
+    stalls every co-resident chat decode unless chunked.  Returns
+    ``(prompt, max_tokens, slo)`` triples."""
+    rng = np.random.default_rng(seed)
+
+    def chat(i):
+        p = rng.integers(1, cfg.vocab, size=int(rng.choice([6, 10, 14])))
+        return (p.astype(np.int32), int(rng.integers(4, 10)),
+                "interactive" if i % 2 == 0 else "batch")
+
+    reqs = [chat(i) for i in range(n_chat)]
+    longp = (rng.integers(1, cfg.vocab, size=long_len).astype(np.int32),
+             8, "interactive")
+    reqs.insert(n_chat // 2, longp)
+    return reqs
+
+
+def token_gap_stats(handles):
+    """Per-SLO-class inter-token latency from ``Request.token_times``
+    (the wall offsets the engine stamps on every emitted token)."""
+    by = {}
+    for r in handles:
+        if len(r.token_times) >= 2:
+            by.setdefault(r.slo, []).extend(np.diff(r.token_times))
+    return {slo: {"n_gaps": len(g),
+                  "p50_ms": float(np.quantile(g, 0.50)) * 1e3,
+                  "p99_ms": float(np.quantile(g, 0.99)) * 1e3,
+                  "max_ms": float(np.max(g)) * 1e3}
+            for slo, g in sorted(by.items())}
+
+
+def run_sched(eng, reqs):
+    """Serve ``(prompt, max_tokens, slo)`` triples; return (stats, outs)."""
+    ticks0 = getattr(eng, "ticks", 0)
+    sd0, sa0 = eng.spec_drafted, eng.spec_accepted
+    cs0, pe0 = eng.chunk_steps, eng.preemptions
+    handles = [eng.submit(p, max_tokens=b, slo=s) for p, b, s in reqs]
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in handles)
+    return {
+        "wall_s": wall,
+        "generated_tokens": toks,
+        "tokens_per_s": toks / wall,
+        "ticks": getattr(eng, "ticks", 0) - ticks0,
+        "chunk_steps": eng.chunk_steps - cs0,
+        "preemptions": eng.preemptions - pe0,
+        "spec_drafted": eng.spec_drafted - sd0,
+        "spec_accepted": eng.spec_accepted - sa0,
+        "token_gap_ms": token_gap_stats(handles),
+    }, [list(r.out) for r in handles]
+
+
+def sched_cell(name, make_engine, reqs, warm_reqs=None, repeats=1):
+    """One warmup pass (``warm_reqs`` when the timed pass must not hit the
+    prefix cache the warmup populated — the adversarial cells) + ``repeats``
+    timed passes on the same engine instance (shared jit caches), keeping
+    the fastest (OS noise only ever inflates a wall)."""
+    eng = make_engine()
+    run_sched(eng, warm_reqs if warm_reqs is not None else reqs)
+    res, outs = run_sched(eng, reqs)
+    for _ in range(repeats - 1):
+        r2, outs = run_sched(eng, reqs)
+        if r2["tokens_per_s"] > res["tokens_per_s"]:
+            res = r2
+    gaps = "  ".join(
+        f"{slo[:5]} p50 {g['p50_ms']:6.2f} p99 {g['p99_ms']:7.2f} ms"
+        for slo, g in res["token_gap_ms"].items())
+    acc = (f"  acc {res['spec_accepted']}/{res['spec_drafted']}"
+           if res["spec_drafted"] else "")
+    print(f"[bench_serving] {name:28s} {res['tokens_per_s']:8.1f} tok/s  "
+          f"{gaps}{acc}")
+    return res, outs
+
+
+def bench_sched(cfg, params, args, results, regressed):
+    """Latency-shaped scheduling cells: blocking vs chunked admission on
+    the adversarial workload (per-SLO inter-token histograms), and
+    target-only vs self-speculative decode on the shared-prefix one."""
+    smoke = args.sched_smoke
+    n_chat = 16 if smoke else 64
+    long_len = 1024 if smoke else 2048
+    chunk = 128
+    mb = 4 if smoke else 8
+    cap = long_len + 64
+    cells = results["cells"]
+
+    adv = workload_adversarial(cfg, n_chat=n_chat, long_len=long_len)
+    adv_warm = workload_adversarial(cfg, n_chat=n_chat, long_len=long_len,
+                                    seed=1)
+
+    def paged(capacity, **kw):
+        return PagedEngine(cfg, params, max_batch=mb, capacity=capacity,
+                           block_size=args.block_size, **kw)
+
+    blk, _ = sched_cell("adv/blocking-prefill",
+                        lambda: paged(cap), adv, warm_reqs=adv_warm)
+    chk, _ = sched_cell(f"adv/chunked-{chunk}",
+                        lambda: paged(cap, prefill_chunk=chunk),
+                        adv, warm_reqs=adv_warm)
+    cells["adversarial_blocking"] = blk
+    cells["adversarial_chunked"] = chk
+    bp = blk["token_gap_ms"]["interactive"]["p99_ms"]
+    cp = chk["token_gap_ms"]["interactive"]["p99_ms"]
+    cells["chunked_p99_ratio"] = cp / bp
+    print(f"[bench_serving] chunked prefill interactive p99: {cp:.2f} ms "
+          f"vs {bp:.2f} ms blocking ({cp / bp:.2f}x)")
+    if cp > MAX_CHUNKED_P99_RATIO * bp:
+        regressed.append("chunked_prefill_p99")
+        print(f"[bench_serving] FAIL: chunked prefill interactive p99 "
+              f"{cp / bp:.2f}x blocking (> {MAX_CHUNKED_P99_RATIO})")
+
+    # ---- speculative decode: shared-prefix workload, greedy.  Budgets
+    # are stretched so the decode phase dominates the wall (the speedup
+    # under test is a decode-loop property), and each cell keeps the
+    # fastest of 3 timed passes — at toy scale a single ~0.3s pass is
+    # scheduler-noise-bound and the ratio swings either way
+    n = 6 if smoke else 12
+    sreqs = [(p, b + (8 if smoke else 32), "interactive")
+             for p, b in workload_shared_prefix(cfg, n)]
+    tgt, tgt_out = sched_cell("shared/target-only",
+                              lambda: paged(128), sreqs, repeats=3)
+    spec, spec_out = sched_cell(
+        "shared/spec-perfect-draft",
+        lambda: paged(128, draft=params, spec_k=4), sreqs, repeats=3)
+    qd, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=32))
+    rtn, rtn_out = sched_cell(
+        "shared/spec-rtn-w4-draft",
+        lambda: paged(128, draft=qd, spec_k=4), sreqs, repeats=3)
+    cells["shared_target_only"] = tgt
+    cells["shared_spec_perfect"] = spec
+    cells["shared_spec_rtn_w4"] = rtn
+    speedup = spec["tokens_per_s"] / tgt["tokens_per_s"]
+    cells["spec_speedup_perfect_draft"] = speedup
+    print(f"[bench_serving] speculative speedup (perfect draft): "
+          f"{speedup:.2f}x target-only; rtn-w4 draft acceptance "
+          f"{rtn['spec_accepted']}/{rtn['spec_drafted']}")
+    for label, outs in (("perfect", spec_out), ("rtn_w4", rtn_out)):
+        if outs != tgt_out:
+            regressed.append(f"spec_bit_identity_{label}")
+            print(f"[bench_serving] FAIL: speculative greedy output "
+                  f"({label} draft) diverged from target-only decode")
+    if speedup < MIN_SPEC_SPEEDUP:
+        regressed.append("spec_speedup")
+        print(f"[bench_serving] FAIL: perfect-draft speculation only "
+              f"{speedup:.2f}x target-only (< {MIN_SPEC_SPEEDUP})")
 
 
 def kv_bytes_split(eng):
@@ -153,20 +330,51 @@ def run_workload(eng, reqs):
     }
 
 
-def bench_cell(name, make_engine, reqs):
-    # warmup and timed pass reuse ONE engine instance: the jit caches live
-    # on the instance's closures, so a fresh engine would recompile every
-    # shape during the timed pass and the walls would measure XLA, not
-    # serving throughput
-    eng = make_engine()
-    run_workload(eng, reqs)                                 # warmup/compile
-    res = run_workload(eng, reqs)
+def _print_cell(name, res):
     print(f"[bench_serving] {name:28s} {res['tokens_per_s']:8.1f} tok/s  "
           f"mean {res['latency_mean_s'] * 1e3:7.1f} ms  "
           f"p99 {res['latency_p99_s'] * 1e3:7.1f} ms  "
           f"kv/req {res['kv_bytes_per_request'] / 1024:7.1f} KiB  "
           f"skip {res['prefill_tokens_skipped']:4d}")
+
+
+def bench_cell(name, make_engine, reqs):
+    # warmup and timed passes reuse ONE engine instance: the jit caches
+    # live on the instance's closures, so a fresh engine would recompile
+    # every shape during the timed pass and the walls would measure XLA,
+    # not serving throughput.  Best of two timed passes: a toy-scale pass
+    # is ~100ms, and OS scheduler noise only ever inflates a wall
+    eng = make_engine()
+    run_workload(eng, reqs)                                 # warmup/compile
+    res = run_workload(eng, reqs)
+    r2 = run_workload(eng, reqs)
+    if r2["tokens_per_s"] > res["tokens_per_s"]:
+        res = r2
+    _print_cell(name, res)
     return res
+
+
+def bench_group(named_makers, reqs, rounds=3):
+    """Benchmark cells whose walls get *ratioed* against each other (the
+    static/continuous/paged tripwires): every engine warms up once, then
+    timed passes run in interleaved rounds (A, B, C, A, B, C, ...) and
+    each cell keeps its fastest.  Machine drift between rounds hits every
+    cell of the group equally instead of biasing whichever cell happened
+    to run in the slow minute — cells measured minutes apart cannot give
+    a trustworthy ~0.9x ratio on ~100 ms toy-scale walls."""
+    engines = [(name, mk()) for name, mk in named_makers]
+    for _, eng in engines:
+        run_workload(eng, reqs)                             # warmup/compile
+    best = {}
+    for _ in range(rounds):
+        for name, eng in engines:
+            r = run_workload(eng, reqs)
+            if name not in best or \
+                    r["tokens_per_s"] > best[name]["tokens_per_s"]:
+                best[name] = r
+    for name, _ in engines:
+        _print_cell(name, best[name])
+    return best
 
 
 def bench_quantized(cfg, params, args, results, regressed, quantized=None):
@@ -239,6 +447,9 @@ def main(argv=None):
     ap.add_argument("--quant-smoke", action="store_true",
                     help="tiny CI cell: ONLY the quantized-serving section "
                          "(rtn-w4 paged, int8 KV, packed bytes/device)")
+    ap.add_argument("--sched-smoke", action="store_true",
+                    help="tiny CI cell: ONLY the scheduling section "
+                         "(chunked vs blocking prefill, speculative decode)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
@@ -262,9 +473,12 @@ def main(argv=None):
                "capacity": args.capacity, "block_size": args.block_size,
                "cells": {}}
 
-    if args.quant_smoke:
+    if args.quant_smoke or args.sched_smoke:
         regressed = []
-        bench_quantized(cfg, params, args, results, regressed)
+        if args.quant_smoke:
+            bench_quantized(cfg, params, args, results, regressed)
+        else:
+            bench_sched(cfg, params, args, results, regressed)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2)
         print(f"[bench_serving] wrote {os.path.normpath(args.out)}")
@@ -290,16 +504,19 @@ def main(argv=None):
                     cfg, p, max_batch=args.max_batch,
                     capacity=args.capacity, block_size=args.block_size)))
 
-    # ---- uniform workload: all three engines
+    # ---- uniform workload: all three engines, interleaved timed rounds
     for vname, p in variants:
-        for ename, mk in makers(p):
-            results["cells"][f"{ename}_{vname}"] = bench_cell(
-                f"{ename}/{vname}", mk, reqs)
+        group = bench_group([(f"{ename}/{vname}", mk)
+                             for ename, mk in makers(p)], reqs)
+        for ename, _ in makers(p):
+            results["cells"][f"{ename}_{vname}"] = group[f"{ename}/{vname}"]
 
     # ---- shared-prefix workload: continuous-dense vs paged
-    for ename, mk in makers(params)[1:]:
-        results["cells"][f"shared_{ename}_dense"] = bench_cell(
-            f"shared/{ename}/dense", mk, shared_reqs)
+    group = bench_group([(f"shared/{ename}/dense", mk)
+                         for ename, mk in makers(params)[1:]], shared_reqs)
+    for ename, _ in makers(params)[1:]:
+        results["cells"][f"shared_{ename}_dense"] = \
+            group[f"shared/{ename}/dense"]
 
     regressed = []
     for vname, _ in variants:
@@ -336,8 +553,9 @@ def main(argv=None):
               f"{skip_frac:.0%} of prefill tokens "
               f"(< {MIN_PREFIX_SKIP_FRACTION:.0%})")
 
-    if not args.smoke:   # full run: quantized serving section too
+    if not args.smoke:   # full run: quantized + scheduling sections too
         bench_quantized(cfg, params, args, results, regressed, quantized)
+        bench_sched(cfg, params, args, results, regressed)
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

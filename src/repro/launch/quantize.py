@@ -59,10 +59,29 @@ def prepare_params(cfg, corpus, *, train_steps: int = 0, seed: int = 0,
     return m, params
 
 
+def parse_draft(spec):
+    """``--draft rtn-w4`` -> the zero-calibration QuantConfig drafting
+    runs with (None/"none" disables)."""
+    if spec in (None, "", "none"):
+        return None
+    if not spec.startswith("rtn-w"):
+        raise ValueError(f"unsupported draft spec {spec!r} "
+                         "(expected rtn-w<bits>, e.g. rtn-w4)")
+    wbits = int(spec[len("rtn-w"):])
+    return QuantConfig(wbits=wbits, group_size=32, method="rtn")
+
+
 def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
         n_calib: int = 8, calib_seq: int = 128, seed: int = 0,
-        dist_ctx=None, log=print) -> dict:
+        draft: str = None, dist_ctx=None, log=print) -> dict:
     """Train (optionally) -> calibrate -> pack -> save; returns the manifest.
+
+    ``draft="rtn-w4"`` additionally RTN-packs the *same* prepared fp params
+    at the given width and stores the planes beside the target in one
+    checkpoint — the self-speculative serving pair (``launch/serve.py
+    --draft``): zero-shot quantization tracks the calibrated model's
+    distribution closely enough to propose for it (AdpQ, arXiv 2405.13358),
+    at zero extra calibration cost.
 
     Callable from examples/tests with a concrete ModelConfig; the CLI is a
     thin argv wrapper around this.
@@ -76,7 +95,15 @@ def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
         m, params, calib, qcfg, ckpt_dir=os.path.join(out_dir, "calib"),
         dist_ctx=dist_ctx, log=log)
     packed = pipeline.pack_results(qp, results, qcfg)
+    dq = parse_draft(draft)
+    dpacked = None
+    if dq is not None:
+        from repro.serving.quantized import quantize_params_rtn
+        dpacked, skipped = quantize_params_rtn(params, dq)
+        log(f"[quantize] draft pack {draft}: "
+            f"{len(skipped)} kernels left fp")
     manifest = qckpt.save(out_dir, packed, cfg, qcfg,
+                          draft=dpacked, draft_qcfg=dq,
                           extra={"seed": seed, "train_steps": train_steps,
                                  "n_calib": n_calib, "calib_seq": calib_seq})
 
@@ -112,6 +139,10 @@ def main():
                     help="calibration sequences (paper: 128)")
     ap.add_argument("--calib-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--draft", default=None,
+                    help="also pack a zero-calibration speculative draft "
+                         "of the same weights into the checkpoint "
+                         "(e.g. rtn-w4)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -120,7 +151,8 @@ def main():
     qcfg = QuantConfig(wbits=args.wbits, group_size=args.group_size,
                        method=args.method, hessian=args.hessian, alpha=alpha)
     run(cfg, qcfg, args.out, train_steps=args.train_steps,
-        n_calib=args.calib, calib_seq=args.calib_seq, seed=args.seed)
+        n_calib=args.calib, calib_seq=args.calib_seq, seed=args.seed,
+        draft=args.draft)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,13 @@ one of:
 per-token scale planes.  ``--check-quant rtn-wN`` (with ``--ckpt``) also
 serves the same requests from an equivalent in-memory RTN tree and asserts
 the greedy tokens match — the CI ckpt-smoke tripwire.
+
+Latency-shaped scheduling (paged engine): ``--draft rtn-w4`` turns on
+self-speculative decode (checkpoint draft planes when the ckpt packs
+them, else an in-memory RTN pack of the same weights; greedy output is
+bit-identical to target-only decode), ``--prefill-chunk N`` admits long
+prompts in fixed chunks interleaved with decode ticks, and ``--slo``
+assigns SLO classes that order admission and preemption.
 """
 import argparse
 import contextlib
@@ -36,20 +43,25 @@ from repro.serving.quantized import quantize_params_rtn
 QUANT_CHOICES = ("none", "rtn-w4", "rtn-w3", "rtn-w2")
 
 
-def _serve_requests(cfg, params, args, plan):
+def _serve_requests(cfg, params, args, plan, draft=None):
     """Build the chosen engine, serve the demo batch, return the requests."""
     if args.engine == "paged":
         eng = PagedEngine(cfg, params, max_batch=args.requests,
                           capacity=128, plan=plan,
-                          block_size=args.block_size, kv_bits=args.kv_bits)
+                          block_size=args.block_size, kv_bits=args.kv_bits,
+                          draft=draft, spec_k=args.spec_k,
+                          prefill_chunk=args.prefill_chunk)
     else:
         cls = Engine if args.engine == "continuous" else StaticEngine
         eng = cls(cfg, params, max_batch=args.requests, capacity=128,
                   plan=plan)
     rng = np.random.default_rng(0)
+    slos = {"interactive": ["interactive"], "batch": ["batch"],
+            "mixed": ["interactive", "batch"]}[args.slo]
     rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
-                     max_tokens=args.max_tokens)
-          for _ in range(args.requests)]
+                     max_tokens=args.max_tokens,
+                     slo=slos[i % len(slos)])
+          for i in range(args.requests)]
     eng.run()
     return eng, rs
 
@@ -82,11 +94,30 @@ def main():
                          "static-cohort baseline")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged engine: tokens per KV block")
+    ap.add_argument("--draft", default=None, metavar="rtn-wN",
+                    help="paged engine: self-speculative decode — draft "
+                         "with the checkpoint's co-packed draft planes "
+                         "(--ckpt) or an in-memory rtn-wN pack of the same "
+                         "weights, verify with the target model")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative tick")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged engine: admit prompts longer than this in "
+                         "fixed chunks interleaved with decode ticks "
+                         "(0 = blocking admission)")
+    ap.add_argument("--slo", default="interactive",
+                    choices=["interactive", "batch", "mixed"],
+                    help="SLO class(es) for the demo requests (mixed "
+                         "alternates; interactive admits first and is "
+                         "preempted last)")
     args = ap.parse_args()
 
     if args.kv_bits != 16 and args.engine != "paged":
         ap.error("--kv-bits 8 requires --engine paged (the int8 pool is "
                  "a block-pool layout)")
+    if args.draft and args.engine != "paged":
+        ap.error("--draft requires --engine paged (speculative decode "
+                 "runs on the block-pool scheduler)")
     if args.check_quant and not args.ckpt:
         ap.error("--check-quant only makes sense with --ckpt")
     if args.ckpt and args.quant != "none":
@@ -116,9 +147,20 @@ def main():
             else contextlib.nullcontext()
 
     with mesh_ctx():
+        draft = None
         if args.ckpt:
             from repro.serving.qserve import ckpt as qckpt
             params = qckpt.load(args.ckpt, plan, manifest=manifest)
+            if args.draft:
+                if not qckpt.has_draft(manifest):
+                    print(f"[serve] checkpoint {args.ckpt} has no draft "
+                          "planes — re-quantize with --draft "
+                          f"{args.draft} to pack them")
+                    sys.exit(2)
+                draft = qckpt.load(args.ckpt, plan, manifest=manifest,
+                                   which="draft")
+                print("[serve] speculative draft: checkpoint draft planes "
+                      f"(k={args.spec_k})")
         else:
             params = build_model(cfg).init(jax.random.PRNGKey(0))
             if args.quant != "none":
@@ -128,7 +170,14 @@ def main():
                 print(f"[serve] packed weights to w{wbits}"
                       + (f" ({len(skipped)} kernels left fp: {skipped})"
                          if skipped else ""))
-        eng, rs = _serve_requests(cfg, params, args, plan)
+            if args.draft:
+                wbits = int(args.draft.rsplit("w", 1)[1])
+                draft, _ = quantize_params_rtn(
+                    build_model(cfg).init(jax.random.PRNGKey(0)),
+                    QuantConfig(wbits=wbits, group_size=32))
+                print(f"[serve] speculative draft: in-memory {args.draft} "
+                      f"pack of the same weights (k={args.spec_k})")
+        eng, rs = _serve_requests(cfg, params, args, plan, draft=draft)
     for r in rs:
         print(f"[serve] req {r.rid}: {r.out}")
     if args.engine == "paged":
@@ -136,6 +185,17 @@ def main():
               f"{eng.prefill_tokens_skipped}, peak blocks: "
               f"{eng.peak_blocks_in_use}/{eng.num_blocks}"
               + (f", kv pool int8" if args.kv_bits == 8 else ""))
+        if eng.spec_drafted:
+            tok = sum(len(r.out) for r in rs)
+            print(f"[serve] speculative: {eng.spec_accepted}/"
+                  f"{eng.spec_drafted} drafts accepted "
+                  f"({eng.spec_accepted / eng.spec_drafted:.0%}), "
+                  f"{tok / max(eng.ticks, 1):.2f} tokens/tick "
+                  f"over {eng.ticks} ticks")
+        if eng.chunk_steps or eng.preemptions:
+            print(f"[serve] scheduler: {eng.chunk_steps} prefill chunks, "
+                  f"{eng.preemptions} preemptions, {eng.swap_ins} swap-ins, "
+                  f"{eng.requeues} requeues")
     if plan is not None and (args.ckpt or args.quant != "none"):
         from repro.serving.qserve.report import (device_plane_bytes,
                                                  packed_plane_bytes)

@@ -122,6 +122,36 @@ def causal_attention(q, k, v, *, window: int = 0, q_offset=0,
     return o.reshape(B, Sq, H, Dh)
 
 
+def chunk_attention(q, k_ctx, v_ctx, ctx_valid, k_new, v_new):
+    """Prefill-chunk attention: one joint softmax over [pool prefix || chunk].
+
+    ``q`` (B,C,H,Dh) are the chunk's queries at positions start..start+C-1.
+    ``k_ctx``/``v_ctx`` (B,Lctx,KV,Dh) are the row's pool blocks gathered in
+    logical order, with ``ctx_valid`` (B,Lctx) marking real prefix positions
+    (pos < start and block mapped) — every valid context position precedes
+    every query, so no causal test is needed there.  ``k_new``/``v_new``
+    (B,C,KV,Dh) are the chunk's own KV, attended causally by chunk-local
+    index.  Both score halves share one softmax (single max/normalizer), so
+    splitting a prompt into chunks changes only which tile materializes:
+    the (C, Lctx+C) score block is the memory ceiling — bounding that tile
+    regardless of prompt length is the point of chunked prefill."""
+    B, C, H, Dh = q.shape
+    KV = k_new.shape[2]
+    rep = H // KV
+    qg = (q * Dh ** -0.5).reshape(B, C, KV, rep, Dh).astype(jnp.float32)
+    s_ctx = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_ctx.astype(jnp.float32))
+    s_ctx = jnp.where(ctx_valid[:, None, None, None, :], s_ctx, NEG_INF)
+    s_new = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_new.astype(jnp.float32))
+    ii = jnp.arange(C)
+    s_new = jnp.where((ii[None, :] <= ii[:, None])[None, None, None],
+                      s_new, NEG_INF)
+    s = jnp.concatenate([s_ctx, s_new], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    vals = jnp.concatenate([v_ctx, v_new], axis=1).astype(jnp.float32)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, vals)
+    return o.reshape(B, C, H, Dh).astype(v_new.dtype)
+
+
 # ------------------------------------------------------------------ decode
 
 class KVCache(NamedTuple):

@@ -805,6 +805,143 @@ class Model:
             new_cache["mamba_t"] = mt
         return x, new_cache
 
+    # ------------------------------------------------ speculative decoding
+    @staticmethod
+    def _is_paged(n):
+        return isinstance(n, A.PagedKVCache)
+
+    def spec_state(self, cache):
+        """The rollback-sensitive slice of a decode cache: every leaf that
+        is NOT a paged pool — window rings, recurrent SSM/RWKV state, dense
+        slot clocks.  Paged pools need no snapshot to rewind: addressing is
+        linear-positional, so stale speculative entries are clock-masked
+        (``j <= pos``) and overwritten in place by the next real write.
+        Ring/recurrent leaves have no such discipline (a ring write
+        *destroys* the entry ``window`` positions back; recurrent state has
+        no position axis at all), so speculation snapshots them and selects
+        the accepted step's copy per row on rollback."""
+        nodes, _ = jax.tree.flatten(cache, is_leaf=self._is_paged)
+        return [n for n in nodes if not self._is_paged(n)]
+
+    def with_spec_state(self, cache, state):
+        """Rebuild ``cache`` with its rollback-sensitive leaves replaced by
+        ``state`` (a ``spec_state`` list); paged pools pass through."""
+        nodes, td = jax.tree.flatten(cache, is_leaf=self._is_paged)
+        it = iter(state)
+        out = [n if self._is_paged(n) else next(it) for n in nodes]
+        return jax.tree.unflatten(td, out)
+
+    def decode_steps(self, params, tokens, cache, pos, block_tables=None):
+        """Scanned multi-token decode (the speculative *verify* pass):
+        ``tokens`` (B,K) are fed sequentially at positions pos..pos+K-1
+        through exactly ``decode_step``'s per-token math — same ops, same
+        order, so step i's logits are bit-identical to i separate
+        ``decode_step`` calls — in a single trace/dispatch.
+
+        Returns ``(logits (B,K,V), cache, snaps)`` where ``snaps`` stacks
+        every ``spec_state`` leaf after each step (axis 0 = step index):
+        the rollback record a speculative scheduler selects per-row
+        accepted states from.  ``pos`` is a scalar or (B,) vector clock,
+        as in ``decode_step``."""
+        def step(carry, tk):
+            c, p = carry
+            logits, c = self.decode_step(params, tk[:, None], c, p,
+                                         block_tables)
+            return (c, p + 1), (logits[:, 0], self.spec_state(c))
+
+        toks = jnp.moveaxis(tokens, 0, 1)                 # (K, B)
+        (cache, _), (lgs, snaps) = jax.lax.scan(
+            step, (cache, jnp.asarray(pos)), toks)
+        return jnp.moveaxis(lgs, 0, 1), cache, snaps
+
+    # ------------------------------------------------------ chunked prefill
+    def prefill_chunk(self, params, tokens, cache, bt_row, start, valid_len):
+        """One fixed-size chunk of a long-prompt prefill against a paged
+        cache row whose first ``start`` positions are already populated.
+
+        ``tokens`` (1, C) are prompt positions start..start+C-1 (C static,
+        a multiple of block_size; the tail past ``valid_len`` is pad),
+        ``bt_row`` (w,) the row's block table truncated to a static
+        power-of-two bucket covering the whole prompt, and ``start``
+        (traced, block-aligned) the chunk's absolute offset — so every
+        chunk of every prompt lowers through ONE compile per (w, C) pair,
+        which is what lets the engine interleave decode ticks between
+        chunks instead of stalling the batch for a monolithic prefill.
+
+        Chunk queries attend [gathered pool prefix (pos < start) || the
+        chunk itself, causal] via ``A.chunk_attention``; chunk KV scatters
+        into the row's mapped blocks (unmapped pad blocks spill to the
+        scratch block).  Returns (logits at valid_len-1, new cache).
+        Uniform-attention families only, like ``prefill_suffix``."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or self._grouped_local():
+            raise ValueError(
+                f"chunked prefill requires a uniform full-attention "
+                f"stack, not family {cfg.family!r}")
+        pk = cache["kv"]
+        bs = pk.k.shape[2]
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        x = L.embed(params["embed"], tokens)
+        B, C, _ = x.shape
+        assert B == 1 and C % bs == 0, (B, C, bs)
+        w = bt_row.shape[0]
+        positions = start + jnp.broadcast_to(jnp.arange(C)[None], (B, C))
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(positions, cfg.d_model, x.dtype)
+        okb = bt_row >= 0
+        safe_ids = jnp.where(okb, bt_row, 0)              # 0 = scratch block
+        jpos = jnp.arange(w * bs)
+        ctx_valid = ((jpos < start) & jnp.repeat(okb, bs))[None]   # (1, w*bs)
+        # the chunk's own write blocks (traced ids; pad region -> scratch)
+        cb = start // bs + jnp.arange(C // bs)
+        wok = (cb < w) & (jnp.take(bt_row, jnp.clip(cb, 0, w - 1)) >= 0)
+        wids = jnp.where(wok, jnp.take(bt_row, jnp.clip(cb, 0, w - 1)), 0)
+        quant = pk.quantized
+
+        def body(xc, lp, st):
+            kp, vp = st[0], st[1]                         # (nb, bs, KV, hd)
+            h = L.norm(lp["ln1"], xc)
+            q, k, v = A.qkv_project(lp["attn"], h, cfg, positions)
+            if quant:
+                from repro.serving.qserve import kvquant as KQ
+                kctx = KQ.dequantize_kv(kp[safe_ids], st[2][safe_ids],
+                                        k.dtype)
+                vctx = KQ.dequantize_kv(vp[safe_ids], st[3][safe_ids],
+                                        v.dtype)
+            else:
+                kctx = kp[safe_ids].astype(k.dtype)
+                vctx = vp[safe_ids].astype(v.dtype)
+            o = A.chunk_attention(q, kctx.reshape(1, w * bs, KV, hd),
+                                  vctx.reshape(1, w * bs, KV, hd),
+                                  ctx_valid, k, v)
+            if quant:
+                from repro.serving.qserve import kvquant as KQ
+                kq, ksn = KQ.quantize_kv(k[0].reshape(C // bs, bs, KV, hd))
+                vq, vsn = KQ.quantize_kv(v[0].reshape(C // bs, bs, KV, hd))
+                st_new = (kp.at[wids].set(kq), vp.at[wids].set(vq),
+                          st[2].at[wids].set(ksn), st[3].at[wids].set(vsn))
+            else:
+                st_new = (
+                    kp.at[wids].set(
+                        k[0].reshape(C // bs, bs, KV, hd).astype(kp.dtype)),
+                    vp.at[wids].set(
+                        v[0].reshape(C // bs, bs, KV, hd).astype(vp.dtype)))
+            xc = xc + L.linear(lp["attn"]["wo"], o.reshape(B, C, -1),
+                               kind="row")
+            h = L.norm(lp["ln2"], xc)
+            if "moe" in lp:
+                xc = xc + M.moe_apply(lp["moe"], h, cfg)
+            else:
+                xc = xc + L.mlp(lp["mlp"], h, cfg.mlp)
+            return xc, st_new
+
+        x, kvs = _scan_with_state(body, x, params["layers"],
+                                  _paged_kv_state(pk), cfg.n_layers)
+        xl = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+        logits = self._logits(params, xl)
+        return logits, {"kv": A.PagedKVCache(kvs[0], kvs[1],
+                                             pk.block_tables, *kvs[2:])}
+
     # ------------------------------------------------- paged suffix prefill
     def prefill_suffix(self, params, tokens, cache, bt_row, valid_len, *,
                        n_shared):

@@ -48,6 +48,12 @@ from repro.models import build_model
 from repro.models.attention import KVCache, PagedKVCache
 
 
+# SLO classes order both admission and preemption: `interactive` admits
+# first and is preempted last; `batch` makes way.  Lower rank = higher
+# priority.
+SLO_RANK = {"interactive": 0, "batch": 1}
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -55,6 +61,12 @@ class Request:
     max_tokens: int = 32
     temperature: float = 0.0
     eos: Optional[int] = None
+    # per-request sampling stream: temp > 0 draws are keyed by
+    # fold_in(PRNGKey(seed), n_tokens_sampled) so the stream depends only
+    # on this request, never on which other slots are co-batched.  None
+    # derives a default from (engine seed, rid).
+    seed: Optional[int] = None
+    slo: str = "interactive"           # SLO class (see SLO_RANK)
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     # scheduler telemetry (continuous engine): tick of admission/retirement
@@ -62,6 +74,13 @@ class Request:
     admit_tick: int = -1
     finish_tick: int = -1
     finish_wall: float = 0.0
+    # wall-clock offset of every emitted token (inter-token latency bench)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    # scheduler-internal: admission backoff + preemption swap state
+    _backoff: int = 0
+    _not_before: int = 0               # admission-clock gate after requeue
+    _admit_seq: int = 0                # admission order (preemption victim)
+    _swap: Optional[tuple] = None      # host-side swapped-out cache state
 
 
 def cache_batch_axes(model, capacity):
@@ -82,17 +101,24 @@ def _serve_shape(capacity: int, max_batch: int):
     return ShapeConfig("serve", capacity, max_batch, "decode")
 
 
-def _sample_tokens(logits, temps, key):
+def _sample_tokens(logits, temps, seeds, steps):
     """Batched on-device sampling: logits (B,V), temps (B,) -> (B,) int32.
 
     temp == 0 rows take the argmax (bit-identical to the host-side
     ``int(jnp.argmax(...))`` the static engine historically did); temp > 0
-    rows draw from categorical(logits / temp) with a per-row key."""
-    B = logits.shape[0]
+    rows draw from categorical(logits / temp) keyed by
+    ``fold_in(PRNGKey(seeds[b]), steps[b])`` — the draw at a request's
+    n-th sampled token is a pure function of (its seed, n), so sampled
+    output is reproducible per request regardless of co-batching, tick
+    count, or which engine instance serves it."""
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    keys = jax.random.split(key, B)
     safe_t = jnp.maximum(temps, 1e-6)[:, None]
-    drawn = jax.vmap(jax.random.categorical)(keys, logits / safe_t)
+
+    def draw(seed, step, lg):
+        return jax.random.categorical(
+            jax.random.fold_in(jax.random.PRNGKey(seed), step), lg)
+
+    drawn = jax.vmap(draw)(seeds, steps, logits / safe_t)
     return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
 
 
@@ -287,7 +313,16 @@ class Engine(_EngineBase):
         self._pos = np.zeros(B, np.int32)        # per-slot cache clock
         self._temps = np.zeros(B, np.float32)
         self._next_tok = np.zeros(B, np.int32)   # token each slot feeds next
+        self._seeds = np.zeros(B, np.int32)      # per-slot sampling seed
+        self._steps = np.zeros(B, np.int32)      # per-slot tokens sampled
+        self._engine_seed = seed
         self.ticks = 0
+        self._t0 = time.perf_counter()     # run() resets; direct-driven
+                                           # engines still get valid offsets
+        self._admit_clock = 0                    # admission attempts (backoff)
+        self.requeues = 0                        # admissions requeued w/ backoff
+        self.preemptions = 0                     # slots swapped out / aborted
+        self.swap_ins = 0                        # preempted slots resumed
         # bucketed admission keeps the prefill jit cache at O(log L)
         # entries; recurrent families (ssm/hybrid) thread state through
         # every position, so padding would poison their carried state —
@@ -324,10 +359,10 @@ class Engine(_EngineBase):
     def _make_decode(self):
         model, with_ctx = self.model, self._with_ctx
 
-        def step(params, tokens, cache, pos, temps, key):
+        def step(params, tokens, cache, pos, temps, seeds, steps):
             logits, cache = with_ctx(model.decode_step)(
                 params, tokens, cache, pos)
-            tok = _sample_tokens(logits[:, 0], temps, key)
+            tok = _sample_tokens(logits[:, 0], temps, seeds, steps)
             return tok, cache
         return step
 
@@ -393,29 +428,113 @@ class Engine(_EngineBase):
         self.prefill_tokens_computed += len(r.prompt)
         return logits
 
-    def _admit(self):
-        """Fill free slots from the queue (FIFO): B=1 prefill, scatter the
-        row into the batched cache, sample the first token on device."""
-        for i in self._free_slots():
-            if not self.queue:
-                return
-            r = self.queue.pop(0)
-            S = len(r.prompt)
-            logits = self._admit_prefill(r, i)
-            self.key, sub = jax.random.split(self.key)
-            t = int(self._first(logits[:, 0],
-                                jnp.full((1,), r.temperature, jnp.float32),
-                                sub)[0])
-            r.out.append(t)
-            r.admit_tick = self.ticks
-            if self._finished_by(r, t, S):
-                self._slots[i] = r
-                self._retire(i)
+    def _eff_seed(self, r: Request) -> int:
+        """The sampling seed a request's stream is keyed by: the explicit
+        ``r.seed`` when given, else a (engine seed, rid) mix — rids follow
+        submit order, so even default streams reproduce across engine
+        instances fed the same request sequence."""
+        if r.seed is not None:
+            return int(r.seed) & 0x7FFFFFFF
+        return (self._engine_seed * 1000003 + 7919 * r.rid + 12345) \
+            & 0x7FFFFFFF
+
+    def _pop_admittable(self) -> Optional[Request]:
+        """Next request to admit: SLO-class order (interactive before
+        batch), FIFO within a class, skipping requests still in admission
+        backoff."""
+        best = None
+        for idx, r in enumerate(self.queue):
+            if r._not_before > self._admit_clock:
                 continue
-            self._slots[i] = r
-            self._pos[i] = S
-            self._temps[i] = r.temperature
-            self._next_tok[i] = t
+            rank = SLO_RANK.get(r.slo, 1)
+            if best is None or rank < best[0]:
+                best = (rank, idx)
+                if rank == 0:
+                    break
+        if best is None:
+            return None
+        return self.queue.pop(best[1])
+
+    def _requeue_backoff(self, r: Request):
+        """Admission failed and ``r`` is back in the queue: gate its next
+        attempt behind an exponentially growing number of admission rounds
+        so a request that cannot fit yet stops burning a retry per loop."""
+        r._backoff = min(r._backoff + 1, 6)
+        r._not_before = self._admit_clock + (1 << r._backoff)
+        self.requeues += 1
+
+    def _finish_admission(self, r: Request, i: int, logits, S: int):
+        """Common admission tail: sample the first token from the prefill
+        logits (per-request stream, step 0) and activate — or immediately
+        retire — the slot."""
+        t = int(self._first(
+            logits[:, 0], jnp.full((1,), r.temperature, jnp.float32),
+            jnp.full((1,), self._eff_seed(r), jnp.int32),
+            jnp.zeros((1,), jnp.int32))[0])
+        r.out.append(t)
+        r.token_times.append(time.perf_counter() - self._t0)
+        if r.admit_tick < 0:
+            r.admit_tick = self.ticks
+        r._admit_seq = self._admit_clock
+        self._slots[i] = r
+        if self._finished_by(r, t, S):
+            self._retire(i)
+            return
+        self._pos[i] = S
+        self._temps[i] = r.temperature
+        self._next_tok[i] = t
+        self._seeds[i] = self._eff_seed(r)
+        self._steps[i] = 1
+
+    def _try_admit(self, r: Request, i: int):
+        """Admit ``r`` into free slot ``i`` (may raise RuntimeError on pool
+        saturation — the paged override adds swap-in and chunked paths)."""
+        logits = self._admit_prefill(r, i)
+        self._finish_admission(r, i, logits, len(r.prompt))
+
+    # --- preemption hooks (no-ops for dense engines: their per-slot cache
+    # rows are preallocated, admission cannot fail on capacity)
+    def _preempt_victim(self, exclude=(), min_rank=0) -> Optional[int]:
+        return None
+
+    def _preempt(self, i: int):
+        raise NotImplementedError
+
+    def _admit_preempt_retry(self, r: Request, i: int) -> bool:
+        """Admission hit pool saturation: preempt a strictly-lower-priority
+        victim (batch makes way for interactive) and retry once.  Returns
+        True when the failure was handled (admitted, or backed off after
+        the retry also failed)."""
+        v = self._preempt_victim(min_rank=SLO_RANK.get(r.slo, 1) + 1)
+        if v is None:
+            return False
+        self._preempt(v)
+        if self.queue and self.queue[0] is r:
+            self.queue.pop(0)
+        try:
+            self._try_admit(r, i)
+        except RuntimeError:
+            self._requeue_backoff(r)
+        return True
+
+    def _admit(self):
+        """Fill free slots from the queue (SLO-ordered, FIFO within class):
+        B=1 prefill, scatter the row into the batched cache, sample the
+        first token on device.  Pool saturation is not fatal: the request
+        is requeued with backoff (after trying to preempt a lower-priority
+        slot) and admission moves on."""
+        self._admit_clock += 1
+        for i in self._free_slots():
+            r = self._pop_admittable()
+            if r is None:
+                return
+            try:
+                self._try_admit(r, i)
+            except RuntimeError:
+                # the failing path reinserted r at the queue head with its
+                # partial block acquisitions released
+                if not self._admit_preempt_retry(r, i):
+                    self._requeue_backoff(r)
 
     def _pre_tick(self, active):
         """Hook before the device step (paged engine maps write blocks)."""
@@ -424,33 +543,71 @@ class Engine(_EngineBase):
         """Extra trailing args for the jit'd decode step (paged: tables)."""
         return ()
 
+    def _active_slots(self):
+        """Slots that decode this tick (paged: excludes mid-chunk-prefill
+        slots — they hold a slot but are not live in the batch yet)."""
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
     def _tick(self):
         """One lockstep device step for every slot; one host sync."""
-        active = [i for i, s in enumerate(self._slots) if s is not None]
+        active = self._active_slots()
         if not active:
             return
         self._pre_tick(active)
-        self.key, sub = jax.random.split(self.key)
+        active = self._active_slots()        # preemption may drop slots
+        if not active:
+            return
         toks, self._cache = self._decode(
             self.params, jnp.asarray(self._next_tok[:, None]), self._cache,
-            jnp.asarray(self._pos), jnp.asarray(self._temps), sub,
+            jnp.asarray(self._pos), jnp.asarray(self._temps),
+            jnp.asarray(self._seeds), jnp.asarray(self._steps),
             *self._decode_extra_args())
         toks = np.asarray(toks)                  # the tick's single sync
+        now = time.perf_counter() - self._t0
         self.ticks += 1
         for i in active:
             r = self._slots[i]
             t = int(toks[i])
             r.out.append(t)
+            r.token_times.append(now)
             self._pos[i] += 1
             self._next_tok[i] = t
+            self._steps[i] += 1
             if self._finished_by(r, t, int(self._pos[i])):
                 self._retire(i)
 
+    def _prefill_step(self):
+        """Hook: advance in-flight chunked prefills (paged engine)."""
+
+    def _prefilling(self) -> bool:
+        return False
+
+    def _busy(self) -> bool:
+        return any(s is not None for s in self._slots)
+
     def run(self):
         self._t0 = time.perf_counter()
-        while self.queue or any(s is not None for s in self._slots):
+        stalls = 0
+        while self.queue or self._busy():
+            done0 = len(self.finished)
             self._admit()
+            self._prefill_step()
             self._tick()
+            if self._busy() or self._prefilling() or \
+                    len(self.finished) > done0:
+                stalls = 0
+            elif self.queue:
+                # nothing is running, so ticks (and natural backoff expiry)
+                # cannot advance: expire every backoff and retry.  If
+                # repeated forced retries still admit nothing with an empty
+                # engine, the queued work can never fit.
+                stalls += 1
+                for r in self.queue:
+                    r._not_before = 0
+                if stalls > 3:
+                    raise RuntimeError(
+                        "admission stalled: queued request(s) cannot fit "
+                        "the block pool even with the engine idle")
         return self
 
     # ------------------------------------------------- teacher-forced score
@@ -590,11 +747,30 @@ class PagedEngine(Engine):
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  capacity: int = 512, seed: int = 0, plan=None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 share_prefixes: bool = True, kv_bits: int = 16):
+                 share_prefixes: bool = True, kv_bits: int = 16,
+                 draft=None, spec_k: int = 4, prefill_chunk: int = 0):
         assert capacity % block_size == 0, (capacity, block_size)
         assert kv_bits in (16, 8), kv_bits
         self.kv_bits = kv_bits
         self.block_size = block_size
+        # --- self-speculative decoding: `draft` is a cheap params tree of
+        # the SAME architecture (typically an rtn-packed zero-calibration
+        # quantization of the target weights) that greedily proposes
+        # spec_k tokens per tick; one scanned target pass verifies them.
+        self._draft = draft
+        self.spec_k = int(spec_k)
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self._spec_jit = None
+        # --- chunked prefill: prompts longer than `prefill_chunk` tokens
+        # admit through fixed-size prefill_chunk-token chunks interleaved
+        # with decode ticks (0 disables = blocking admission).
+        if prefill_chunk:
+            prefill_chunk += (-prefill_chunk) % block_size
+        self.chunk_tokens = prefill_chunk
+        self.chunk_steps = 0
+        self._chunking: Dict[int, dict] = {}
+        self._chunk_jits: Dict[int, object] = {}
         self.max_blocks = capacity // block_size
         stripes = 1
         if plan is not None:
@@ -627,6 +803,9 @@ class PagedEngine(Engine):
         self._sfx_jits: Dict[int, object] = {}
         self._copy_block = jax.jit(self._make_copy_block(),
                                    donate_argnums=(0,))
+        if self._draft is not None and plan is not None:
+            self._draft = jax.device_put(
+                self._draft, plan.param_shardings(self._draft))
 
     # ------------------------------------------------------------- jit fns
     def _init_device_cache(self):
@@ -644,10 +823,11 @@ class PagedEngine(Engine):
     def _make_decode(self):
         model, with_ctx = self.model, self._with_ctx
 
-        def step(params, tokens, cache, pos, temps, key, block_tables):
+        def step(params, tokens, cache, pos, temps, seeds, steps,
+                 block_tables):
             logits, cache = with_ctx(model.decode_step)(
                 params, tokens, cache, pos, block_tables)
-            tok = _sample_tokens(logits[:, 0], temps, key)
+            tok = _sample_tokens(logits[:, 0], temps, seeds, steps)
             return tok, cache
         return step
 
@@ -686,6 +866,9 @@ class PagedEngine(Engine):
             lambda x, y: next(i for i, (p, q) in
                               enumerate(zip(x.shape, y.shape)) if p != q),
             a, b) for a, b in zip(big2, big3)]
+        # the swap-out/swap-in path reuses the same per-node batch axes to
+        # gather/scatter one slot's dense rows (paged nodes move by block)
+        self._node_axes = axes
         bs, nblk = self.block_size, self.max_blocks
 
         def insert(big, row, slot, table_row):
@@ -750,10 +933,11 @@ class PagedEngine(Engine):
         while b is None and self.prefix.evict_one(stripe):
             b = self.alloc.alloc(stripe)
         if b is None:
+            # not fatal: callers preempt a lower-priority slot and retry,
+            # or requeue the request with backoff (see _admit / _pre_tick)
             raise RuntimeError(
                 f"KV block pool exhausted ({self.num_blocks} blocks, "
-                f"{self.alloc.blocks_in_use} live): admit fewer requests "
-                f"or grow num_blocks (preemption is future work)")
+                f"{self.alloc.blocks_in_use} live)")
         self.peak_blocks_in_use = max(self.peak_blocks_in_use,
                                       self.alloc.blocks_in_use)
         return b
@@ -852,6 +1036,209 @@ class PagedEngine(Engine):
             self._tables[i] = -1
         super()._retire(i)
 
+    # ------------------------------------------------ preemption / swap-out
+    def _preempt_victim(self, exclude=(), min_rank=0) -> Optional[int]:
+        """Lowest-priority occupied slot: batch-class before interactive,
+        most recently admitted first within a class; only slots whose SLO
+        rank >= ``min_rank`` qualify (admission preempts strictly lower
+        priority only; decode growth may preempt any other slot)."""
+        best = None
+        for i, r in enumerate(self._slots):
+            if r is None or i in exclude:
+                continue
+            rank = SLO_RANK.get(r.slo, 1)
+            if rank < min_rank:
+                continue
+            key = (rank, r._admit_seq)
+            if best is None or key > best[0]:
+                best = (key, i)
+        return None if best is None else best[1]
+
+    def _preempt(self, i: int):
+        """Swap slot ``i`` out to host memory and requeue it at the queue
+        head.  Mid-chunk-prefill slots are aborted instead (nothing decoded
+        yet — recomputing the prefill is cheaper than paging out a prompt
+        that produced no tokens)."""
+        r = self._slots[i]
+        if i in self._chunking:
+            del self._chunking[i]
+        else:
+            # gather this row's live state: every mapped pool block plus
+            # the slot's row of each dense leaf (rings, recurrent state,
+            # clocks).  Block contents round-trip bit-exactly through host
+            # numpy, so the resumed decode continues bit-identically.
+            lbs = np.flatnonzero(self._tables[i] >= 0)
+            ids = jnp.asarray(self._tables[i][lbs])
+            nodes, _ = _cache_nodes(self._cache)
+            blob = []
+            for n, ax in zip(nodes, self._node_axes):
+                if isinstance(n, PagedKVCache):
+                    e = {"k": np.asarray(n.k[:, ids]),
+                         "v": np.asarray(n.v[:, ids])}
+                    if n.quantized:
+                        e["ks"] = np.asarray(n.k_scale[:, ids])
+                        e["vs"] = np.asarray(n.v_scale[:, ids])
+                    blob.append(e)
+                else:
+                    blob.append(jax.tree.map(
+                        lambda leaf, a: np.asarray(
+                            jax.lax.index_in_dim(leaf, i, a, keepdims=True)),
+                        n, ax))
+            r._swap = (lbs, blob,
+                       {"pos": int(self._pos[i]),
+                        "next_tok": int(self._next_tok[i])})
+        self._release_row(self._tables[i])
+        self._tables[i] = -1
+        self._slots[i] = None
+        self.queue.insert(0, r)
+        self.preemptions += 1
+
+    def _admit_swapped(self, r: Request, i: int):
+        """Swap a preempted slot back in: re-map its logical blocks onto
+        freshly allocated physical ids, scatter the saved block contents
+        and dense rows, and resume decode at the saved clock."""
+        lbs, blob, st = r._swap
+        trow = np.full(self.max_blocks, -1, np.int32)
+        try:
+            for lb in lbs:
+                trow[lb] = self._alloc_block(int(lb))
+        except RuntimeError:
+            self._release_row(trow)
+            self.queue.insert(0, r)
+            raise
+        ids = jnp.asarray(trow[lbs])
+        nodes, td = _cache_nodes(self._cache)
+        out = []
+        for n, ax, e in zip(nodes, self._node_axes, blob):
+            if isinstance(n, PagedKVCache):
+                sc = (None, None)
+                if n.quantized:
+                    sc = (n.k_scale.at[:, ids].set(jnp.asarray(e["ks"])),
+                          n.v_scale.at[:, ids].set(jnp.asarray(e["vs"])))
+                out.append(PagedKVCache(
+                    n.k.at[:, ids].set(jnp.asarray(e["k"])),
+                    n.v.at[:, ids].set(jnp.asarray(e["v"])),
+                    n.block_tables, *sc))
+            else:
+                out.append(jax.tree.map(
+                    lambda leaf, a, row: jax.lax.dynamic_update_slice_in_dim(
+                        leaf, jnp.asarray(row).astype(leaf.dtype), i, axis=a),
+                    n, ax, e))
+        self._cache = jax.tree.unflatten(td, out)
+        self._tables[i] = trow
+        self._slots[i] = r
+        self._pos[i] = st["pos"]
+        self._next_tok[i] = st["next_tok"]
+        self._temps[i] = r.temperature
+        self._seeds[i] = self._eff_seed(r)
+        self._steps[i] = len(r.out)
+        r._admit_seq = self._admit_clock
+        r._swap = None
+        self.swap_ins += 1
+
+    # ------------------------------------------------------ chunked prefill
+    def _begin_chunked(self, r: Request, i: int):
+        """Claim slot ``i`` for an incremental long-prompt prefill: map the
+        prefix-cache hits now, then compute the private tail chunk-by-chunk
+        from ``_prefill_step`` between decode ticks."""
+        bs = self.block_size
+        S = len(r.prompt)
+        n_shared, shared = self.prefix.match(r.prompt)
+        n_shared = min(n_shared, (S - 1) // bs)
+        trow = np.full(self.max_blocks, -1, np.int32)
+        for j, b in enumerate(shared[:n_shared]):
+            self.alloc.incref(b)
+            trow[j] = b
+        self._tables[i] = trow
+        self._slots[i] = r
+        w = 4
+        while w < -(-S // bs):
+            w *= 2
+        self._chunking[i] = {"start": n_shared * bs, "n_shared": n_shared,
+                             "w": min(w, self.max_blocks)}
+        r.admit_tick = self.ticks
+        r._admit_seq = self._admit_clock
+        self.prefill_tokens_skipped += n_shared * bs
+        self.shared_block_hits += n_shared
+
+    def _chunk_jit(self, w: int):
+        """Per-table-width jit of the chunk prefill (chunk length is fixed,
+        so the jit cache holds O(log max_blocks) entries)."""
+        fn = self._chunk_jits.get(w)
+        if fn is None:
+            model, with_ctx = self.model, self._with_ctx
+
+            def chunk(params, tokens, cache, bt_row, start, valid_len):
+                return with_ctx(model.prefill_chunk)(
+                    params, tokens, cache, bt_row, start, valid_len)
+            kw = {} if self._cache_sh is None else \
+                {"out_shardings": (None, self._cache_sh)}
+            fn = jax.jit(chunk, donate_argnums=(2,), **kw)
+            self._chunk_jits[w] = fn
+        return fn
+
+    def _prefilling(self) -> bool:
+        return bool(self._chunking)
+
+    def _prefill_step(self):
+        """Advance every in-flight chunked prefill by ONE chunk, then
+        return — the run loop decodes a tick in between, so a long prompt
+        costs the live batch one bounded chunk of latency per tick instead
+        of its whole prefill."""
+        for i in list(self._chunking):
+            st = self._chunking.get(i)
+            r = self._slots[i]
+            if st is None or r is None:
+                continue
+            bs, C = self.block_size, self.chunk_tokens
+            S = len(r.prompt)
+            start = st["start"]
+            n = min(C, S - start)
+            try:
+                for lb in range(start // bs, -(-(start + n) // bs)):
+                    if self._tables[i, lb] < 0:
+                        self._tables[i, lb] = self._alloc_block(lb)
+            except RuntimeError:
+                v = self._preempt_victim(exclude=(i,),
+                                         min_rank=SLO_RANK.get(r.slo, 1))
+                if v is not None:
+                    self._preempt(v)
+                else:
+                    # no lower-priority victim: abort this prefill and
+                    # requeue it behind a backoff
+                    self._preempt(i)
+                    self._requeue_backoff(r)
+                continue
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :n] = r.prompt[start:start + n]
+            logits, self._cache = self._chunk_jit(st["w"])(
+                self.params, jnp.asarray(toks), self._cache,
+                jnp.asarray(self._tables[i, :st["w"]]),
+                jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32))
+            self.prefill_tokens_computed += n
+            self.chunk_steps += 1
+            st["start"] = start + n
+            if st["start"] >= S:
+                del self._chunking[i]
+                self.prefix.insert(r.prompt, self._tables[i],
+                                   st["n_shared"], S // bs)
+                self._slots[i] = None      # _finish_admission re-occupies
+                self._finish_admission(r, i, logits, S)
+
+    def _try_admit(self, r: Request, i: int):
+        if r._swap is not None:
+            self._admit_swapped(r, i)
+            return
+        if self._share and self.chunk_tokens and \
+                len(r.prompt) > self.chunk_tokens:
+            self._begin_chunked(r, i)
+            return
+        super()._try_admit(r, i)
+
+    def _active_slots(self):
+        return [i for i, s in enumerate(self._slots)
+                if s is not None and i not in self._chunking]
+
     def _score_cleanup(self, n: int):
         if self._has_paged:
             for k in range(n):
@@ -859,10 +1246,171 @@ class PagedEngine(Engine):
                 self._tables[k] = -1
         super()._score_cleanup(n)
 
+    def _ensure_block_or_preempt(self, i: int, pos: int):
+        """Map the block position ``pos`` writes, preempting until the
+        allocation fits.  The victim is the globally lowest-priority slot
+        (batch-class, most recent first) — which may be slot ``i``
+        itself: a batch slot under pool pressure swaps *itself* out
+        rather than evicting interactive work.  A genuinely unservable
+        live set (a single slot that cannot grow) re-raises."""
+        while True:
+            try:
+                self._ensure_block(i, pos)
+                return
+            except RuntimeError:
+                v = self._preempt_victim()
+                alone = all(s is None for j, s in enumerate(self._slots)
+                            if j != i)
+                if v is None or (v == i and alone):
+                    # nothing else to free: this request's working set
+                    # exceeds the pool outright — swapping it out would
+                    # only readmit it into the same wall
+                    raise
+                self._preempt(v)
+                if v == i:
+                    return      # requester swapped out; row inactive now
+
     def _pre_tick(self, active):
         if self._has_paged:
+            # speculation writes pos..pos+K this tick, plain decode just pos
+            ahead = self.spec_k if self._draft is not None else 0
             for i in active:
-                self._ensure_block(i, int(self._pos[i]))
+                if self._slots[i] is None:
+                    continue           # preempted by an earlier iteration
+                p = int(self._pos[i])
+                for q in range(p, min(p + ahead + 1, self.capacity)):
+                    self._ensure_block_or_preempt(i, q)
+
+    # ------------------------------------------------ speculative decoding
+    def _rollback_blocks(self, i: int):
+        """Free speculative blocks past the accepted frontier: the cache
+        holds positions < pos[i], so any mapped block whose positions all
+        lie at >= pos[i] carries only rejected draft writes.  (Prompt and
+        shared-prefix blocks always start below pos, so only this tick's
+        speculative growth is ever dropped.)"""
+        keep = (int(self._pos[i]) - 1) // self.block_size
+        trow = self._tables[i]
+        for lb in np.flatnonzero(trow >= 0):
+            if lb > keep:
+                self.alloc.decref(int(trow[lb]))
+                trow[lb] = -1
+
+    def _make_spec(self):
+        """The one-jit speculative tick: K greedy draft steps with the
+        cheap params -> rewind the non-positional state -> one scanned
+        target verify pass over the K+1 candidate tokens -> on-device
+        accept counts + per-row state rollback.  Greedy rows emit
+        accepts+1 tokens whose values are bit-identical to accepts+1
+        sequential ``decode_step`` ticks (the verify scan IS decode_step's
+        math, and position masking hides the draft's paged writes);
+        sampled rows (temp > 0) fall back to one per-request-keyed draw
+        from the verify pass's first logits."""
+        model, with_ctx, K = self.model, self._with_ctx, self.spec_k
+        # per-leaf batch axes of the rollback-sensitive state, found
+        # structurally like cache_batch_axes
+        s2 = model.spec_state(self.model.init_cache(
+            2, self.capacity, abstract=True, paged=True,
+            block_size=self.block_size, num_blocks=self.num_blocks,
+            kv_bits=self.kv_bits))
+        s3 = model.spec_state(self.model.init_cache(
+            3, self.capacity, abstract=True, paged=True,
+            block_size=self.block_size, num_blocks=self.num_blocks,
+            kv_bits=self.kv_bits))
+        spec_axes = [next(i for i, (a, b) in enumerate(zip(x.shape, y.shape))
+                          if a != b) for x, y in zip(s2, s3)]
+
+        def tick(pp, tokens, cache, pos, temps, seeds, steps, block_tables):
+            params, draft = pp
+            B = tokens.shape[0]
+            state0 = model.spec_state(cache)
+
+            def dstep(carry, _):
+                tk, c, p = carry
+                lg, c = with_ctx(model.decode_step)(draft, tk, c, p,
+                                                    block_tables)
+                nt = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)
+                return (nt[:, None], c, p + 1), nt
+
+            (_, cache, _), drafted = jax.lax.scan(
+                dstep, (tokens, cache, jnp.asarray(pos)), None, length=K)
+            drafted = jnp.moveaxis(drafted, 0, 1)             # (B, K)
+            # rewind ring/recurrent state; paged pools rewind by clock
+            cache = model.with_spec_state(cache, state0)
+            seq = jnp.concatenate([tokens, drafted], axis=1)  # (B, K+1)
+            lgs, cache, snaps = with_ctx(model.decode_steps)(
+                params, seq, cache, pos, block_tables)
+            greedy = jnp.argmax(lgs, axis=-1).astype(jnp.int32)
+            # accepts = longest prefix where draft == target greedy;
+            # sampled rows take the non-speculative one-token path
+            eq = (drafted == greedy[:, :K]).astype(jnp.int32)
+            acc = jnp.cumprod(eq, axis=1).sum(axis=1)
+            acc = jnp.where(temps > 0, 0, acc)
+            sampled = _sample_tokens(lgs[:, 0], temps, seeds, steps)
+            bonus = jnp.where(
+                temps > 0, sampled,
+                jnp.take_along_axis(greedy, acc[:, None], axis=1)[:, 0])
+            cols = jnp.arange(K + 1)[None, :]
+            base = jnp.concatenate(
+                [drafted, jnp.zeros_like(drafted[:, :1])], axis=1)
+            tok_out = jnp.where(
+                cols < acc[:, None], base,
+                jnp.where(cols == acc[:, None], bonus[:, None], 0))
+            # roll each rollback-sensitive leaf back to its accepted step:
+            # snaps[t] is the state after consuming seq token t, so row b
+            # keeps snapshot index acc[b]
+            rows = jnp.arange(B)
+
+            def sel(stack, ax):
+                m = jnp.moveaxis(stack, ax + 1, 0)            # (B, K+1, ...)
+                return jnp.moveaxis(m[rows, acc], 0, ax)
+            cache = model.with_spec_state(
+                cache, [sel(s, ax) for s, ax in zip(snaps, spec_axes)])
+            return tok_out, acc, cache
+        return tick
+
+    def _tick(self):
+        """Speculative tick when a draft is configured: one fused
+        draft+verify dispatch emits 1..spec_k+1 tokens per live row, still
+        with a single host sync; rejected speculative blocks are freed and
+        the row clock rewinds to the accepted frontier."""
+        if self._draft is None:
+            return super()._tick()
+        active = self._active_slots()
+        if not active:
+            return
+        self._pre_tick(active)
+        active = self._active_slots()
+        if not active:
+            return
+        if self._spec_jit is None:
+            self._spec_jit = jax.jit(self._make_spec(), donate_argnums=(2,))
+        tok_out, acc, self._cache = self._spec_jit(
+            (self.params, self._draft),
+            jnp.asarray(self._next_tok[:, None]), self._cache,
+            jnp.asarray(self._pos), jnp.asarray(self._temps),
+            jnp.asarray(self._seeds), jnp.asarray(self._steps),
+            *self._decode_extra_args())
+        tok_out = np.asarray(tok_out)
+        acc = np.asarray(acc)                    # one sync with tok_out
+        now = time.perf_counter() - self._t0
+        self.ticks += 1
+        for i in active:
+            r = self._slots[i]
+            a = int(acc[i])
+            self.spec_drafted += self.spec_k
+            self.spec_accepted += a
+            for j in range(a + 1):
+                t = int(tok_out[i, j])
+                r.out.append(t)
+                r.token_times.append(now)
+                self._pos[i] += 1
+                self._next_tok[i] = t
+                self._steps[i] += 1
+                if self._finished_by(r, t, int(self._pos[i])):
+                    self._retire(i)
+                    break
+            if self._slots[i] is not None and self._has_paged:
+                self._rollback_blocks(i)
 
     def _decode_extra_args(self):
         # Bound the per-tick table view to the live logical depth: the decode

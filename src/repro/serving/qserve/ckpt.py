@@ -102,35 +102,50 @@ class _PlaneWriter:
         return entry
 
 
-def save(ckpt_dir: str, params, cfg, qcfg=None, *, extra: Optional[dict] = None
-         ) -> dict:
+def _write_tree(w: _PlaneWriter, params) -> dict:
+    """Append every leaf of ``params`` to the plane writer; returns the
+    manifest ``tensors`` section describing them."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_qt)
+    tensors = {}
+    for p, leaf in flat:
+        path = utils.path_str(p)
+        if _is_qt(leaf):
+            stack = list(leaf.planes[0].shape[:-2])
+            tensors[path] = {
+                "kind": "quantized",
+                "meta": qformat.qt_meta(leaf),
+                "stack": stack,
+                "outlier_count": int(leaf.out_vals.shape[-1]),
+                "planes": {name: w.write(arr)
+                           for name, arr in qformat.qt_entries(leaf)},
+            }
+        else:
+            tensors[path] = {"kind": "dense",
+                             "planes": {"data": w.write(leaf)}}
+    return tensors
+
+
+def save(ckpt_dir: str, params, cfg, qcfg=None, *,
+         extra: Optional[dict] = None, draft=None, draft_qcfg=None) -> dict:
     """Write ``params`` (dense leaves + packed QuantizedTensors) as a
     packed checkpoint under ``ckpt_dir``; returns the manifest dict.
+
+    ``draft`` (optional) is a second param tree of the *same architecture*
+    — typically a zero-calibration RTN pack of the target weights — whose
+    planes land in the same ``planes.bin`` after the target's, described
+    by a ``draft`` manifest section.  One checkpoint then serves both
+    roles of self-speculative decoding: ``load(dir)`` gives the verify
+    model, ``load(dir, which="draft")`` the proposer.
 
     The plane file is written first and the manifest is renamed into place
     last, so a directory with a readable manifest is always complete.
     """
     os.makedirs(ckpt_dir, exist_ok=True)
-    flat, _ = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_qt)
-    tensors = {}
     tmp_planes = os.path.join(ckpt_dir, PLANES_NAME + ".tmp")
     with open(tmp_planes, "wb") as f:
         w = _PlaneWriter(f)
-        for p, leaf in flat:
-            path = utils.path_str(p)
-            if _is_qt(leaf):
-                stack = list(leaf.planes[0].shape[:-2])
-                tensors[path] = {
-                    "kind": "quantized",
-                    "meta": qformat.qt_meta(leaf),
-                    "stack": stack,
-                    "outlier_count": int(leaf.out_vals.shape[-1]),
-                    "planes": {name: w.write(arr)
-                               for name, arr in qformat.qt_entries(leaf)},
-                }
-            else:
-                tensors[path] = {"kind": "dense",
-                                 "planes": {"data": w.write(leaf)}}
+        tensors = _write_tree(w, params)
+        draft_tensors = _write_tree(w, draft) if draft is not None else None
     os.replace(tmp_planes, os.path.join(ckpt_dir, PLANES_NAME))
 
     manifest = {
@@ -146,6 +161,13 @@ def save(ckpt_dir: str, params, cfg, qcfg=None, *, extra: Optional[dict] = None
         "method": qcfg.method if qcfg is not None else None,
         "tensors": tensors,
     }
+    if draft_tensors is not None:
+        manifest["draft"] = {
+            "qcfg": dataclasses.asdict(draft_qcfg)
+            if draft_qcfg is not None else None,
+            "method": draft_qcfg.method if draft_qcfg is not None else None,
+            "tensors": draft_tensors,
+        }
     if extra:
         manifest["extra"] = extra
     tmp = os.path.join(ckpt_dir, MANIFEST_NAME + ".tmp")
@@ -186,7 +208,19 @@ def load_manifest(ckpt_dir: str) -> dict:
     if size != pf.get("bytes"):
         raise CkptError(f"plane file truncated/corrupt: {size} B on disk "
                         f"vs {pf.get('bytes')} B in manifest")
-    for path, t in manifest.get("tensors", {}).items():
+    _validate_tensors(manifest.get("tensors", {}), size)
+    if "draft" in manifest:
+        try:
+            _validate_tensors(manifest["draft"]["tensors"], size)
+        except (KeyError, TypeError) as e:
+            raise CkptError(f"malformed draft section: {e!r}") from e
+    return manifest
+
+
+def _validate_tensors(tensors: dict, size: int):
+    """Validate one manifest ``tensors`` section against the plane-file
+    size (every entry self-consistent and inside the file)."""
+    for path, t in tensors.items():
         try:
             kind, planes = t["kind"], t["planes"]
             if kind not in ("dense", "quantized"):
@@ -209,7 +243,6 @@ def load_manifest(ckpt_dir: str) -> dict:
         except (KeyError, TypeError) as e:
             raise CkptError(
                 f"malformed manifest entry {path}: {e!r}") from e
-    return manifest
 
 
 def _required_planes(t: dict) -> set:
@@ -254,7 +287,23 @@ def quant_config(manifest: dict):
 # abstract tree (no plane reads)
 # --------------------------------------------------------------------------
 
-def abstract_params(manifest: dict):
+def has_draft(manifest: dict) -> bool:
+    """True when the checkpoint packs draft planes beside the target."""
+    return "draft" in manifest
+
+
+def _tensor_section(manifest: dict, which: str) -> dict:
+    if which == "target":
+        return manifest["tensors"]
+    if which == "draft":
+        if "draft" not in manifest:
+            raise CkptError("checkpoint has no draft planes (re-quantize "
+                            "with --draft to pack a speculative drafter)")
+        return manifest["draft"]["tensors"]
+    raise ValueError(f"which must be 'target' or 'draft', got {which!r}")
+
+
+def abstract_params(manifest: dict, which: str = "target"):
     """ShapeDtypeStruct tree of the checkpoint, from the manifest alone."""
     def one(t):
         sds = {name: jax.ShapeDtypeStruct(tuple(e["shape"]),
@@ -264,7 +313,8 @@ def abstract_params(manifest: dict):
             return sds["data"]
         return qformat.qt_from_entries(sds, t["meta"])
     return _tree_from_paths(
-        [(path, one(t)) for path, t in manifest["tensors"].items()])
+        [(path, one(t))
+         for path, t in _tensor_section(manifest, which).items()])
 
 
 # --------------------------------------------------------------------------
@@ -278,7 +328,8 @@ def _plane_view(mm, entry):
         .reshape(tuple(entry["shape"]))
 
 
-def load(ckpt_dir: str, plan=None, *, manifest: Optional[dict] = None):
+def load(ckpt_dir: str, plan=None, *, manifest: Optional[dict] = None,
+         which: str = "target"):
     """Load a packed checkpoint into a servable param tree.
 
     Without a plan every plane is copied once memmap -> default device.
@@ -286,15 +337,19 @@ def load(ckpt_dir: str, plan=None, *, manifest: Optional[dict] = None):
     the corresponding fp kernel (``param_shardings`` over the abstract
     tree) and is built shard-by-shard via ``plan.place`` — per device only
     its own slice of the memmap is read.
+
+    ``which="draft"`` loads the co-packed speculative-draft tree instead
+    of the calibrated target (CkptError if the checkpoint has none).
     """
     manifest = manifest or load_manifest(ckpt_dir)
+    tensors = _tensor_section(manifest, which)
     pf = manifest["plane_file"]
     mm = np.memmap(os.path.join(ckpt_dir, pf["name"]), dtype=np.uint8,
                    mode="r")
 
     shardings = {}
     if plan is not None:
-        sds = abstract_params(manifest)
+        sds = abstract_params(manifest, which)
         sh_tree = plan.param_shardings(sds)
         flat, _ = jax.tree_util.tree_flatten_with_path(sh_tree,
                                                        is_leaf=_is_qt)
@@ -319,4 +374,4 @@ def load(ckpt_dir: str, plan=None, *, manifest: Optional[dict] = None):
         return qformat.qt_from_entries(arrays, t["meta"])
 
     return _tree_from_paths(
-        [(path, one(path, t)) for path, t in manifest["tensors"].items()])
+        [(path, one(path, t)) for path, t in tensors.items()])

@@ -175,6 +175,47 @@ def _small_ckpt(tmp_path):
     return d
 
 
+def test_draft_planes_roundtrip_and_speculative_serve(tmp_path):
+    """``--draft`` co-packing: the draft planes ride the same planes.bin,
+    load back bit-for-bit under ``which="draft"``, and the loaded pair
+    serves speculatively with greedy output identical to target-only."""
+    from repro.serving.engine import PagedEngine
+
+    params = build_model(CFG).init(KEY)
+    tq = QuantConfig(wbits=4, group_size=16, method="rtn")
+    dq = QuantConfig(wbits=2, group_size=16, method="rtn")
+    qp, _ = quantize_params_rtn(params, tq)
+    dp, _ = quantize_params_rtn(params, dq)
+    d = str(tmp_path / "ck")
+    man = qckpt.save(d, qp, CFG, tq, draft=dp, draft_qcfg=dq)
+    assert qckpt.has_draft(man)
+    assert man["draft"]["qcfg"]["wbits"] == 2
+    target = qckpt.load(d)
+    draft = qckpt.load(d, which="draft")
+    _assert_trees_equal(target, qp)
+    _assert_trees_equal(draft, dp)
+
+    def outs(dr):
+        eng = PagedEngine(CFG, target, max_batch=2, capacity=48,
+                          block_size=8, draft=dr, spec_k=3)
+        rs = [eng.submit(np.arange(1, 9), max_tokens=6),
+              eng.submit(np.arange(3, 11), max_tokens=5)]
+        eng.run()
+        return [r.out for r in rs]
+
+    assert outs(draft) == outs(None)
+
+
+def test_missing_draft_section_rejected(tmp_path):
+    """Checkpoints without draft planes report has_draft False and raise
+    the re-quantize hint on ``which="draft"``."""
+    d = _small_ckpt(tmp_path)
+    man = qckpt.load_manifest(d)
+    assert not qckpt.has_draft(man)
+    with pytest.raises(qckpt.CkptError, match="no draft planes"):
+        qckpt.load(d, which="draft")
+
+
 def test_version_mismatch_rejected(tmp_path):
     d = _small_ckpt(tmp_path)
     mpath = os.path.join(d, qckpt.MANIFEST_NAME)

@@ -1,0 +1,334 @@
+"""Latency-shaped scheduling: speculative decode, chunked prefill, preemption.
+
+Covers self-speculative greedy bit-identity against target-only decode for
+all four model families, the perfect-draft tick bound, per-request sampling
+determinism under co-batching, chunked-prefill output equality + decode
+interleaving, requeue-with-backoff under a full pool, preemption/swap-out
+round trips, SLO-class admission ordering, and stripe-constrained
+``PrefixCache.evict_one`` eviction.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.serving.engine import (SLO_RANK, BlockAllocator, Engine,
+                                  PagedEngine, PrefixCache)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+KEY = jax.random.PRNGKey(0)
+
+
+def _mixed(eng, n=4, **kw):
+    prompts = [np.arange(1, 9), np.arange(3, 15), np.arange(1, 9),
+               np.arange(2, 7)][:n]
+    budgets = [6, 4, 7, 5][:n]
+    return [eng.submit(p, max_tokens=mt, **kw)
+            for p, mt in zip(prompts, budgets)]
+
+
+# ------------------------------------------------- speculative bit-identity
+@pytest.mark.parametrize("arch", [None, "gemma3-27b", "zamba2-7b",
+                                  "rwkv6-3b"])
+def test_spec_greedy_bit_identical_families(arch):
+    """Greedy speculative decode == target-only decode, bitwise, for the
+    uniform / grouped-local / hybrid / ssm families.  The draft is a
+    *different* model (fresh init), so acceptance is low — bit-identity
+    must hold regardless of what the draft proposes."""
+    cfg = CFG if arch is None else get_smoke(arch)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    draft = m.init(jax.random.PRNGKey(7))
+    et = PagedEngine(cfg, params, max_batch=2, capacity=48, block_size=8)
+    es = PagedEngine(cfg, params, max_batch=2, capacity=48, block_size=8,
+                     draft=draft, spec_k=3)
+    rt, rs = _mixed(et), _mixed(es)
+    et.run()
+    es.run()
+    for a, b in zip(rt, rs):
+        assert a.done and b.done
+        assert a.out == b.out, (a.rid, a.out, b.out)
+    assert es.spec_drafted > 0
+
+
+def test_spec_perfect_draft_accepts_everything():
+    """draft == target means every proposal verifies: each tick emits
+    spec_k + 1 tokens, so the run takes ~1/(spec_k+1) the ticks and the
+    acceptance counter reflects full accepts."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    et = PagedEngine(CFG, params, max_batch=1, capacity=64, block_size=8)
+    es = PagedEngine(CFG, params, max_batch=1, capacity=64, block_size=8,
+                     draft=params, spec_k=3)
+    a = et.submit(np.arange(1, 9), max_tokens=13)
+    b = es.submit(np.arange(1, 9), max_tokens=13)
+    et.run()
+    es.run()
+    assert a.out == b.out
+    # 12 post-admission tokens at 4/tick -> 3 ticks (vs 12 target-only)
+    assert es.ticks <= -(-12 // 4) < et.ticks
+    assert es.spec_accepted == es.spec_drafted > 0
+
+
+def test_spec_rollback_frees_speculative_blocks():
+    """Rejected draft tokens must not leak pool blocks: after a run with a
+    disagreeing draft, every block is back in the free pool."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    es = PagedEngine(CFG, params, max_batch=2, capacity=48, block_size=8,
+                     draft=m.init(jax.random.PRNGKey(7)), spec_k=4,
+                     share_prefixes=False)
+    rs = _mixed(es)
+    es.run()
+    assert all(r.done for r in rs)
+    assert es.alloc.blocks_in_use == 0
+
+
+# --------------------------------------------- per-request sampling streams
+def test_sampled_output_independent_of_cobatching():
+    """A seeded temp>0 request must emit the same tokens whether it runs
+    alone or co-batched with other traffic: draws are keyed by
+    (request.seed, request.step), not by engine-global key splits."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    prompt = np.arange(1, 9)
+
+    solo = PagedEngine(CFG, params, max_batch=4, capacity=48, block_size=8)
+    r_solo = solo.submit(prompt, max_tokens=8, temperature=0.8, seed=123)
+    solo.run()
+
+    busy = PagedEngine(CFG, params, max_batch=4, capacity=48, block_size=8)
+    noise = [busy.submit(np.arange(2, 11), max_tokens=10, temperature=0.5,
+                         seed=i) for i in range(3)]
+    r_busy = busy.submit(prompt, max_tokens=8, temperature=0.8, seed=123)
+    busy.run()
+
+    assert r_solo.out == r_busy.out
+    assert all(n.done for n in noise)
+    # and the draw stream is genuinely seeded: a different seed diverges
+    other = PagedEngine(CFG, params, max_batch=4, capacity=48, block_size=8)
+    r_other = other.submit(prompt, max_tokens=8, temperature=0.8, seed=124)
+    other.run()
+    assert r_other.out != r_solo.out
+
+
+def test_sampled_requests_reproduce_across_engines():
+    """Default-seeded sampling reproduces across engine instances fed the
+    same submit sequence (seed derives from (engine seed, rid))."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    outs = []
+    for _ in range(2):
+        eng = PagedEngine(CFG, params, max_batch=2, capacity=48,
+                          block_size=8, seed=5)
+        rs = _mixed(eng, 3, temperature=0.7)
+        eng.run()
+        outs.append([r.out for r in rs])
+    assert outs[0] == outs[1]
+
+
+# ------------------------------------------------------------ chunked prefill
+def test_chunked_prefill_matches_blocking():
+    """A long prompt admitted chunk-by-chunk produces bit-identical output
+    to blocking admission, and the chunks really are incremental."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, CFG.vocab, size=46)
+    eb = PagedEngine(CFG, params, max_batch=2, capacity=64, block_size=8)
+    ec = PagedEngine(CFG, params, max_batch=2, capacity=64, block_size=8,
+                     prefill_chunk=16)
+    a = eb.submit(prompt, max_tokens=6)
+    b = ec.submit(prompt, max_tokens=6)
+    eb.run()
+    ec.run()
+    assert a.out == b.out, (a.out, b.out)
+    assert ec.chunk_steps >= 3                    # 46 tokens / 16-chunks
+
+
+def test_chunked_prefill_interleaves_decode():
+    """A short interactive request submitted alongside a long prompt
+    finishes *during* the long prompt's chunked prefill — the property
+    blocking admission cannot provide."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    rng = np.random.default_rng(4)
+    long_p = rng.integers(1, CFG.vocab, size=48)
+    eng = PagedEngine(CFG, params, max_batch=2, capacity=64, block_size=8,
+                      prefill_chunk=16)
+    r_long = eng.submit(long_p, max_tokens=4)
+    r_short = eng.submit(np.arange(1, 7), max_tokens=2)
+    eng.run()
+    assert r_long.done and r_short.done
+    # the short request's whole life fits before the long prompt's first
+    # token: its decode ticks ran between prefill chunks
+    assert r_short.token_times[-1] < r_long.token_times[0]
+    assert eng.chunk_steps >= 3
+
+
+def test_chunked_prefill_prefix_sharing_still_works():
+    """Chunked admission registers the computed blocks: a second identical
+    prompt skips its full blocks via the prefix cache."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(1, CFG.vocab, size=40)
+    eng = PagedEngine(CFG, params, max_batch=1, capacity=64, block_size=8,
+                      prefill_chunk=16)
+    a = eng.submit(prompt, max_tokens=3)
+    eng.run()
+    b = eng.submit(prompt, max_tokens=3)
+    eng.run()
+    assert a.out == b.out
+    assert eng.prefill_tokens_skipped > 0
+
+
+# ----------------------------------------------- pool pressure: requeue path
+def test_submit_under_full_pool_requeues_and_completes():
+    """Two same-class requests against a pool that fits only one: the
+    second is requeued with backoff (no RuntimeError escapes run()) and
+    completes after the first retires."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    # 5 usable blocks; each request needs 3 (17-token prompt + decode),
+    # so only one fits at a time
+    eng = PagedEngine(CFG, params, max_batch=2, capacity=32, block_size=8,
+                      num_blocks=6, share_prefixes=False)
+    rng = np.random.default_rng(6)
+    a = eng.submit(rng.integers(1, CFG.vocab, size=17), max_tokens=6)
+    b = eng.submit(rng.integers(1, CFG.vocab, size=17), max_tokens=6)
+    eng.run()
+    assert a.done and b.done
+    assert eng.requeues >= 1
+    assert eng.alloc.blocks_in_use == 0
+
+
+# --------------------------------------------------- preemption / swap-out
+def test_preemption_swap_roundtrip_bit_identical():
+    """Decode growth under pool saturation swaps the batch-class slot out
+    to host memory and resumes it later; its output must match an
+    uncontended run bit-for-bit (the swap round trip is exact)."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    rng = np.random.default_rng(8)
+    p_batch = rng.integers(1, CFG.vocab, size=15)
+    p_inter = rng.integers(1, CFG.vocab, size=15)
+
+    free = PagedEngine(CFG, params, max_batch=2, capacity=32, block_size=8,
+                       share_prefixes=False)
+    fb = free.submit(p_batch, max_tokens=14, slo="batch")
+    fi = free.submit(p_inter, max_tokens=14, slo="interactive")
+    free.run()
+
+    # 5 usable blocks; both requests grow to 29 positions = 4 blocks each
+    tight = PagedEngine(CFG, params, max_batch=2, capacity=32, block_size=8,
+                        num_blocks=6, share_prefixes=False)
+    tb = tight.submit(p_batch, max_tokens=14, slo="batch")
+    ti = tight.submit(p_inter, max_tokens=14, slo="interactive")
+    tight.run()
+
+    assert tb.out == fb.out, (tb.out, fb.out)
+    assert ti.out == fi.out, (ti.out, fi.out)
+    assert tight.preemptions >= 1                 # batch slot made way
+    assert tight.swap_ins >= 1                    # and was resumed
+    assert tight.alloc.blocks_in_use == 0
+
+
+def test_preemption_prefers_batch_class():
+    """The preemption victim is the batch-class slot even when the
+    interactive slot was admitted more recently."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    eng = PagedEngine(CFG, params, max_batch=2, capacity=32, block_size=8,
+                      share_prefixes=False)
+    rb = eng.submit(np.arange(1, 9), max_tokens=8, slo="batch")
+    ri = eng.submit(np.arange(2, 10), max_tokens=8, slo="interactive")
+    eng._admit()
+    slot_of = {eng._slots[i].rid: i for i in range(2) if eng._slots[i]}
+    assert eng._preempt_victim() == slot_of[rb.rid]
+    # strictly-lower-priority filter: nothing preemptible at batch rank
+    assert eng._preempt_victim(min_rank=SLO_RANK["batch"] + 1) is None
+
+
+# ------------------------------------------------------ SLO-ordered admission
+def test_slo_admission_order():
+    """With one slot, a later-submitted interactive request is admitted
+    before the earlier batch request (SLO order beats FIFO across
+    classes), and both complete."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    eng = PagedEngine(CFG, params, max_batch=1, capacity=32, block_size=8)
+    rb = eng.submit(np.arange(1, 9), max_tokens=3, slo="batch")
+    ri = eng.submit(np.arange(2, 10), max_tokens=3, slo="interactive")
+    eng.run()
+    assert rb.done and ri.done
+    assert ri._admit_seq < rb._admit_seq
+
+
+# --------------------------------------- PrefixCache.evict_one under stripes
+def _chain(alloc, cache, prompt, stripe=0):
+    """Simulate an admitted-and-retired request: allocate the chain's
+    blocks on ``stripe``, register them, drop the request's own refs."""
+    bs = cache.bs
+    trow = np.full(8, -1, np.int32)
+    for j in range(len(prompt) // bs):
+        trow[j] = alloc.alloc(stripe)
+    cache.insert(np.asarray(prompt, np.int32), trow, 0, len(prompt) // bs)
+    for j in range(len(prompt) // bs):
+        alloc.decref(int(trow[j]))
+    return [int(b) for b in trow[trow >= 0]]
+
+
+def test_evict_one_stripe_constrained():
+    """evict_one(stripe=t) only reclaims blocks backed by partition t —
+    the flash-path invariant: a stripe-t allocation failure must not be
+    "fixed" by freeing another shard's slab."""
+    alloc = BlockAllocator(8, 4, stripes=2)
+    cache = PrefixCache(alloc, 4)
+    b0 = _chain(alloc, cache, np.arange(100, 104), stripe=0)  # older LRU
+    b1 = _chain(alloc, cache, np.arange(200, 204), stripe=1)
+    assert alloc.stripe_of(b0[0]) == 0 and alloc.stripe_of(b1[0]) == 1
+    # stripe-1 eviction must skip the older stripe-0 entry
+    assert cache.evict_one(stripe=1)
+    assert b1[0] in alloc.free[1] and b0[0] not in alloc.free[0]
+    # stripe-0 then reclaims its own
+    assert cache.evict_one(stripe=0)
+    assert b0[0] in alloc.free[0]
+    assert not cache.evict_one(stripe=0)          # nothing left anywhere
+    assert not cache.evict_one(stripe=1)
+
+
+def test_evict_one_leaf_first_under_stripes():
+    """A parent block with a registered child is never evicted before the
+    child, per stripe: eviction walks leaf-first so a surviving entry's
+    whole prefix chain stays valid."""
+    alloc = BlockAllocator(8, 4, stripes=2)
+    cache = PrefixCache(alloc, 4)
+    blocks = _chain(alloc, cache, np.arange(1, 9), stripe=1)   # 2-block chain
+    assert len(blocks) == 2
+    parent, child = blocks
+    assert cache.evict_one(stripe=1)
+    assert child in alloc.free[1]                 # leaf went first
+    assert parent not in alloc.free[1]
+    assert cache.evict_one(stripe=1)
+    assert parent in alloc.free[1]
+
+
+def test_evict_one_skips_live_blocks_per_stripe():
+    """Entries whose block a live request still references (allocator
+    refcount > 1) are not eviction candidates on any stripe."""
+    alloc = BlockAllocator(8, 4, stripes=2)
+    cache = PrefixCache(alloc, 4)
+    bs = cache.bs
+    trow = np.full(8, -1, np.int32)
+    trow[0] = alloc.alloc(1)
+    prompt = np.arange(50, 54, dtype=np.int32)
+    cache.insert(prompt, trow, 0, 1)
+    # the "request" still holds its ref -> refcount 2 -> not evictable
+    assert not cache.evict_one(stripe=1)
+    alloc.decref(int(trow[0]))                    # request retires
+    assert cache.evict_one(stripe=1)
