@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro import obs as obs_mod
 from repro import utils
 from repro.core import hessian as hess
 from repro.core import qformat
@@ -85,10 +86,14 @@ def bench_calib_blocks(ctx=None):
                     f"cols_per_s={d_in / (us / 1e6):.0f}")
 
 
-def paged_attn_report():
+def paged_attn_report(registry=None):
     """Timing + bytes/token for the paged decode: bounded vs full tables,
     predicted fused-vs-unfused traffic (fp16 and int8 KV), achieved bytes
-    of the compiled fallback lowering."""
+    of the compiled fallback lowering.  Achieved bytes are measured via
+    ``analysis.record_achieved_bytes`` so the report rows and the
+    ``kernel_achieved_bytes{kernel=...}`` gauge family of ``registry``
+    share one measurement."""
+    registry = registry or obs_mod.MetricsRegistry()
     from repro.serving.qserve import kvquant as KQ
     rng = np.random.default_rng(3)
     B, bs, live, mb, KV, H, Dh = 4, 16, 8, 32, 4, 8, 64
@@ -127,18 +132,24 @@ def paged_attn_report():
             "fp16": analysis.paged_attn_bytes(1, live, bs, KV, Dh, H, 16),
             "int8": analysis.paged_attn_bytes(1, live, bs, KV, Dh, H, 8)},
         "achieved_bytes_per_token": {
-            "fallback_full_table": analysis.achieved_bytes(
+            "fallback_full_table": analysis.record_achieved_bytes(
+                registry, "paged_attn/fallback_full_table",
                 fp, q, bt_full) / B,
-            "fallback_live_table": analysis.achieved_bytes(
+            "fallback_live_table": analysis.record_achieved_bytes(
+                registry, "paged_attn/fallback_live_table",
                 fp, q, bt_live) / B,
-            "fallback_live_table_int8": analysis.achieved_bytes(
+            "fallback_live_table_int8": analysis.record_achieved_bytes(
+                registry, "paged_attn/fallback_live_table_int8",
                 i8, q, bt_live) / B},
     }
 
 
-def moe_dequant_report():
+def moe_dequant_report(registry=None):
     """Timing + bytes for the stacked-expert contraction: per-expert scan
-    over the compacted routed set vs the dense all-experts reconstruction."""
+    over the compacted routed set vs the dense all-experts reconstruction.
+    Achieved bytes land in ``registry``'s ``kernel_achieved_bytes`` gauges
+    (see ``paged_attn_report``)."""
+    registry = registry or obs_mod.MetricsRegistry()
     from repro.configs.base import QuantConfig
     from repro.kernels.moe_dequant.ref import moe_dequant_matmul_ref
     from repro.serving.quantized import _quantize_leaf
@@ -173,8 +184,10 @@ def moe_dequant_report():
         "predicted_bytes": analysis.moe_dequant_bytes(Er, E, T, K, N,
                                                       bits, gs),
         "achieved_bytes": {
-            "scan_routed": analysis.achieved_bytes(routed, xe_r),
-            "dense_all_experts": analysis.achieved_bytes(dense, xe)},
+            "scan_routed": analysis.record_achieved_bytes(
+                registry, "moe_dequant/scan_routed", routed, xe_r),
+            "dense_all_experts": analysis.record_achieved_bytes(
+                registry, "moe_dequant/dense_all_experts", dense, xe)},
     }
 
 
@@ -210,9 +223,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
                     help="write the serving-kernel roofline report (JSON)")
+    ap.add_argument("--metrics-out", default=None, metavar="metrics.prom",
+                    help="write the kernel_achieved_bytes gauges as "
+                         "Prometheus text exposition")
     args = ap.parse_args(argv)
-    pa = paged_attn_report()
-    moe = moe_dequant_report()
+    reg = obs_mod.MetricsRegistry()
+    pa = paged_attn_report(reg)
+    moe = moe_dequant_report(reg)
     ratios = {
         "paged_attn_fp16": pa["predicted_bytes_per_token"]["fp16"]["ratio"],
         "paged_attn_int8": pa["predicted_bytes_per_token"]["int8"]["ratio"],
@@ -229,6 +246,9 @@ def main(argv=None):
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
         print(f"# wrote {args.out}")
+    if args.metrics_out:
+        obs_mod.prom.write(args.metrics_out, reg)
+        print(f"# metrics -> {args.metrics_out}")
     if not ok:
         print("# roofline tripwire: fused kernel predicts > "
               f"{TRIPWIRE_RATIO}x unfused bytes", file=sys.stderr)

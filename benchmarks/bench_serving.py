@@ -57,6 +57,7 @@ import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
 
+from repro import obs as obs_mod                            # noqa: E402
 from repro.configs import get_smoke                         # noqa: E402
 from repro.configs.base import QuantConfig                  # noqa: E402
 from repro.models import build_model                        # noqa: E402
@@ -88,6 +89,11 @@ MAX_CHUNKED_P99_RATIO = 0.50
 # least this factor on the shared-prefix workload (each tick emits up to
 # spec_k+1 tokens per row for one fused dispatch + one host sync)
 MIN_SPEC_SPEEDUP = 1.20
+# telemetry must be ~free: the full-obs paged engine must keep at least
+# this fraction of the no-op-obs engine's tokens/sec on the uniform
+# workload (interleaved best-of rounds; the instrumented path costs a few
+# dict lookups and float ops per tick, far under toy-scale wall noise)
+OBS_OVERHEAD_FLOOR = 0.95
 
 
 def workload(cfg, n_requests, seed=0):
@@ -134,40 +140,75 @@ def workload_adversarial(cfg, n_chat=64, long_len=2048, seed=0):
     return reqs
 
 
-def token_gap_stats(handles):
-    """Per-SLO-class inter-token latency from ``Request.token_times``
-    (the wall offsets the engine stamps on every emitted token)."""
-    by = {}
-    for r in handles:
-        if len(r.token_times) >= 2:
-            by.setdefault(r.slo, []).extend(np.diff(r.token_times))
-    return {slo: {"n_gaps": len(g),
-                  "p50_ms": float(np.quantile(g, 0.50)) * 1e3,
-                  "p99_ms": float(np.quantile(g, 0.99)) * 1e3,
-                  "max_ms": float(np.max(g)) * 1e3}
-            for slo, g in sorted(by.items())}
+def _fam_total(m, name, **sel):
+    """Sum of a counter family's child values, optionally filtered to the
+    children whose labels match ``sel``.  0 when the family is absent or
+    never got children (e.g. spec counters on a non-speculative engine)."""
+    fam = m.get(name)
+    if fam is None:
+        return 0
+    total = 0.0
+    for vals, c in fam.children().items():
+        d = dict(zip(fam.label_names, vals))
+        if all(d.get(k) == str(v) for k, v in sel.items()):
+            total += c.value
+    return int(total)
+
+
+def _latency_stats(m):
+    """(mean_s, p99_s) across the request-latency histogram's SLO children
+    (exact quantiles: at bench scale the sample buffer holds every
+    observation)."""
+    kids = [h for h in
+            m.get("engine_request_latency_seconds").children().values()
+            if h.count]
+    n = sum(h.count for h in kids)
+    mean = sum(h.sum for h in kids) / max(1, n)
+    p99 = max((h.quantile(0.99) for h in kids), default=0.0)
+    return mean, p99
+
+
+def token_gap_stats(metrics):
+    """Per-SLO-class inter-token latency from the engine's
+    ``engine_inter_token_seconds`` histogram family — the same gaps the
+    engine observes as it stamps ``Request.token_times``, read back as
+    exact sample quantiles instead of re-diffed by hand here."""
+    out = {}
+    for (slo,), h in sorted(
+            metrics.get("engine_inter_token_seconds").children().items()):
+        if h.count:
+            out[slo] = {"n_gaps": int(h.count),
+                        "p50_ms": h.quantile(0.50) * 1e3,
+                        "p99_ms": h.quantile(0.99) * 1e3,
+                        "max_ms": h.max * 1e3}
+    return out
 
 
 def run_sched(eng, reqs):
-    """Serve ``(prompt, max_tokens, slo)`` triples; return (stats, outs)."""
-    ticks0 = getattr(eng, "ticks", 0)
-    sd0, sa0 = eng.spec_drafted, eng.spec_accepted
-    cs0, pe0 = eng.chunk_steps, eng.preemptions
+    """Serve ``(prompt, max_tokens, slo)`` triples; return (stats, outs).
+    All accounting reads the engine's own MetricsRegistry: the registry
+    is reset going in, so every counter/histogram reads as this pass's
+    delta — no attribute-diff bookkeeping."""
+    m = eng.obs.metrics
+    m.reset()
     handles = [eng.submit(p, max_tokens=b, slo=s) for p, b, s in reqs]
-    t0 = time.perf_counter()
     eng.run()
-    wall = time.perf_counter() - t0
-    toks = sum(len(r.out) for r in handles)
+    wall = m.get("engine_run_seconds").value
+    toks = int(m.get("engine_tokens_total").value)
     return {
         "wall_s": wall,
         "generated_tokens": toks,
         "tokens_per_s": toks / wall,
-        "ticks": getattr(eng, "ticks", 0) - ticks0,
-        "chunk_steps": eng.chunk_steps - cs0,
-        "preemptions": eng.preemptions - pe0,
-        "spec_drafted": eng.spec_drafted - sd0,
-        "spec_accepted": eng.spec_accepted - sa0,
-        "token_gap_ms": token_gap_stats(handles),
+        "ticks": _fam_total(m, "engine_ticks_total"),
+        "chunk_steps": _fam_total(m, "engine_sched_events_total",
+                                  event="chunk"),
+        "preemptions": _fam_total(m, "engine_sched_events_total",
+                                  event="preempt"),
+        "spec_drafted": _fam_total(m, "engine_spec_tokens_total",
+                                   kind="drafted"),
+        "spec_accepted": _fam_total(m, "engine_spec_tokens_total",
+                                    kind="accepted"),
+        "token_gap_ms": token_gap_stats(m),
     }, [list(r.out) for r in handles]
 
 
@@ -304,28 +345,29 @@ def kv_bytes_per_request(eng):
 
 
 def run_workload(eng, reqs):
-    ticks0 = getattr(eng, "ticks", 0)
-    skip0 = getattr(eng, "prefill_tokens_skipped", 0)
-    comp0 = getattr(eng, "prefill_tokens_computed", 0)
-    handles = [eng.submit(p, max_tokens=b) for p, b in reqs]
-    t0 = time.perf_counter()
+    """One timed pass; accounting comes from the engine's MetricsRegistry
+    (reset going in, so every value is this pass's delta)."""
+    m = eng.obs.metrics
+    m.reset()
+    for p, b in reqs:
+        eng.submit(p, max_tokens=b)
     eng.run()
-    wall = time.perf_counter() - t0
-    toks = sum(len(r.out) for r in handles)
-    lats = sorted(r.finish_wall for r in handles)
+    wall = m.get("engine_run_seconds").value
+    toks = int(m.get("engine_tokens_total").value)
+    lat_mean, lat_p99 = _latency_stats(m)
     kv_dense, kv_paged = kv_bytes_split(eng)
     return {
         "kv_paged_bytes_per_request": kv_paged,
         "wall_s": wall,
         "generated_tokens": toks,
         "tokens_per_s": toks / wall,
-        "latency_mean_s": float(np.mean(lats)),
-        "latency_p99_s": float(np.quantile(lats, 0.99)),
-        "ticks": getattr(eng, "ticks", 0) - ticks0 or None,
+        "latency_mean_s": lat_mean,
+        "latency_p99_s": lat_p99,
+        "ticks": _fam_total(m, "engine_ticks_total") or None,
         "prefill_tokens_skipped":
-            getattr(eng, "prefill_tokens_skipped", 0) - skip0,
+            _fam_total(m, "engine_prefill_tokens_total", kind="skipped"),
         "prefill_tokens_computed":
-            getattr(eng, "prefill_tokens_computed", 0) - comp0,
+            _fam_total(m, "engine_prefill_tokens_total", kind="computed"),
         "kv_bytes_per_request": kv_dense + kv_paged,
     }
 
@@ -375,6 +417,41 @@ def bench_group(named_makers, reqs, rounds=3):
     for name, _ in engines:
         _print_cell(name, best[name])
     return best
+
+
+def bench_obs_overhead(cfg, params, args, results, regressed, reqs):
+    """The no-op-mode tripwire: the same paged engine with full telemetry
+    (default obs) vs the shared no-op bundle (``obs_mod.OFF``).  The off
+    engine's registry is the null object, so both cells count tokens from
+    the request handles and time ``run()`` directly — an identical
+    measurement that depends on neither registry."""
+    def mk(obs=None):
+        return PagedEngine(cfg, params, max_batch=args.max_batch,
+                           capacity=args.capacity,
+                           block_size=args.block_size, obs=obs)
+
+    def raw_pass(eng):
+        handles = [eng.submit(p, max_tokens=b) for p, b in reqs]
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        return sum(len(r.out) for r in handles) / wall
+
+    engines = [("obs_on", mk()), ("obs_off", mk(obs_mod.OFF))]
+    for _, eng in engines:
+        raw_pass(eng)                                       # warmup/compile
+    best = {name: 0.0 for name, _ in engines}
+    for _ in range(3):            # interleaved rounds, like bench_group
+        for name, eng in engines:
+            best[name] = max(best[name], raw_pass(eng))
+    ratio = best["obs_on"] / best["obs_off"]
+    results["cells"]["obs_overhead_ratio"] = ratio
+    print(f"[bench_serving] obs overhead: {best['obs_on']:8.1f} tok/s on vs "
+          f"{best['obs_off']:8.1f} tok/s off ({ratio:.2f}x)")
+    if ratio < OBS_OVERHEAD_FLOOR:
+        regressed.append("obs_overhead")
+        print(f"[bench_serving] FAIL: obs-on tokens/sec {ratio:.2f}x "
+              f"obs-off (< {OBS_OVERHEAD_FLOOR})")
 
 
 def bench_quantized(cfg, params, args, results, regressed, quantized=None):
@@ -552,6 +629,8 @@ def main(argv=None):
         print(f"[bench_serving] FAIL: prefix sharing skipped only "
               f"{skip_frac:.0%} of prefill tokens "
               f"(< {MIN_PREFIX_SKIP_FRACTION:.0%})")
+
+    bench_obs_overhead(cfg, params, args, results, regressed, reqs)
 
     if not args.smoke:   # full run: quantized + scheduling sections too
         bench_quantized(cfg, params, args, results, regressed, quantized)

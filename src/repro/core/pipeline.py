@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro import utils
 from repro.configs.base import QuantConfig
 from repro.core import billm as bl
@@ -273,25 +274,60 @@ def _calibrate_kernel(W, H, qcfg: QuantConfig):
 
 def quantize_model(model, params, batches, qcfg: QuantConfig, *,
                    sequential: bool = True, ckpt_dir: Optional[str] = None,
-                   dist_ctx=None, log: Callable = print):
+                   dist_ctx=None, log: Callable = print, obs=None):
     """Run Algorithm 1 over a uniform-stacked model.
 
     ``dist_ctx`` (optional ``repro.dist.ctx.DistCtx``) shards the Phase-1
     calibration forward/backward over the mesh's data axes; the per-kernel
     Phase-2 solves are unchanged (they are tiny relative to Phase 1).
 
+    ``obs`` (optional ``repro.obs.Obs``) records pipeline_* metrics
+    (per-layer wall split into hessian vs solve, per-kernel fake-quant
+    MSE, resume progress) and layer/kernel trace spans; the ``log``
+    callback is kept for BC and every message it receives is mirrored as
+    a structured trace event.  Defaults to the no-op bundle.
+
     Returns (params with fake-quant weights, {(<layer>, <name>): LayerResult}).
     """
     if qcfg.oac_grads not in ("precompute", "sequential"):
         raise ValueError(f"unknown oac_grads {qcfg.oac_grads!r}; "
                          "expected 'precompute' or 'sequential'")
+    ob = obs_mod.resolve(obs, default="off")
+    M, tr = ob.metrics, ob.tracer
+    tr.name_process(3, "pipeline")
+    m_phase = M.histogram("pipeline_phase_seconds", obs_mod.LATENCY_BUCKETS,
+                          "per-layer wall split (hessian | solve)",
+                          labels=("phase",))
+    m_err = M.gauge("pipeline_quant_error",
+                    "latest per-kernel fake-quant MSE", labels=("kernel",))
+    m_done = M.gauge("pipeline_layers_done", "layers fully calibrated")
+    m_total = M.gauge("pipeline_layers_total", "layers to calibrate")
+    m_kern = M.counter("pipeline_kernels_total",
+                       "layer-kernels by source (computed | restored)",
+                       labels=("source",))
+    m_wall = M.gauge("pipeline_wall_seconds",
+                     "cumulative calibration wall (incl. resumed runs)")
+
+    def _log(msg):
+        tr.instant("log", cat="pipeline", pid=3, args={"msg": msg})
+        log(msg)
+
+    def _secs(t0_ns):
+        return (obs_mod.now_ns() - t0_ns) * 1e-9
+
     params = jax.tree.map(lambda x: x, params)
     names = sorted(layer_kernel_paths(params))
     n_layers = layer_kernel_paths(params)[names[0]].shape[0]
     results: Dict = {}
+    m_total.set(n_layers)
 
     manifest_path = ckpt_dir and os.path.join(ckpt_dir, "pipeline.json")
     done = {}
+    # per-kernel solve walls + cumulative hessian wall, stamped into the
+    # manifest so a resumed run can report the calibration cost already
+    # paid (and keeps accumulating its own)
+    wall: Dict[str, float] = {}
+    hessian_wall = 0.0
     qcfg_dict = dataclasses.asdict(qcfg)
     if ckpt_dir:
         os.makedirs(ckpt_dir, exist_ok=True)
@@ -300,6 +336,9 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
             # manifest is {"qcfg": ..., "done": ...}; flat pre-qcfg-stamp
             # manifests (legacy) are the done-dict itself
             done = stored["done"] if "done" in stored else stored
+            wall = dict(stored.get("wall", {})) if "done" in stored else {}
+            hessian_wall = float(stored.get("hessian_wall", 0.0)) \
+                if "done" in stored else 0.0
             # method mismatch gets its own refusal: two calibrators'
             # resume dirs must never silently collide (a half-finished
             # adpq dir re-run with --method oac would pack a chimera)
@@ -320,7 +359,10 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
                     f"calibration dir {ckpt_dir} was started with a "
                     f"different QuantConfig ({diff}); use a fresh ckpt_dir "
                     "or delete it to recalibrate")
-            log(f"[pipeline] resuming: {len(done)} layer-kernels done")
+            prior = sum(wall.values()) + hessian_wall
+            _log(f"[pipeline] resuming: {len(done)} layer-kernels done"
+                 + (f" ({prior:.1f}s of calibration already paid)"
+                    if prior else ""))
 
     l2_caps = None
     H_all = None
@@ -332,25 +374,45 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
         # same (full-precision) model as the uninterrupted one; park the
         # (L, d, d) stacks in host memory — keeping every layer's Hessian
         # device-resident through Phase 2 is O(L d^2) of HBM
-        H_all = jax.tree.map(np.asarray, oac_hessians_all_layers(
-            model, params, batches, grad_dtype=qcfg.grad_dtype,
-            reduction=qcfg.hessian_reduction, dist_ctx=dist_ctx))
+        t_ns = obs_mod.now_ns()
+        with tr.span("hessian precompute", cat="pipeline", pid=3):
+            H_all = jax.tree.map(np.asarray, oac_hessians_all_layers(
+                model, params, batches, grad_dtype=qcfg.grad_dtype,
+                reduction=qcfg.hessian_reduction, dist_ctx=dist_ctx))
+        dt = _secs(t_ns)
+        hessian_wall += dt
+        m_phase.labels(phase="hessian").observe(dt)
     for j in range(n_layers):
         needs_h = qcfg.method not in HESSIAN_FREE
         H_blk = None
         todo = [n for n in names if f"{j}:{n}" not in done]
+        layer_sid = tr.begin(f"layer {j}", cat="pipeline", pid=3,
+                             args={"todo": len(todo)})
+        t_ns = obs_mod.now_ns()
         if needs_h and qcfg.hessian == "oac" and todo:
             if H_all is not None:
                 H_blk = {n: H_all[n][j] for n in names}
             else:
-                H_blk = oac_hessians_for_layer(
-                    model, params, batches, j, grad_dtype=qcfg.grad_dtype,
-                    reduction=qcfg.hessian_reduction, dist_ctx=dist_ctx)
+                with tr.span(f"hessian {j}", cat="pipeline", pid=3,
+                             parent=layer_sid):
+                    H_blk = oac_hessians_for_layer(
+                        model, params, batches, j,
+                        grad_dtype=qcfg.grad_dtype,
+                        reduction=qcfg.hessian_reduction, dist_ctx=dist_ctx)
+                dt = _secs(t_ns)
+                hessian_wall += dt
+                m_phase.labels(phase="hessian").observe(dt)
         if needs_h and qcfg.hessian == "l2" and todo and (
                 sequential or l2_caps is None):
             # sequential error propagation: captures reflect the already-
             # quantized earlier blocks (SpQR/OPTQ-faithful)
-            l2_caps = l2_hessians(model, params, batches, dist_ctx=dist_ctx)
+            with tr.span(f"hessian {j}", cat="pipeline", pid=3,
+                         parent=layer_sid):
+                l2_caps = l2_hessians(model, params, batches,
+                                      dist_ctx=dist_ctx)
+            dt = _secs(t_ns)
+            hessian_wall += dt
+            m_phase.labels(phase="hessian").observe(dt)
         for n in names:
             key = f"{j}:{n}"
             W = _get_layer_kernels(params, j)[n]
@@ -360,6 +422,7 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
                 w_hat = jnp.asarray(w_np)
                 params = _set_layer_kernel(params, n, j, w_hat)
                 results[(j, n)] = LayerResult(n, j, calib, binary, w_np)
+                m_kern.labels(source="restored").inc()
                 continue
             if needs_h:
                 if qcfg.hessian == "oac":
@@ -376,8 +439,19 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
                         H = jnp.broadcast_to(H, (W.shape[0], d, d))
             else:
                 H = None
-            res = _calibrate_kernel(W, H, qcfg)
+            t_solve = obs_mod.now_ns()
+            with tr.span(f"solve {key}", cat="pipeline", pid=3,
+                         parent=layer_sid):
+                res = _calibrate_kernel(W, H, qcfg)
             w_hat = res.w_hat
+            dt = _secs(t_solve)
+            wall[key] = round(dt, 6)
+            m_phase.labels(phase="solve").observe(dt)
+            m_kern.labels(source="computed").inc()
+            if ob.enabled:
+                m_err.labels(kernel=n).set(float(jnp.mean(
+                    (w_hat.astype(jnp.float32)
+                     - W.astype(jnp.float32)) ** 2)))
             params = _set_layer_kernel(params, n, j, w_hat)
             lr = LayerResult(n, j,
                              res if isinstance(res, solver.CalibResult) else None,
@@ -392,10 +466,14 @@ def quantize_model(model, params, batches, qcfg: QuantConfig, *,
                 done[key] = fname
                 with open(manifest_path + ".tmp", "w") as f:
                     json.dump({"qcfg": qcfg_dict, "method": qcfg.method,
-                               "done": done}, f)
+                               "done": done, "wall": wall,
+                               "hessian_wall": round(hessian_wall, 6)}, f)
                 os.replace(manifest_path + ".tmp", manifest_path)
-        log(f"[pipeline] layer {j + 1}/{n_layers} done "
-            f"({qcfg.method}/{qcfg.hessian}, {qcfg.wbits}-bit)")
+        tr.end(layer_sid)
+        m_done.set(j + 1)
+        m_wall.set(sum(wall.values()) + hessian_wall)
+        _log(f"[pipeline] layer {j + 1}/{n_layers} done "
+             f"({qcfg.method}/{qcfg.hessian}, {qcfg.wbits}-bit)")
     return params, results
 
 

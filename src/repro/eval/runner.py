@@ -24,11 +24,12 @@ from repro.serving.engine import PagedEngine
 
 
 def make_engine(cfg, params, *, capacity: int, max_batch: int = 8,
-                kv_bits: int = 16, block_size: int = 16) -> PagedEngine:
+                kv_bits: int = 16, block_size: int = 16,
+                obs=None) -> PagedEngine:
     """The scoring engine: paged KV, capacity rounded up to whole blocks."""
     capacity += (-capacity) % block_size
     return PagedEngine(cfg, params, max_batch=max_batch, capacity=capacity,
-                       block_size=block_size, kv_bits=kv_bits)
+                       block_size=block_size, kv_bits=kv_bits, obs=obs)
 
 
 def score_choices(engine, cs: ds.ChoiceSet) -> np.ndarray:
@@ -98,7 +99,7 @@ def dense_reference_score(cfg, params, tokens, *,
 def evaluate(cfg, params, *, ref_params=None, corpus=None, n_seq: int = 8,
              n_choice_items: int = 16, prompt_len: int = 24,
              choice_len: int = 8, kv_bits: int = 16, max_batch: int = 8,
-             log=print) -> Dict[str, object]:
+             log=print, obs=None) -> Dict[str, object]:
     """Full quality eval of one param tree through the serving path.
 
     Scores the held-out perplexity stream and the multiple-choice set on
@@ -113,7 +114,7 @@ def evaluate(cfg, params, *, ref_params=None, corpus=None, n_seq: int = 8,
                        choice_len=choice_len)
     cap = max(corpus.seq_len, prompt_len + choice_len)
     eng = make_engine(cfg, params, capacity=cap, max_batch=max_batch,
-                      kv_bits=kv_bits)
+                      kv_bits=kv_bits, obs=obs)
     out = eng.score(stream)
     ppl = M.perplexity(out["nll"])
     acc = M.choice_accuracy(score_choices(eng, cs), cs.gold)
@@ -123,7 +124,7 @@ def evaluate(cfg, params, *, ref_params=None, corpus=None, n_seq: int = 8,
     }
     if ref_params is not None:
         reng = make_engine(cfg, ref_params, capacity=cap,
-                           max_batch=max_batch, kv_bits=kv_bits)
+                           max_batch=max_batch, kv_bits=kv_bits, obs=obs)
         rout = reng.score(stream)
         res["fp16_ppl"] = M.perplexity(rout["nll"])
         res["ppl_ratio"] = ppl / res["fp16_ppl"]

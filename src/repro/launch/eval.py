@@ -74,7 +74,7 @@ def _eval_spec(args, log=print):
     return cfg, qcfg, pipeline.pack_results(fq, results, qcfg), ref, src
 
 
-def run(args, log=print) -> dict:
+def run(args, log=print, obs=None) -> dict:
     """Score, upsert the scorecard row, return it."""
     if args.ckpt:
         cfg, qcfg, params, ref, src = _eval_ckpt(args, log)
@@ -83,7 +83,7 @@ def run(args, log=print) -> dict:
     corpus = SyntheticCorpus(vocab=cfg.vocab, seq_len=args.eval_seq, seed=7)
     res = runner.evaluate(cfg, params, ref_params=ref, corpus=corpus,
                           n_seq=args.eval_seqs, kv_bits=args.kv_bits,
-                          max_batch=args.max_batch, log=log)
+                          max_batch=args.max_batch, log=log, obs=obs)
     row = {
         "arch": cfg.name,
         "method": qcfg.method if qcfg is not None else "fp16",
@@ -139,9 +139,25 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="after upserting, run the scorecard tripwires "
                          "and exit 1 on any perplexity regression")
+    ap.add_argument("--metrics-out", default=None, metavar="metrics.prom",
+                    help="write the scoring engines' metrics registry as "
+                         "Prometheus text exposition")
+    ap.add_argument("--trace-out", default=None, metavar="trace.json",
+                    help="write the scoring trace as Chrome trace-event "
+                         "JSON")
     args = ap.parse_args()
 
-    row = run(args)
+    from repro import obs as obs_mod
+    ob = obs_mod.Obs.make() if (args.metrics_out or args.trace_out) \
+        else None
+    row = run(args, obs=ob)
+    if ob is not None:
+        if args.metrics_out:
+            obs_mod.prom.write(args.metrics_out, ob.metrics)
+            print(f"[eval] metrics -> {args.metrics_out}")
+        if args.trace_out:
+            ob.tracer.write(args.trace_out)
+            print(f"[eval] trace -> {args.trace_out}")
     print(f"[eval] {row['arch']} {row['method']} w{row['wbits']} "
           f"kv{row['kv_bits']}: ppl {row['ppl']} "
           f"(x{row['ppl_ratio']} fp16), choice {row['choice_acc']}, "

@@ -73,7 +73,7 @@ def parse_draft(spec):
 
 def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
         n_calib: int = 8, calib_seq: int = 128, seed: int = 0,
-        draft: str = None, dist_ctx=None, log=print) -> dict:
+        draft: str = None, dist_ctx=None, log=print, obs=None) -> dict:
     """Train (optionally) -> calibrate -> pack -> save; returns the manifest.
 
     ``draft="rtn-w4"`` additionally RTN-packs the *same* prepared fp params
@@ -93,7 +93,7 @@ def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
 
     qp, results = pipeline.quantize_model(
         m, params, calib, qcfg, ckpt_dir=os.path.join(out_dir, "calib"),
-        dist_ctx=dist_ctx, log=log)
+        dist_ctx=dist_ctx, log=log, obs=obs)
     packed = pipeline.pack_results(qp, results, qcfg)
     dq = parse_draft(draft)
     dpacked = None
@@ -143,6 +143,13 @@ def main():
                     help="also pack a zero-calibration speculative draft "
                          "of the same weights into the checkpoint "
                          "(e.g. rtn-w4)")
+    ap.add_argument("--metrics-out", default=None, metavar="metrics.prom",
+                    help="write pipeline_* metrics (per-layer wall, "
+                         "hessian/solve split, quant error) as Prometheus "
+                         "text exposition")
+    ap.add_argument("--trace-out", default=None, metavar="trace.json",
+                    help="write the calibration trace (layer/solve spans) "
+                         "as Chrome trace-event JSON")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -150,9 +157,21 @@ def main():
         (1.0 if args.hessian == "oac" else 0.1)
     qcfg = QuantConfig(wbits=args.wbits, group_size=args.group_size,
                        method=args.method, hessian=args.hessian, alpha=alpha)
+    from repro import obs as obs_mod
+    ob = obs_mod.Obs.make() if (args.metrics_out or args.trace_out) \
+        else None
     run(cfg, qcfg, args.out, train_steps=args.train_steps,
         n_calib=args.calib, calib_seq=args.calib_seq, seed=args.seed,
-        draft=args.draft)
+        draft=args.draft, obs=ob)
+    if ob is not None:
+        if args.metrics_out:
+            obs_mod.prom.write(args.metrics_out, ob.metrics)
+            print(f"[quantize] metrics -> {args.metrics_out}")
+        if args.trace_out:
+            ob.tracer.write(args.trace_out)
+            print(f"[quantize] trace -> {args.trace_out}")
+        print("[quantize] calibration summary:")
+        print(obs_mod.summary_table(ob.metrics, prefix="pipeline_"))
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ import sys
 import jax
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.configs import get_config, get_smoke
 from repro.configs.base import QuantConfig
 from repro.dist.sharding import make_plan
@@ -43,18 +44,18 @@ from repro.serving.quantized import quantize_params_rtn
 QUANT_CHOICES = ("none", "rtn-w4", "rtn-w3", "rtn-w2")
 
 
-def _serve_requests(cfg, params, args, plan, draft=None):
+def _serve_requests(cfg, params, args, plan, draft=None, obs=None):
     """Build the chosen engine, serve the demo batch, return the requests."""
     if args.engine == "paged":
         eng = PagedEngine(cfg, params, max_batch=args.requests,
                           capacity=128, plan=plan,
                           block_size=args.block_size, kv_bits=args.kv_bits,
                           draft=draft, spec_k=args.spec_k,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk, obs=obs)
     else:
         cls = Engine if args.engine == "continuous" else StaticEngine
         eng = cls(cfg, params, max_batch=args.requests, capacity=128,
-                  plan=plan)
+                  plan=plan, obs=obs)
     rng = np.random.default_rng(0)
     slos = {"interactive": ["interactive"], "batch": ["batch"],
             "mixed": ["interactive", "batch"]}[args.slo]
@@ -110,6 +111,12 @@ def main():
                     help="SLO class(es) for the demo requests (mixed "
                          "alternates; interactive admits first and is "
                          "preempted last)")
+    ap.add_argument("--metrics-out", default=None, metavar="metrics.prom",
+                    help="write the engine's metrics registry as "
+                         "Prometheus text exposition after serving")
+    ap.add_argument("--trace-out", default=None, metavar="trace.json",
+                    help="write the request-lifecycle trace as Chrome "
+                         "trace-event JSON (open in ui.perfetto.dev)")
     args = ap.parse_args()
 
     if args.kv_bits != 16 and args.engine != "paged":
@@ -177,9 +184,20 @@ def main():
                     QuantConfig(wbits=wbits, group_size=32))
                 print(f"[serve] speculative draft: in-memory {args.draft} "
                       f"pack of the same weights (k={args.spec_k})")
-        eng, rs = _serve_requests(cfg, params, args, plan, draft=draft)
+        ob = obs_mod.Obs.make()
+        eng, rs = _serve_requests(cfg, params, args, plan, draft=draft,
+                                  obs=ob)
     for r in rs:
         print(f"[serve] req {r.rid}: {r.out}")
+    if args.metrics_out:
+        obs_mod.prom.write(args.metrics_out, ob.metrics)
+        print(f"[serve] metrics -> {args.metrics_out}")
+    if args.trace_out:
+        ob.tracer.write(args.trace_out)
+        print(f"[serve] trace -> {args.trace_out} "
+              "(open in https://ui.perfetto.dev)")
+    print("[serve] run summary:")
+    print(obs_mod.summary_table(ob.metrics, prefix="engine_"))
     if args.engine == "paged":
         print(f"[serve] prefill tokens skipped (prefix sharing): "
               f"{eng.prefill_tokens_skipped}, peak blocks: "

@@ -1,0 +1,112 @@
+"""``repro.obs`` — engine/pipeline/kernel telemetry.
+
+One bundle, two halves:
+
+  * ``MetricsRegistry`` (``obs.metrics``): counters / gauges /
+    fixed-bucket histograms with labeled children, bounded cardinality,
+    snapshot/reset, and a Prometheus text renderer (``obs.prom``).
+  * ``Tracer`` (``obs.trace``): structured spans/events on a shared
+    monotonic-ns clock with a Chrome-trace/Perfetto JSON exporter.
+
+``Obs`` ties them together and is what instrumented components accept:
+
+    ob = obs.Obs.make()              # metrics + bounded tracer, enabled
+    eng = PagedEngine(cfg, params, obs=ob)
+    ...
+    obs.prom.write("metrics.prom", ob.metrics)
+    ob.tracer.write("trace.json")    # open in https://ui.perfetto.dev
+
+``obs.OFF`` is the shared zero-cost no-op bundle (every instrument method
+is empty; device math is identical either way — pinned by tests).
+Components that take ``obs=None`` default via ``resolve``: engines get a
+fresh enabled bundle (their benches read throughput/latency from it), the
+calibration pipeline defaults to OFF (its callers opt in).
+
+Metric name taxonomy (DESIGN.md §Observability is the full glossary):
+
+  engine_*    serving engine (ticks, queue, block pool, prefix cache,
+              speculation, swaps, token latencies)
+  pipeline_*  calibration pipeline (per-layer wall, hessian/solve split,
+              quant error, resume progress)
+  kernel_*    per-kernel roofline gauges (``roofline.analysis``
+              achieved/predicted HBM bytes — the same numbers
+              BENCH_kernels.json commits)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.obs import prom
+from repro.obs.metrics import (CardinalityError, LATENCY_BUCKETS,
+                               MetricsRegistry, SHORT_LATENCY_BUCKETS)
+from repro.obs.trace import Span, Tracer, now_ns
+
+__all__ = [
+    "CardinalityError", "LATENCY_BUCKETS", "MetricsRegistry", "Obs", "OFF",
+    "SHORT_LATENCY_BUCKETS", "Span", "Tracer", "now_ns", "prom", "resolve",
+    "summary_table",
+]
+
+
+@dataclasses.dataclass
+class Obs:
+    """The telemetry bundle instrumented components accept."""
+
+    metrics: MetricsRegistry
+    tracer: Tracer
+
+    @classmethod
+    def make(cls, max_trace_events: int = 200_000) -> "Obs":
+        return cls(MetricsRegistry(),
+                   Tracer(max_events=max_trace_events))
+
+    @classmethod
+    def off(cls) -> "Obs":
+        return cls(MetricsRegistry(enabled=False), Tracer(enabled=False))
+
+    @property
+    def enabled(self) -> bool:
+        return self.metrics.enabled
+
+
+#: shared no-op bundle — pass ``obs=obs.OFF`` to disable instrumentation
+OFF = Obs.off()
+
+
+def resolve(obs: Optional[Obs], default: str = "on") -> Obs:
+    """Normalize an ``obs=`` argument: an ``Obs`` passes through, ``None``
+    takes the component default (``"on"`` -> fresh enabled bundle,
+    ``"off"`` -> the shared no-op)."""
+    if obs is not None:
+        if not isinstance(obs, Obs):
+            raise TypeError(f"obs must be an Obs bundle, got {type(obs)}")
+        return obs
+    return Obs.make() if default == "on" else OFF
+
+
+def summary_table(registry: MetricsRegistry, prefix: str = "") -> str:
+    """Human end-of-run summary: one aligned line per time series
+    (counters/gauges: value; histograms: count, mean, p50, p99, max)."""
+    rows = []
+    for name, fam in sorted(registry.families().items()):
+        if prefix and not name.startswith(prefix):
+            continue
+        for values, c in sorted(fam.children().items()):
+            label = name + ("{" + ",".join(
+                f"{k}={v}" for k, v in zip(fam.label_names, values)) + "}"
+                if values else "")
+            if fam.kind == "histogram":
+                if not c.count:
+                    continue
+                rows.append((label, f"n={c.count}  mean={c.mean:.6g}  "
+                             f"p50={c.quantile(.5):.6g}  "
+                             f"p99={c.quantile(.99):.6g}  "
+                             f"max={c.max:.6g}"))
+            else:
+                v = c.value
+                rows.append((label, f"{v:.6g}" if v else "0"))
+    if not rows:
+        return "(no metrics recorded)"
+    w = max(len(r[0]) for r in rows)
+    return "\n".join(f"{label:<{w}}  {val}" for label, val in rows)

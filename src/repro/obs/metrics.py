@@ -1,0 +1,382 @@
+"""Process-local metrics registry: counters, gauges, fixed-bucket histograms.
+
+The registry is the single in-process source for every number the serving
+engine, the calibration pipeline, and the benchmarks report: benches read
+engine throughput/latency from the same instruments a live metrics
+endpoint would render, instead of keeping parallel ``time.perf_counter()``
+accounting.
+
+Design constraints (and why):
+
+  * **Labeled children, bounded cardinality.**  A family declares its
+    label names up front (``labels=("slo",)``) and hands out one child per
+    label-value tuple via ``.labels(slo="batch")``.  Children are capped
+    (``max_children``, default 64) and exceeding the cap *raises* — an
+    unbounded label (request id, prompt hash) is a memory leak wearing a
+    metrics costume, and failing loudly at the instrumentation site beats
+    OOMing the serving process.
+  * **Fixed-bucket histograms with exact small-run quantiles.**  Buckets
+    are fixed at creation (Prometheus-style cumulative ``le`` rendering);
+    additionally the first ``keep_samples`` raw observations are retained
+    so short benchmark runs compute *exact* percentiles (``quantile``
+    falls back to linear interpolation inside the bucket bounds once the
+    sample buffer is exhausted — the standard histogram_quantile
+    estimate).
+  * **Snapshot/reset isolation.**  ``snapshot()`` deep-copies into plain
+    dicts (mutating the registry afterwards never mutates a snapshot);
+    ``reset()`` zeroes values but keeps registered families and children,
+    so a warmup pass can be discarded without re-plumbing instruments.
+  * **Zero-cost no-op mode.**  ``MetricsRegistry(enabled=False)`` hands
+    out shared null instruments whose methods are empty — instrumented
+    code paths stay branch-free and the engine's device math is untouched
+    either way (``tests/test_obs.py`` pins greedy bit-identity on vs off).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "CardinalityError", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "LATENCY_BUCKETS", "SHORT_LATENCY_BUCKETS",
+]
+
+# generic wall-time buckets (seconds): spans ~0.1 ms .. 10 s, log-ish
+LATENCY_BUCKETS = (1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2,
+                   5e-2, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+# tick / inter-token scale (seconds): ~10 us .. 1 s
+SHORT_LATENCY_BUCKETS = (1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3,
+                         2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25, 1.0)
+
+
+class CardinalityError(ValueError):
+    """A family exceeded its ``max_children`` label-cardinality cap."""
+
+
+class _Child:
+    """Base for one (family, label-values) time series."""
+
+    __slots__ = ("labels",)
+
+    def __init__(self, labels: Tuple[str, ...]):
+        self.labels = labels
+
+
+class Counter(_Child):
+    """Monotonic counter.  ``inc`` with a negative amount raises."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, labels=()):
+        super().__init__(labels)
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0):
+        if amount < 0:
+            raise ValueError(f"counter increment must be >= 0, got {amount}")
+        self.value += amount
+
+    def _reset(self):
+        self.value = 0.0
+
+    def _snap(self):
+        return {"value": self.value}
+
+
+class Gauge(_Child):
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, labels=()):
+        super().__init__(labels)
+        self.value = 0.0
+
+    def set(self, value: float):
+        self.value = float(value)
+
+    def inc(self, amount: float = 1.0):
+        self.value += amount
+
+    def dec(self, amount: float = 1.0):
+        self.value -= amount
+
+    def _reset(self):
+        self.value = 0.0
+
+    def _snap(self):
+        return {"value": self.value}
+
+
+class Histogram(_Child):
+    """Fixed-bucket histogram + bounded raw-sample buffer.
+
+    ``bucket_counts[i]`` counts observations <= ``bounds[i]`` (non-
+    cumulative storage; rendering cumulates).  The final implicit bucket
+    is +Inf.  ``quantile(q)`` is exact while every observation is still
+    in the sample buffer, and the standard intra-bucket linear
+    interpolation afterwards.
+    """
+
+    __slots__ = ("bounds", "bucket_counts", "sum", "count", "max",
+                 "_samples", "_keep")
+
+    def __init__(self, bounds: Sequence[float], labels=(),
+                 keep_samples: int = 4096):
+        super().__init__(labels)
+        b = tuple(float(x) for x in bounds)
+        if not b or any(b[i] >= b[i + 1] for i in range(len(b) - 1)):
+            raise ValueError(f"histogram bounds must be strictly "
+                             f"increasing and non-empty: {bounds}")
+        self.bounds = b
+        self._keep = int(keep_samples)
+        self._init_state()
+
+    def _init_state(self):
+        self.bucket_counts = [0] * (len(self.bounds) + 1)
+        self.sum = 0.0
+        self.count = 0
+        self.max = 0.0
+        self._samples: List[float] = []
+
+    def observe(self, value: float):
+        v = float(value)
+        i = 0
+        n = len(self.bounds)
+        while i < n and v > self.bounds[i]:
+            i += 1
+        self.bucket_counts[i] += 1
+        self.sum += v
+        self.count += 1
+        if v > self.max:
+            self.max = v
+        if len(self._samples) < self._keep:
+            self._samples.append(v)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """q in [0, 1] -> estimated quantile (exact while the raw-sample
+        buffer holds every observation)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        if self.count == 0:
+            return 0.0
+        if len(self._samples) == self.count:     # exact path
+            s = sorted(self._samples)
+            pos = q * (len(s) - 1)
+            lo = int(math.floor(pos))
+            hi = min(lo + 1, len(s) - 1)
+            return s[lo] + (s[hi] - s[lo]) * (pos - lo)
+        # bucket interpolation (Prometheus histogram_quantile semantics:
+        # linear within the target bucket, lower edge of bucket 0 is 0,
+        # the +Inf bucket clamps to the highest finite bound)
+        target = q * self.count
+        cum = 0
+        for i, c in enumerate(self.bucket_counts):
+            if c == 0:
+                continue
+            lo = 0.0 if i == 0 else self.bounds[i - 1]
+            if i >= len(self.bounds):            # +Inf bucket
+                return self.bounds[-1]
+            if cum + c >= target:
+                return lo + (self.bounds[i] - lo) * (target - cum) / c
+            cum += c
+        return self.bounds[-1]
+
+    def _reset(self):
+        self._init_state()
+
+    def _snap(self):
+        return {"buckets": dict(zip(self.bounds + (math.inf,),
+                                    self.bucket_counts)),
+                "sum": self.sum, "count": self.count, "max": self.max,
+                "p50": self.quantile(0.50), "p99": self.quantile(0.99)}
+
+
+class _Null:
+    """Shared do-nothing instrument: every method is a no-op, every
+    accessor a zero.  ``labels(...)`` returns itself so disabled-registry
+    call sites are shape-identical to enabled ones."""
+
+    bounds = ()
+    value = 0.0
+    sum = 0.0
+    count = 0
+    max = 0.0
+    mean = 0.0
+
+    def labels(self, **kw):
+        return self
+
+    def inc(self, amount=1.0):
+        pass
+
+    def dec(self, amount=1.0):
+        pass
+
+    def set(self, value):
+        pass
+
+    def observe(self, value):
+        pass
+
+    def quantile(self, q):
+        return 0.0
+
+
+_NULL = _Null()
+
+_TYPES = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class Family:
+    """One named metric family: fixed label names, capped children."""
+
+    def __init__(self, name: str, kind: str, help: str,
+                 label_names: Tuple[str, ...], max_children: int, **kw):
+        self.name = name
+        self.kind = kind
+        self.help = help
+        self.label_names = label_names
+        self.max_children = max_children
+        self._kw = kw
+        self._children: Dict[Tuple[str, ...], _Child] = {}
+        if not label_names:      # unlabeled family == its single child
+            self._default = self._make(())
+        else:
+            self._default = None
+
+    def _make(self, values: Tuple[str, ...]) -> _Child:
+        if len(self._children) >= self.max_children:
+            raise CardinalityError(
+                f"metric family {self.name!r} exceeded its cardinality cap "
+                f"({self.max_children} children); label values must be "
+                f"bounded sets, not ids")
+        c = _TYPES[self.kind](labels=values, **self._kw)
+        self._children[values] = c
+        return c
+
+    def labels(self, **kv) -> _Child:
+        if tuple(sorted(kv)) != tuple(sorted(self.label_names)):
+            raise ValueError(
+                f"family {self.name!r} takes labels {self.label_names}, "
+                f"got {tuple(kv)}")
+        values = tuple(str(kv[n]) for n in self.label_names)
+        c = self._children.get(values)
+        return c if c is not None else self._make(values)
+
+    def children(self):
+        return dict(self._children)
+
+    # -- unlabeled convenience: the family proxies its single child
+    def _one(self) -> _Child:
+        if self._default is None:
+            raise ValueError(f"family {self.name!r} is labeled "
+                             f"({self.label_names}); call .labels(...)")
+        return self._default
+
+    def inc(self, amount: float = 1.0):
+        self._one().inc(amount)
+
+    def dec(self, amount: float = 1.0):
+        self._one().dec(amount)
+
+    def set(self, value: float):
+        self._one().set(value)
+
+    def observe(self, value: float):
+        self._one().observe(value)
+
+    def quantile(self, q: float) -> float:
+        return self._one().quantile(q)
+
+    @property
+    def value(self):
+        return self._one().value
+
+    @property
+    def count(self):
+        return self._one().count
+
+    @property
+    def sum(self):
+        return self._one().sum
+
+    @property
+    def mean(self):
+        return self._one().mean
+
+    @property
+    def max(self):
+        return self._one().max
+
+    def _reset(self):
+        for c in self._children.values():
+            c._reset()
+
+    def _snap(self):
+        return {"type": self.kind, "help": self.help,
+                "labels": self.label_names,
+                "children": {ls: c._snap()
+                             for ls, c in sorted(self._children.items())}}
+
+
+class MetricsRegistry:
+    """Process-local registry.  Instrument registration is idempotent:
+    re-requesting an existing (name, kind) returns the same family;
+    requesting an existing name as a different kind raises."""
+
+    def __init__(self, enabled: bool = True, max_children: int = 64):
+        self.enabled = enabled
+        self.max_children = max_children
+        self._families: Dict[str, Family] = {}
+
+    def _register(self, name: str, kind: str, help: str,
+                  labels: Sequence[str], **kw) -> Family:
+        if not self.enabled:
+            return _NULL
+        fam = self._families.get(name)
+        if fam is not None:
+            if fam.kind != kind:
+                raise ValueError(f"metric {name!r} already registered as "
+                                 f"{fam.kind}, requested {kind}")
+            return fam
+        fam = Family(name, kind, help, tuple(labels), self.max_children,
+                     **kw)
+        self._families[name] = fam
+        return fam
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Family:
+        return self._register(name, "counter", help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Family:
+        return self._register(name, "gauge", help, labels)
+
+    def histogram(self, name: str, buckets: Sequence[float] =
+                  LATENCY_BUCKETS, help: str = "",
+                  labels: Sequence[str] = (),
+                  keep_samples: int = 4096) -> Family:
+        return self._register(name, "histogram", help, labels,
+                              bounds=buckets, keep_samples=keep_samples)
+
+    def get(self, name: str) -> Optional[Family]:
+        return self._families.get(name)
+
+    def families(self) -> Dict[str, Family]:
+        return dict(self._families)
+
+    def snapshot(self) -> Dict[str, dict]:
+        """Plain-dict deep copy of every family (isolation: later registry
+        mutations never alter a snapshot)."""
+        return {n: f._snap() for n, f in sorted(self._families.items())}
+
+    def reset(self):
+        """Zero every child's values; families and children stay
+        registered (warmup-pass discard without re-plumbing handles)."""
+        for f in self._families.values():
+            f._reset()

@@ -1,0 +1,68 @@
+"""Prometheus text-exposition renderer for ``MetricsRegistry``.
+
+Renders format 0.0.4 (``text/plain; version=0.0.4``): ``# HELP`` /
+``# TYPE`` per family, one line per child, cumulative ``_bucket`` lines
+with ``le`` labels plus ``_sum``/``_count`` for histograms.  Families are
+rendered even when they have no children yet (HELP/TYPE only), so a
+scraper — or the CI obs-smoke assertion — sees the full metric taxonomy
+of an idle engine, not just the families that happened to fire.
+
+Output is deterministic (families and children sorted), which is what the
+golden-file test in ``tests/test_obs.py`` pins.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.obs.metrics import MetricsRegistry
+
+__all__ = ["render", "write"]
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _labels(names, values, extra=()) -> str:
+    pairs = [f'{n}="{_escape(v)}"' for n, v in zip(names, values)]
+    pairs += [f'{n}="{_escape(v)}"' for n, v in extra]
+    return "{" + ",".join(pairs) + "}" if pairs else ""
+
+
+def _num(x: float) -> str:
+    if x == math.inf:
+        return "+Inf"
+    f = float(x)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+def render(registry: MetricsRegistry) -> str:
+    """The full registry as Prometheus text exposition (version 0.0.4)."""
+    out = []
+    for name, fam in sorted(registry.families().items()):
+        out.append(f"# HELP {name} {_escape(fam.help) or name}")
+        out.append(f"# TYPE {name} {fam.kind}")
+        for values, child in sorted(fam.children().items()):
+            if fam.kind in ("counter", "gauge"):
+                out.append(f"{name}{_labels(fam.label_names, values)} "
+                           f"{_num(child.value)}")
+                continue
+            # histogram: cumulative le buckets + _sum/_count
+            cum = 0
+            for bound, cnt in zip(child.bounds + (math.inf,),
+                                  child.bucket_counts):
+                cum += cnt
+                lbl = _labels(fam.label_names, values,
+                              extra=(("le", _num(bound)),))
+                out.append(f"{name}_bucket{lbl} {cum}")
+            lbl = _labels(fam.label_names, values)
+            out.append(f"{name}_sum{lbl} {_num(child.sum)}")
+            out.append(f"{name}_count{lbl} {child.count}")
+    return "\n".join(out) + ("\n" if out else "")
+
+
+def write(path: str, registry: MetricsRegistry) -> str:
+    text = render(registry)
+    with open(path, "w") as f:
+        f.write(text)
+    return path

@@ -1,0 +1,190 @@
+"""Structured span/event tracer with a Chrome-trace (Perfetto) exporter.
+
+``Tracer`` records spans (begin/end pairs) and instant events on one
+shared monotonic-nanosecond clock (``now_ns``, time.perf_counter_ns) —
+the same clock the engine stamps ``Request.token_times`` from, so a
+request's token latencies and its trace timeline agree by construction.
+
+Spans carry explicit ids and parent ids (the internal model); the
+exporter maps them onto the Chrome trace-event JSON that Perfetto and
+``chrome://tracing`` load: complete (``ph: "X"``) events grouped by
+``pid``/``tid`` rows, instants as ``ph: "i"``, with the parent id kept in
+``args.parent`` for tooling that wants the explicit tree rather than the
+timestamp-nesting Perfetto infers.
+
+Per-request serving timelines use ``tid = request id`` on the ``requests``
+process row and the engine's own tick/admit spans on ``tid = 0`` of the
+``engine`` row — open the trace in https://ui.perfetto.dev and each
+request renders as one horizontal lifecycle: queued → prefill (chunks) →
+decode → finish, with preempt/swap instants overlaid.
+
+The event buffer is bounded (``max_events``); once full, new events are
+dropped and counted (``dropped``) instead of growing without limit — a
+tracer left enabled on a long-running engine costs bounded memory.
+``Tracer(enabled=False)`` records nothing and every call is a cheap
+early-return (the no-op mode the obs-off bit-identity test pins).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+__all__ = ["Tracer", "Span", "now_ns"]
+
+
+def now_ns() -> int:
+    """The shared monotonic clock (ns)."""
+    return time.perf_counter_ns()
+
+
+class Span:
+    __slots__ = ("sid", "name", "cat", "pid", "tid", "start_ns", "end_ns",
+                 "parent", "args")
+
+    def __init__(self, sid, name, cat, pid, tid, start_ns, parent, args):
+        self.sid = sid
+        self.name = name
+        self.cat = cat
+        self.pid = pid
+        self.tid = tid
+        self.start_ns = start_ns
+        self.end_ns = None
+        self.parent = parent
+        self.args = args
+
+
+class _SpanCtx:
+    """Context-manager handle for ``Tracer.span``."""
+
+    def __init__(self, tracer, sid):
+        self.tracer = tracer
+        self.sid = sid
+
+    def __enter__(self):
+        return self.sid
+
+    def __exit__(self, *exc):
+        self.tracer.end(self.sid)
+        return False
+
+
+class Tracer:
+    def __init__(self, enabled: bool = True, max_events: int = 200_000):
+        self.enabled = enabled
+        self.max_events = max_events
+        self.dropped = 0
+        self._spans: List[Span] = []
+        self._instants: List[dict] = []
+        self._open: Dict[int, Span] = {}
+        self._next_sid = 1
+        self.epoch_ns = now_ns()
+        self._process_names: Dict[int, str] = {}
+        self._thread_names: Dict[tuple, str] = {}
+
+    # ------------------------------------------------------------- naming
+    def name_process(self, pid: int, name: str):
+        if self.enabled:
+            self._process_names[pid] = name
+
+    def name_thread(self, pid: int, tid: int, name: str):
+        if self.enabled:
+            self._thread_names[(pid, tid)] = name
+
+    # ------------------------------------------------------------- events
+    def _full(self) -> bool:
+        if len(self._spans) + len(self._instants) >= self.max_events:
+            self.dropped += 1
+            return True
+        return False
+
+    def begin(self, name: str, *, cat: str = "", pid: int = 1, tid: int = 0,
+              parent: Optional[int] = None, args: Optional[dict] = None
+              ) -> Optional[int]:
+        """Open a span; returns its id (None when disabled/full)."""
+        if not self.enabled or self._full():
+            return None
+        sid = self._next_sid
+        self._next_sid += 1
+        sp = Span(sid, name, cat, pid, tid, now_ns(), parent, args)
+        self._spans.append(sp)
+        self._open[sid] = sp
+        return sid
+
+    def end(self, sid: Optional[int], args: Optional[dict] = None):
+        """Close span ``sid`` (tolerates None / already-closed ids so call
+        sites need no branching on enabled-ness)."""
+        if sid is None or not self.enabled:
+            return
+        sp = self._open.pop(sid, None)
+        if sp is None:
+            return
+        sp.end_ns = now_ns()
+        if args:
+            sp.args = {**(sp.args or {}), **args}
+
+    def span(self, name: str, **kw) -> _SpanCtx:
+        """``with tracer.span("tick", tid=0): ...``"""
+        return _SpanCtx(self, self.begin(name, **kw))
+
+    def instant(self, name: str, *, cat: str = "", pid: int = 1,
+                tid: int = 0, args: Optional[dict] = None):
+        if not self.enabled or self._full():
+            return
+        self._instants.append({"name": name, "cat": cat, "pid": pid,
+                               "tid": tid, "ts_ns": now_ns(), "args": args})
+
+    # ------------------------------------------------------------ reading
+    def spans(self) -> List[Span]:
+        return list(self._spans)
+
+    def reset(self):
+        self._spans.clear()
+        self._instants.clear()
+        self._open.clear()
+        self.dropped = 0
+        self.epoch_ns = now_ns()
+
+    # ---------------------------------------------------------- exporting
+    def export_chrome(self) -> dict:
+        """Chrome trace-event JSON object (Perfetto-loadable).
+
+        Open spans (begin without end) export with the current time as
+        their end and ``args.incomplete = true`` — a crashed run's trace
+        still loads.  Timestamps are microseconds relative to the tracer
+        epoch (Chrome's ``ts`` unit).
+        """
+        ev = []
+        for pid, name in sorted(self._process_names.items()):
+            ev.append({"name": "process_name", "ph": "M", "pid": pid,
+                       "tid": 0, "args": {"name": name}})
+        for (pid, tid), name in sorted(self._thread_names.items()):
+            ev.append({"name": "thread_name", "ph": "M", "pid": pid,
+                       "tid": tid, "args": {"name": name}})
+        t_now = now_ns()
+        for sp in self._spans:
+            end = sp.end_ns if sp.end_ns is not None else t_now
+            args = dict(sp.args or {})
+            if sp.parent is not None:
+                args["parent"] = sp.parent
+            if sp.end_ns is None:
+                args["incomplete"] = True
+            args["sid"] = sp.sid
+            ev.append({"name": sp.name, "cat": sp.cat or "span",
+                       "ph": "X", "pid": sp.pid, "tid": sp.tid,
+                       "ts": (sp.start_ns - self.epoch_ns) / 1e3,
+                       "dur": max(end - sp.start_ns, 0) / 1e3,
+                       "args": args})
+        for i in self._instants:
+            ev.append({"name": i["name"], "cat": i["cat"] or "instant",
+                       "ph": "i", "s": "t", "pid": i["pid"],
+                       "tid": i["tid"],
+                       "ts": (i["ts_ns"] - self.epoch_ns) / 1e3,
+                       "args": i["args"] or {}})
+        return {"traceEvents": ev, "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped}}
+
+    def write(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.export_chrome(), f)
+        return path

@@ -140,3 +140,15 @@ def achieved_bytes(fn, *args) -> float:
     traffic, the same count ``analyze_lowered`` uses)."""
     hlo = jax.jit(fn).lower(*args).compile().as_text()
     return hlo_parse.analyze(hlo)["hbm_bytes"]
+
+
+def record_achieved_bytes(registry, kernel: str, fn, *args) -> float:
+    """``achieved_bytes`` measured AND published: the value lands in the
+    ``kernel_achieved_bytes{kernel=...}`` gauge family of ``registry``
+    (a ``repro.obs.MetricsRegistry``) — one source of truth shared by
+    BENCH_kernels.json rows and a live metrics endpoint."""
+    b = achieved_bytes(fn, *args)
+    registry.gauge("kernel_achieved_bytes",
+                   "per-device HBM bytes of the compiled lowering",
+                   labels=("kernel",)).labels(kernel=kernel).set(b)
+    return b

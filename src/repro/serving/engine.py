@@ -36,7 +36,6 @@ single-device.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import defaultdict
 from typing import Dict, List, Optional
 
@@ -44,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.models import build_model
 from repro.models.attention import KVCache, PagedKVCache
 
@@ -81,6 +81,8 @@ class Request:
     _not_before: int = 0               # admission-clock gate after requeue
     _admit_seq: int = 0                # admission order (preemption victim)
     _swap: Optional[tuple] = None      # host-side swapped-out cache state
+    # open tracer span ids for this request's lifecycle timeline
+    _spans: Dict = dataclasses.field(default_factory=dict, repr=False)
 
 
 def cache_batch_axes(model, capacity):
@@ -134,7 +136,8 @@ class BlockAllocator:
     reserved as that shard's write scratch and never allocated.
     """
 
-    def __init__(self, num_blocks: int, block_size: int, stripes: int = 1):
+    def __init__(self, num_blocks: int, block_size: int, stripes: int = 1,
+                 metrics: Optional[Dict] = None):
         assert num_blocks % stripes == 0, (num_blocks, stripes)
         self.num_blocks = num_blocks
         self.block_size = block_size
@@ -146,6 +149,16 @@ class BlockAllocator:
                       if b not in self.reserved][::-1]
                      for t in range(stripes)]
         self.refcount: Dict[int, int] = {}
+        # obs handles: {"alloc": Counter, "free": Counter,
+        #               "in_use": Gauge, "occupancy": Gauge}
+        self._m = metrics
+
+    def _obs_pool(self):
+        if self._m is not None:
+            live = len(self.refcount)
+            self._m["in_use"].set(live)
+            self._m["occupancy"].set(
+                live / max(1, self.num_blocks - len(self.reserved)))
 
     def stripe_of(self, block: int) -> int:
         return block // (self.num_blocks // self.stripes)
@@ -155,6 +168,9 @@ class BlockAllocator:
             return None
         b = self.free[stripe].pop()
         self.refcount[b] = 1
+        if self._m is not None:
+            self._m["alloc"].inc()
+            self._obs_pool()
         return b
 
     def incref(self, block: int):
@@ -165,6 +181,9 @@ class BlockAllocator:
         if self.refcount[block] == 0:
             del self.refcount[block]
             self.free[self.stripe_of(block)].append(block)
+            if self._m is not None:
+                self._m["free"].inc()
+                self._obs_pool()
 
     @property
     def blocks_in_use(self) -> int:
@@ -188,13 +207,18 @@ class PrefixCache:
     oldest-touched first.
     """
 
-    def __init__(self, alloc: BlockAllocator, block_size: int):
+    def __init__(self, alloc: BlockAllocator, block_size: int,
+                 metrics: Optional[Dict] = None):
         self.alloc = alloc
         self.bs = block_size
         self.entries: Dict[bytes, int] = {}
         self.kids: Dict[bytes, int] = {}
         self.lru: Dict[bytes, int] = {}
         self._clock = 0
+        # obs handles: {"hit", "miss", "insert", "evict"} counters.  hit
+        # counts matched blocks, miss counts failed full-block lookups, so
+        # hit / (hit + miss) is a rate in [0, 1].
+        self._m = metrics
 
     def _touch(self, key: bytes):
         self._clock += 1
@@ -207,9 +231,13 @@ class PrefixCache:
             key = prompt[:(j + 1) * self.bs].tobytes()
             b = self.entries.get(key)
             if b is None:
+                if self._m is not None:
+                    self._m["miss"].inc()
                 break
             self._touch(key)
             blocks.append(b)
+        if self._m is not None and blocks:
+            self._m["hit"].inc(len(blocks))
         return len(blocks), blocks
 
     def insert(self, prompt: np.ndarray, table_row: np.ndarray,
@@ -224,6 +252,8 @@ class PrefixCache:
             self.entries[key] = b
             self.alloc.incref(b)
             self._touch(key)
+            if self._m is not None:
+                self._m["insert"].inc()
             if j > 0:
                 pkey = prompt[:j * self.bs].tobytes()
                 self.kids[pkey] = self.kids.get(pkey, 0) + 1
@@ -244,6 +274,8 @@ class PrefixCache:
             if not self.kids[pkey]:
                 del self.kids[pkey]
         self.alloc.decref(b)
+        if self._m is not None:
+            self._m["evict"].inc()
         return True
 
 
@@ -251,7 +283,7 @@ class _EngineBase:
     """Shared queue/jit plumbing for both schedulers."""
 
     def __init__(self, cfg, params, *, max_batch: int = 8,
-                 capacity: int = 512, seed: int = 0, plan=None):
+                 capacity: int = 512, seed: int = 0, plan=None, obs=None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -260,6 +292,12 @@ class _EngineBase:
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self.key = jax.random.PRNGKey(seed)
+        # engines default to a fresh enabled bundle: benches and serve.py
+        # read throughput/latency straight from it (pass obs=obs.OFF for
+        # the pinned-bit-identical no-op mode)
+        self.obs = obs_mod.resolve(obs)
+        self._t0_ns = obs_mod.now_ns()     # run() resets; direct-driven
+        self._init_obs()                   # engines still get valid offsets
         self.ctx = None
         if plan is not None:
             c = plan.ctx(_serve_shape(capacity, max_batch))
@@ -269,6 +307,105 @@ class _EngineBase:
             self.params = jax.device_put(params, plan.param_shardings(params))
         self._prefill = jax.jit(self._with_ctx(self.model.prefill))
         self._next_rid = 0
+
+    # ------------------------------------------------------------ telemetry
+    def _init_obs(self):
+        """Register the engine_* metric families (idempotent per registry —
+        engines sharing one bundle co-register) and name the trace rows."""
+        M = self.obs.metrics
+        self.m = {
+            "tokens": M.counter(
+                "engine_tokens_total", "tokens emitted across all requests"),
+            "submitted": M.counter(
+                "engine_requests_submitted_total", "requests submitted",
+                labels=("slo",)),
+            "finished": M.counter(
+                "engine_requests_finished_total", "requests finished",
+                labels=("slo",)),
+            "ticks": M.counter(
+                "engine_ticks_total", "scheduler decode ticks"),
+            "tick_s": M.histogram(
+                "engine_tick_seconds", obs_mod.SHORT_LATENCY_BUCKETS,
+                "wall time of one decode tick"),
+            "queue": M.gauge(
+                "engine_queue_depth", "queued requests by SLO class",
+                labels=("slo",)),
+            "gap": M.histogram(
+                "engine_inter_token_seconds", obs_mod.SHORT_LATENCY_BUCKETS,
+                "gap between consecutive tokens of one request",
+                labels=("slo",)),
+            "latency": M.histogram(
+                "engine_request_latency_seconds", obs_mod.LATENCY_BUCKETS,
+                "request completion offset from run() start",
+                labels=("slo",)),
+            "prefill": M.counter(
+                "engine_prefill_tokens_total",
+                "prompt tokens by admission outcome (computed | skipped)",
+                labels=("kind",)),
+            "sched": M.counter(
+                "engine_sched_events_total",
+                "scheduler events (requeue | preempt | swap_in | chunk)",
+                labels=("event",)),
+            "swap_bytes": M.counter(
+                "engine_swap_bytes_total",
+                "bytes moved by preemption swaps", labels=("dir",)),
+            "run_s": M.gauge(
+                "engine_run_seconds", "wall time of the last run()"),
+        }
+        # pre-create the standard SLO children so an idle engine's
+        # exposition already carries the queue-depth series
+        for slo in SLO_RANK:
+            self.m["queue"].labels(slo=slo)
+        tr = self.obs.tracer
+        tr.name_process(1, "engine")
+        tr.name_process(2, "requests")
+
+    def _now_off(self) -> float:
+        """Wall offset (s) from the engine epoch on the shared trace clock
+        — the one timebase token_times, spans, and histograms agree on."""
+        return (obs_mod.now_ns() - self._t0_ns) * 1e-9
+
+    def _queue_gauges(self):
+        counts = {slo: 0 for slo in SLO_RANK}
+        for r in self.queue:
+            counts[r.slo] = counts.get(r.slo, 0) + 1
+        for slo, n in counts.items():
+            self.m["queue"].labels(slo=slo).set(n)
+
+    def _emit_token(self, r: Request, tok: int, now_off: float):
+        """The single token-emission bookkeeping point for every decode
+        path: output list, unconditional token_times stamp, inter-token
+        histogram, throughput counter."""
+        if r.token_times:
+            self.m["gap"].labels(slo=r.slo).observe(
+                now_off - r.token_times[-1])
+        r.out.append(tok)
+        r.token_times.append(now_off)
+        self.m["tokens"].inc()
+
+    def _trace_submit(self, r: Request):
+        tr = self.obs.tracer
+        root = tr.begin(f"req {r.rid}", cat="request", pid=2, tid=r.rid,
+                        args={"slo": r.slo,
+                              "prompt_tokens": len(r.prompt)})
+        r._spans["root"] = root
+        r._spans["phase"] = tr.begin("queued", cat="sched", pid=2,
+                                     tid=r.rid, parent=root)
+
+    def _trace_phase(self, r: Request, name: str, args=None):
+        """Close the request's open lifecycle phase and enter ``name``
+        (queued -> prefill -> decode, with swapped/queued re-entries)."""
+        tr = self.obs.tracer
+        tr.end(r._spans.pop("phase", None))
+        r._spans["phase"] = tr.begin(name, cat="sched", pid=2, tid=r.rid,
+                                     parent=r._spans.get("root"), args=args)
+
+    def _trace_finish(self, r: Request):
+        tr = self.obs.tracer
+        tr.end(r._spans.pop("phase", None))
+        tr.end(r._spans.pop("root", None),
+               args={"tokens": len(r.out),
+                     "finish_wall": round(r.finish_wall, 6)})
 
     def _with_ctx(self, fn):
         if self.ctx is None:
@@ -289,6 +426,9 @@ class _EngineBase:
         r = Request(self._next_rid, prompt, **kw)
         self._next_rid += 1
         self.queue.append(r)
+        self.m["submitted"].labels(slo=r.slo).inc()
+        self._trace_submit(r)
+        self._queue_gauges()
         return r
 
 
@@ -305,9 +445,9 @@ class Engine(_EngineBase):
     """
 
     def __init__(self, cfg, params, *, max_batch: int = 8,
-                 capacity: int = 512, seed: int = 0, plan=None):
+                 capacity: int = 512, seed: int = 0, plan=None, obs=None):
         super().__init__(cfg, params, max_batch=max_batch, capacity=capacity,
-                         seed=seed, plan=plan)
+                         seed=seed, plan=plan, obs=obs)
         B = max_batch
         self._slots: List[Optional[Request]] = [None] * B
         self._pos = np.zeros(B, np.int32)        # per-slot cache clock
@@ -317,8 +457,6 @@ class Engine(_EngineBase):
         self._steps = np.zeros(B, np.int32)      # per-slot tokens sampled
         self._engine_seed = seed
         self.ticks = 0
-        self._t0 = time.perf_counter()     # run() resets; direct-driven
-                                           # engines still get valid offsets
         self._admit_clock = 0                    # admission attempts (backoff)
         self.requeues = 0                        # admissions requeued w/ backoff
         self.preemptions = 0                     # slots swapped out / aborted
@@ -391,9 +529,22 @@ class Engine(_EngineBase):
         r = self._slots[i]
         r.done = True
         r.finish_tick = self.ticks
-        r.finish_wall = time.perf_counter() - self._t0
+        r.finish_wall = self._now_off()
         self.finished[r.rid] = r
         self._slots[i] = None
+        self.m["finished"].labels(slo=r.slo).inc()
+        self.m["latency"].labels(slo=r.slo).observe(r.finish_wall)
+        self._trace_finish(r)
+
+    def _acct_prefill(self, computed: int = 0, skipped: int = 0):
+        """Prompt-token accounting: legacy attributes (serve.py / tests
+        read them) mirrored into engine_prefill_tokens_total{kind}."""
+        if computed:
+            self.prefill_tokens_computed += computed
+            self.m["prefill"].labels(kind="computed").inc(computed)
+        if skipped:
+            self.prefill_tokens_skipped += skipped
+            self.m["prefill"].labels(kind="skipped").inc(skipped)
 
     def _finished_by(self, r: Request, tok: int, pos: int) -> bool:
         return (r.eos is not None and tok == r.eos) or \
@@ -425,7 +576,7 @@ class Engine(_EngineBase):
         cache.  Returns the (1,1,V) logits of the last prompt position."""
         logits, row = self._dense_row_prefill(r)
         self._cache = self._insert(self._cache, row, i)
-        self.prefill_tokens_computed += len(r.prompt)
+        self._acct_prefill(computed=len(r.prompt))
         return logits
 
     def _eff_seed(self, r: Request) -> int:
@@ -462,6 +613,8 @@ class Engine(_EngineBase):
         r._backoff = min(r._backoff + 1, 6)
         r._not_before = self._admit_clock + (1 << r._backoff)
         self.requeues += 1
+        self.m["sched"].labels(event="requeue").inc()
+        self._queue_gauges()
 
     def _finish_admission(self, r: Request, i: int, logits, S: int):
         """Common admission tail: sample the first token from the prefill
@@ -471,8 +624,7 @@ class Engine(_EngineBase):
             logits[:, 0], jnp.full((1,), r.temperature, jnp.float32),
             jnp.full((1,), self._eff_seed(r), jnp.int32),
             jnp.zeros((1,), jnp.int32))[0])
-        r.out.append(t)
-        r.token_times.append(time.perf_counter() - self._t0)
+        self._emit_token(r, t, self._now_off())
         if r.admit_tick < 0:
             r.admit_tick = self.ticks
         r._admit_seq = self._admit_clock
@@ -480,6 +632,7 @@ class Engine(_EngineBase):
         if self._finished_by(r, t, S):
             self._retire(i)
             return
+        self._trace_phase(r, "decode")
         self._pos[i] = S
         self._temps[i] = r.temperature
         self._next_tok[i] = t
@@ -489,7 +642,12 @@ class Engine(_EngineBase):
     def _try_admit(self, r: Request, i: int):
         """Admit ``r`` into free slot ``i`` (may raise RuntimeError on pool
         saturation — the paged override adds swap-in and chunked paths)."""
-        logits = self._admit_prefill(r, i)
+        self._trace_phase(r, "prefill")
+        try:
+            logits = self._admit_prefill(r, i)
+        except RuntimeError:
+            self._trace_phase(r, "queued")    # back in the queue (head)
+            raise
         self._finish_admission(r, i, logits, len(r.prompt))
 
     # --- preemption hooks (no-ops for dense engines: their per-slot cache
@@ -524,17 +682,22 @@ class Engine(_EngineBase):
         is requeued with backoff (after trying to preempt a lower-priority
         slot) and admission moves on."""
         self._admit_clock += 1
-        for i in self._free_slots():
-            r = self._pop_admittable()
-            if r is None:
-                return
-            try:
-                self._try_admit(r, i)
-            except RuntimeError:
-                # the failing path reinserted r at the queue head with its
-                # partial block acquisitions released
-                if not self._admit_preempt_retry(r, i):
-                    self._requeue_backoff(r)
+        free = self._free_slots()
+        if not (free and self.queue):
+            return
+        with self.obs.tracer.span("admit", cat="engine", pid=1, tid=0):
+            for i in free:
+                r = self._pop_admittable()
+                if r is None:
+                    break
+                try:
+                    self._try_admit(r, i)
+                except RuntimeError:
+                    # the failing path reinserted r at the queue head with
+                    # its partial block acquisitions released
+                    if not self._admit_preempt_retry(r, i):
+                        self._requeue_backoff(r)
+        self._queue_gauges()
 
     def _pre_tick(self, active):
         """Hook before the device step (paged engine maps write blocks)."""
@@ -553,9 +716,13 @@ class Engine(_EngineBase):
         active = self._active_slots()
         if not active:
             return
+        t_ns = obs_mod.now_ns()
+        sid = self.obs.tracer.begin("tick", cat="engine", pid=1, tid=0,
+                                    args={"slots": len(active)})
         self._pre_tick(active)
         active = self._active_slots()        # preemption may drop slots
         if not active:
+            self.obs.tracer.end(sid)
             return
         toks, self._cache = self._decode(
             self.params, jnp.asarray(self._next_tok[:, None]), self._cache,
@@ -563,18 +730,20 @@ class Engine(_EngineBase):
             jnp.asarray(self._seeds), jnp.asarray(self._steps),
             *self._decode_extra_args())
         toks = np.asarray(toks)                  # the tick's single sync
-        now = time.perf_counter() - self._t0
+        now = self._now_off()
         self.ticks += 1
+        self.m["ticks"].inc()
         for i in active:
             r = self._slots[i]
             t = int(toks[i])
-            r.out.append(t)
-            r.token_times.append(now)
+            self._emit_token(r, t, now)
             self._pos[i] += 1
             self._next_tok[i] = t
             self._steps[i] += 1
             if self._finished_by(r, t, int(self._pos[i])):
                 self._retire(i)
+        self.m["tick_s"].observe((obs_mod.now_ns() - t_ns) * 1e-9)
+        self.obs.tracer.end(sid)
 
     def _prefill_step(self):
         """Hook: advance in-flight chunked prefills (paged engine)."""
@@ -586,7 +755,7 @@ class Engine(_EngineBase):
         return any(s is not None for s in self._slots)
 
     def run(self):
-        self._t0 = time.perf_counter()
+        self._t0_ns = obs_mod.now_ns()
         stalls = 0
         while self.queue or self._busy():
             done0 = len(self.finished)
@@ -608,6 +777,7 @@ class Engine(_EngineBase):
                     raise RuntimeError(
                         "admission stalled: queued request(s) cannot fit "
                         "the block pool even with the engine idle")
+        self.m["run_s"].set(self._now_off())
         return self
 
     # ------------------------------------------------- teacher-forced score
@@ -748,9 +918,14 @@ class PagedEngine(Engine):
                  capacity: int = 512, seed: int = 0, plan=None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  share_prefixes: bool = True, kv_bits: int = 16,
-                 draft=None, spec_k: int = 4, prefill_chunk: int = 0):
+                 draft=None, spec_k: int = 4, prefill_chunk: int = 0,
+                 obs=None):
         assert capacity % block_size == 0, (capacity, block_size)
         assert kv_bits in (16, 8), kv_bits
+        # resolve the bundle before super().__init__ runs: the allocator
+        # and prefix cache are built first and carry their handles directly
+        obs = obs_mod.resolve(obs)
+        M = obs.metrics
         self.kv_bits = kv_bits
         self.block_size = block_size
         # --- self-speculative decoding: `draft` is a cheap params tree of
@@ -786,15 +961,39 @@ class PagedEngine(Engine):
             num_blocks = max_batch * self.max_blocks + stripes
         num_blocks += (-num_blocks) % stripes
         self.num_blocks = num_blocks
-        self.alloc = BlockAllocator(num_blocks, block_size, stripes=stripes)
-        self.prefix = PrefixCache(self.alloc, block_size)
+        pool_m = None
+        prefix_m = None
+        if M.enabled:
+            pool_m = {
+                "alloc": M.counter("engine_block_pool_allocs_total",
+                                   "physical block allocations"),
+                "free": M.counter("engine_block_pool_frees_total",
+                                  "physical block frees"),
+                "in_use": M.gauge("engine_blocks_in_use",
+                                  "live physical blocks"),
+                "occupancy": M.gauge(
+                    "engine_block_pool_occupancy",
+                    "live blocks / allocatable (non-reserved) blocks"),
+            }
+            pf = M.counter(
+                "engine_prefix_cache_events_total",
+                "prefix cache events (hit | miss | insert | evict)",
+                labels=("event",))
+            prefix_m = {k: pf.labels(event=k)
+                        for k in ("hit", "miss", "insert", "evict")}
+        self.alloc = BlockAllocator(num_blocks, block_size, stripes=stripes,
+                                    metrics=pool_m)
+        self.prefix = PrefixCache(self.alloc, block_size, metrics=prefix_m)
         self._tables = np.full((max_batch, self.max_blocks), -1, np.int32)
         self.shared_block_hits = 0
         self.cow_copies = 0
         self.peak_blocks_in_use = 0
         self.blocks_held_at_retire: List[int] = []
         super().__init__(cfg, params, max_batch=max_batch,
-                         capacity=capacity, seed=seed, plan=plan)
+                         capacity=capacity, seed=seed, plan=plan, obs=obs)
+        self.m["spec"] = self.obs.metrics.counter(
+            "engine_spec_tokens_total",
+            "speculative tokens (drafted | accepted)", labels=("kind",))
         nodes, _ = _cache_nodes(self._abstract_cache())
         self._has_paged = any(isinstance(n, PagedKVCache) for n in nodes)
         self._share = (share_prefixes and self._has_paged
@@ -988,7 +1187,7 @@ class PagedEngine(Engine):
             self._cache = self._insert(self._cache, row, i,
                                        jnp.asarray(trow))
             self._tables[i] = trow
-            self.prefill_tokens_computed += S
+            self._acct_prefill(computed=S)
             return logits
         # ---- prefix-shared admission (uniform-attention families)
         bs = self.block_size
@@ -1023,9 +1222,8 @@ class PagedEngine(Engine):
         self._tables[i] = trow
         # register this prompt's newly-computed full blocks for reuse
         self.prefix.insert(r.prompt, trow, n_shared, S // bs)
-        self.prefill_tokens_skipped += n_shared * bs
+        self._acct_prefill(computed=Ssfx, skipped=n_shared * bs)
         self.shared_block_hits += n_shared
-        self.prefill_tokens_computed += Ssfx
         return logits
 
     def _retire(self, i: int):
@@ -1062,6 +1260,10 @@ class PagedEngine(Engine):
         r = self._slots[i]
         if i in self._chunking:
             del self._chunking[i]
+            self.obs.tracer.instant("preempt", cat="sched", pid=2,
+                                    tid=r.rid,
+                                    args={"aborted_prefill": True})
+            self._trace_phase(r, "queued")
         else:
             # gather this row's live state: every mapped pool block plus
             # the slot's row of each dense leaf (rings, recurrent state,
@@ -1087,11 +1289,18 @@ class PagedEngine(Engine):
             r._swap = (lbs, blob,
                        {"pos": int(self._pos[i]),
                         "next_tok": int(self._next_tok[i])})
+            nbytes = sum(a.nbytes for a in jax.tree.leaves(blob))
+            self.m["swap_bytes"].labels(dir="out").inc(nbytes)
+            self.obs.tracer.instant("swap_out", cat="sched", pid=2,
+                                    tid=r.rid, args={"bytes": nbytes})
+            self._trace_phase(r, "swapped")
         self._release_row(self._tables[i])
         self._tables[i] = -1
         self._slots[i] = None
         self.queue.insert(0, r)
         self.preemptions += 1
+        self.m["sched"].labels(event="preempt").inc()
+        self._queue_gauges()
 
     def _admit_swapped(self, r: Request, i: int):
         """Swap a preempted slot back in: re-map its logical blocks onto
@@ -1135,6 +1344,12 @@ class PagedEngine(Engine):
         r._admit_seq = self._admit_clock
         r._swap = None
         self.swap_ins += 1
+        self.m["sched"].labels(event="swap_in").inc()
+        nbytes = sum(a.nbytes for a in jax.tree.leaves(blob))
+        self.m["swap_bytes"].labels(dir="in").inc(nbytes)
+        self.obs.tracer.instant("swap_in", cat="sched", pid=2, tid=r.rid,
+                                args={"bytes": nbytes})
+        self._trace_phase(r, "decode")
 
     # ------------------------------------------------------ chunked prefill
     def _begin_chunked(self, r: Request, i: int):
@@ -1158,8 +1373,9 @@ class PagedEngine(Engine):
                              "w": min(w, self.max_blocks)}
         r.admit_tick = self.ticks
         r._admit_seq = self._admit_clock
-        self.prefill_tokens_skipped += n_shared * bs
+        self._acct_prefill(skipped=n_shared * bs)
         self.shared_block_hits += n_shared
+        self._trace_phase(r, "prefill", args={"chunked": True})
 
     def _chunk_jit(self, w: int):
         """Per-table-width jit of the chunk prefill (chunk length is fixed,
@@ -1211,12 +1427,18 @@ class PagedEngine(Engine):
                 continue
             toks = np.zeros((1, C), np.int32)
             toks[0, :n] = r.prompt[start:start + n]
-            logits, self._cache = self._chunk_jit(st["w"])(
-                self.params, jnp.asarray(toks), self._cache,
-                jnp.asarray(self._tables[i, :st["w"]]),
-                jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32))
-            self.prefill_tokens_computed += n
+            with self.obs.tracer.span(
+                    "prefill_chunk", cat="sched", pid=2, tid=r.rid,
+                    parent=r._spans.get("phase"),
+                    args={"start": start, "tokens": n}):
+                logits, self._cache = self._chunk_jit(st["w"])(
+                    self.params, jnp.asarray(toks), self._cache,
+                    jnp.asarray(self._tables[i, :st["w"]]),
+                    jnp.asarray(start, jnp.int32),
+                    jnp.asarray(n, jnp.int32))
+            self._acct_prefill(computed=n)
             self.chunk_steps += 1
+            self.m["sched"].labels(event="chunk").inc()
             st["start"] = start + n
             if st["start"] >= S:
                 del self._chunking[i]
@@ -1378,9 +1600,14 @@ class PagedEngine(Engine):
         active = self._active_slots()
         if not active:
             return
+        t_ns = obs_mod.now_ns()
+        sid = self.obs.tracer.begin("tick", cat="engine", pid=1, tid=0,
+                                    args={"slots": len(active),
+                                          "spec": True})
         self._pre_tick(active)
         active = self._active_slots()
         if not active:
+            self.obs.tracer.end(sid)
             return
         if self._spec_jit is None:
             self._spec_jit = jax.jit(self._make_spec(), donate_argnums=(2,))
@@ -1392,17 +1619,22 @@ class PagedEngine(Engine):
             *self._decode_extra_args())
         tok_out = np.asarray(tok_out)
         acc = np.asarray(acc)                    # one sync with tok_out
-        now = time.perf_counter() - self._t0
+        now = self._now_off()
         self.ticks += 1
+        self.m["ticks"].inc()
         for i in active:
             r = self._slots[i]
             a = int(acc[i])
             self.spec_drafted += self.spec_k
             self.spec_accepted += a
+            self.m["spec"].labels(kind="drafted").inc(self.spec_k)
+            self.m["spec"].labels(kind="accepted").inc(a)
+            self.obs.tracer.instant("spec", cat="spec", pid=2, tid=r.rid,
+                                    args={"drafted": self.spec_k,
+                                          "accepted": a})
             for j in range(a + 1):
                 t = int(tok_out[i, j])
-                r.out.append(t)
-                r.token_times.append(now)
+                self._emit_token(r, t, now)
                 self._pos[i] += 1
                 self._next_tok[i] = t
                 self._steps[i] += 1
@@ -1411,6 +1643,8 @@ class PagedEngine(Engine):
                     break
             if self._slots[i] is not None and self._has_paged:
                 self._rollback_blocks(i)
+        self.m["tick_s"].observe((obs_mod.now_ns() - t_ns) * 1e-9)
+        self.obs.tracer.end(sid)
 
     def _decode_extra_args(self):
         # Bound the per-tick table view to the live logical depth: the decode
@@ -1442,10 +1676,11 @@ class StaticEngine(_EngineBase):
     engine is measured against (and stays bit-identical to, for greedy)."""
 
     def __init__(self, cfg, params, *, max_batch: int = 8,
-                 capacity: int = 512, seed: int = 0, plan=None):
+                 capacity: int = 512, seed: int = 0, plan=None, obs=None):
         super().__init__(cfg, params, max_batch=max_batch, capacity=capacity,
-                         seed=seed, plan=plan)
+                         seed=seed, plan=plan, obs=obs)
         self._decode = jax.jit(self._with_ctx(self.model.decode_step))
+        self.ticks = 0
 
     def _next_cohort(self) -> List[Request]:
         by_len = defaultdict(list)
@@ -1460,15 +1695,22 @@ class StaticEngine(_EngineBase):
     def _run_cohort(self, cohort: List[Request]):
         B = len(cohort)
         S = len(cohort[0].prompt)
+        self._queue_gauges()
+        for r in cohort:
+            self._trace_phase(r, "prefill")
         prompts = jnp.asarray(np.stack([r.prompt for r in cohort]))
         cache = self.model.init_cache(B, self.capacity, dtype=jnp.float32)
         logits, cache, n = self._prefill(self.params,
                                          {"tokens": prompts}, cache)
+        self.m["prefill"].labels(kind="computed").inc(B * S)
+        for r in cohort:
+            self._trace_phase(r, "decode")
         logits = logits[:, 0]
         pos = S
         budget = max(r.max_tokens for r in cohort)
         for _ in range(min(budget, self.capacity - S - 1)):
             nxt = np.zeros(B, np.int32)
+            now = self._now_off()
             for i, r in enumerate(cohort):
                 if r.done:
                     continue
@@ -1478,25 +1720,37 @@ class StaticEngine(_EngineBase):
                         sub, logits[i] / r.temperature))
                 else:
                     t = int(jnp.argmax(logits[i]))
-                r.out.append(t)
+                self._emit_token(r, t, now)
                 nxt[i] = t
                 if (r.eos is not None and t == r.eos) or \
                         len(r.out) >= r.max_tokens:
                     r.done = True
             if all(r.done for r in cohort):
                 break
+            t_ns = obs_mod.now_ns()
+            sid = self.obs.tracer.begin("tick", cat="engine", pid=1, tid=0,
+                                        args={"slots": B})
             lg, cache = self._decode(self.params, jnp.asarray(nxt)[:, None],
                                      cache, jnp.asarray(pos))
             logits = lg[:, 0]
             pos += 1
-        now = time.perf_counter() - self._t0
+            self.ticks += 1
+            self.m["ticks"].inc()
+            self.m["tick_s"].observe((obs_mod.now_ns() - t_ns) * 1e-9)
+            self.obs.tracer.end(sid)
+        now = self._now_off()
         for r in cohort:
             r.done = True
             r.finish_wall = now
             self.finished[r.rid] = r
+            self.m["finished"].labels(slo=r.slo).inc()
+            self.m["latency"].labels(slo=r.slo).observe(now)
+            self._trace_finish(r)
 
     def run(self):
-        self._t0 = time.perf_counter()
+        self._t0_ns = obs_mod.now_ns()
         while self.queue:
             self._run_cohort(self._next_cohort())
+        self.m["run_s"].set(self._now_off())
+        self._queue_gauges()
         return self

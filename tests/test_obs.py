@@ -1,0 +1,334 @@
+"""repro.obs: metrics registry, tracer, exporters, engine/pipeline wiring.
+
+Pins the registry math (hand-computed histogram quantiles on both the
+exact-sample and bucket-interpolation paths), the cardinality cap, the
+snapshot/reset isolation contract, the Prometheus golden rendering, the
+Perfetto export schema (nesting via args.parent, bounded buffer), the
+zero-cost no-op mode (greedy decode bit-identical obs on/off), and the
+instrumentation invariants the engines must keep: token_times length ==
+emitted tokens even under speculative rollback, pool occupancy <= 1,
+prefix hit rate in [0, 1], and per-layer calibration wall stamped into
+the pipeline manifest so resumed runs report cumulative cost.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import build_model
+from repro.obs.metrics import CardinalityError, MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.serving.engine import PagedEngine
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ registry math
+def test_histogram_exact_quantiles():
+    """While every observation fits in the sample buffer, quantiles are
+    exact order statistics with linear interpolation between them."""
+    m = MetricsRegistry()
+    h = m.histogram("h_seconds", buckets=(1.0, 2.0, 4.0, 8.0, 16.0))
+    for v in range(1, 11):                     # 1.0 .. 10.0
+        h.observe(float(v))
+    assert h.count == 10
+    assert h.mean == pytest.approx(5.5)
+    assert h.max == 10.0
+    assert h.quantile(0.0) == 1.0
+    assert h.quantile(1.0) == 10.0
+    assert h.quantile(0.5) == pytest.approx(5.5)       # pos 4.5 in 1..10
+    assert h.quantile(0.99) == pytest.approx(9.91)     # pos 8.91
+
+
+def test_histogram_bucket_interpolation():
+    """keep_samples=0 forces the Prometheus-style bucket path: linear
+    within the target bucket, +Inf clamped to the top finite bound."""
+    m = MetricsRegistry()
+    h = m.histogram("h_seconds", buckets=(1.0, 2.0, 4.0, 8.0),
+                    keep_samples=0)
+    for v in (1.5, 3.0, 3.0, 6.0, 10.0):
+        h.observe(v)
+    # buckets: (<=1)=0 (<=2)=1 (<=4)=2 (<=8)=1 (+Inf)=1
+    assert h.children()[()].bucket_counts == [0, 1, 2, 1, 1]
+    # q=0.5 -> target 2.5 falls in the (2, 4] bucket holding obs 2..3:
+    # 2 + (4-2) * (2.5-1)/2 = 3.5
+    assert h.quantile(0.5) == pytest.approx(3.5)
+    # q=0.9 -> target 4.5 runs off the finite buckets into +Inf -> clamp
+    assert h.quantile(0.9) == 8.0
+    # counts/sums still exact even without samples
+    assert h.count == 5
+    assert h.sum == pytest.approx(23.5)
+
+
+def test_histogram_rejects_bad_bounds():
+    with pytest.raises(ValueError):
+        MetricsRegistry().histogram("h", buckets=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        MetricsRegistry().histogram("h", buckets=())
+
+
+def test_cardinality_cap():
+    m = MetricsRegistry(max_children=2)
+    c = m.counter("c_total", labels=("rid",))
+    c.labels(rid="a").inc()
+    c.labels(rid="b").inc()
+    c.labels(rid="a").inc()            # existing child: fine
+    with pytest.raises(CardinalityError):
+        c.labels(rid="c")
+
+
+def test_counter_gauge_semantics():
+    m = MetricsRegistry()
+    c = m.counter("c_total")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = m.gauge("g")
+    g.set(5)
+    g.dec(2)
+    assert g.value == 3
+    # re-registering the same name+kind is idempotent; kind flips raise
+    assert m.counter("c_total") is c
+    with pytest.raises(ValueError):
+        m.gauge("c_total")
+
+
+def test_snapshot_reset_isolation():
+    m = MetricsRegistry()
+    c = m.counter("c_total", labels=("k",))
+    c.labels(k="x").inc(3)
+    h = m.histogram("h_seconds", buckets=(1.0, 2.0))
+    h.observe(0.5)
+    snap = m.snapshot()
+    c.labels(k="x").inc(10)            # mutate after snapshot
+    h.observe(1.5)
+    assert snap["c_total"]["children"][("x",)]["value"] == 3
+    assert snap["h_seconds"]["children"][()]["count"] == 1
+    m.reset()
+    # families and children survive a reset; values zero
+    assert m.get("c_total").labels(k="x").value == 0
+    assert m.get("h_seconds").count == 0
+    assert m.get("h_seconds").quantile(0.99) == 0.0
+
+
+def test_noop_registry_is_free():
+    m = MetricsRegistry(enabled=False)
+    c = m.counter("c_total", labels=("k",))
+    c.inc()
+    c.labels(k="x").inc(5)             # labels() returns the null object
+    m.histogram("h_seconds").observe(1.0)
+    m.gauge("g").set(2)
+    assert m.families() == {}
+    assert m.snapshot() == {}
+    # every no-op instrument is the one shared null object
+    assert m.counter("a") is m.gauge("b") is m.histogram("c")
+
+
+# ----------------------------------------------------------------- renderer
+def test_prometheus_golden():
+    m = MetricsRegistry()
+    c = m.counter("demo_requests_total", "requests served", labels=("slo",))
+    c.labels(slo="batch").inc(3)
+    c.labels(slo="interactive").inc()
+    m.gauge("demo_occupancy", "pool occupancy").set(0.25)
+    h = m.histogram("demo_latency_seconds", buckets=(0.1, 1.0),
+                    help="request latency")
+    for v in (0.25, 0.5, 2.0):
+        h.observe(v)
+    golden = os.path.join(os.path.dirname(__file__), "data",
+                          "obs_golden.prom")
+    with open(golden) as f:
+        assert obs.prom.render(m) == f.read()
+
+
+def test_prometheus_renders_childless_families():
+    """An idle engine's full taxonomy is visible to scrapers: families
+    with no children yet still emit HELP/TYPE."""
+    m = MetricsRegistry()
+    m.counter("idle_total", "never fired", labels=("k",))
+    text = obs.prom.render(m)
+    assert "# HELP idle_total never fired" in text
+    assert "# TYPE idle_total counter" in text
+
+
+# ------------------------------------------------------------------- tracer
+def test_tracer_nesting_and_perfetto_schema():
+    tr = Tracer()
+    tr.name_process(1, "engine")
+    root = tr.begin("req 0", pid=2, tid=0)
+    child = tr.begin("prefill", pid=2, tid=0, parent=root)
+    tr.end(child, args={"tokens": 8})
+    tr.instant("preempt", pid=2, tid=0, args={"why": "pool"})
+    tr.end(root)
+    leak = tr.begin("open", pid=1)     # never ended: must still export
+    doc = tr.export_chrome()
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["dropped_events"] == 0
+    ev = {e["name"]: e for e in doc["traceEvents"]}
+    assert ev["process_name"]["ph"] == "M"
+    assert ev["process_name"]["args"]["name"] == "engine"
+    x = ev["prefill"]
+    assert x["ph"] == "X" and x["dur"] >= 0 and x["ts"] >= 0
+    assert x["args"]["parent"] == root and x["args"]["tokens"] == 8
+    assert ev["req 0"]["ph"] == "X"
+    assert "incomplete" not in ev["req 0"]["args"]
+    assert ev["preempt"]["ph"] == "i" and ev["preempt"]["s"] == "t"
+    assert ev["open"]["args"]["incomplete"] is True
+    assert leak is not None
+    json.dumps(doc)                    # schema must be JSON-serializable
+
+
+def test_tracer_bounded_buffer_and_noop():
+    tr = Tracer(max_events=2)
+    a = tr.begin("a")
+    tr.instant("b")
+    c = tr.begin("c")                  # over budget: dropped
+    assert a is not None and c is None
+    tr.end(c)                          # tolerated
+    assert tr.dropped == 1
+    assert tr.export_chrome()["otherData"]["dropped_events"] == 1
+    off = Tracer(enabled=False)
+    assert off.begin("x") is None
+    with off.span("y"):
+        pass
+    off.instant("z")
+    assert off.export_chrome()["traceEvents"] == []
+
+
+def test_resolve_contract():
+    ob = obs.Obs.make()
+    assert obs.resolve(ob) is ob
+    assert obs.resolve(None, default="off") is obs.OFF
+    assert obs.resolve(None).enabled
+    with pytest.raises(TypeError):
+        obs.resolve(object())
+
+
+# ------------------------------------------------------- engine instrument
+def _reqs(eng, shared=True, n=4):
+    base = np.arange(1, 25, dtype=np.int32)
+    out = []
+    for i in range(n):
+        p = np.concatenate([base, np.asarray([30 + i], np.int32)]) \
+            if shared else base + i
+        out.append(eng.submit(p, max_tokens=5 + i,
+                              slo="interactive" if i % 2 else "batch"))
+    return out
+
+
+def test_obs_on_off_greedy_bit_identical():
+    """The no-op bundle must not change device math: same engine, same
+    workload, obs on vs obs.OFF, bitwise-equal outputs."""
+    params = build_model(CFG).init(KEY)
+
+    def run(ob):
+        eng = PagedEngine(CFG, params, max_batch=2, capacity=48,
+                          block_size=8, obs=ob)
+        hs = _reqs(eng)
+        eng.run()
+        return [list(r.out) for r in hs]
+
+    assert run(obs.Obs.make()) == run(obs.OFF)
+
+
+def test_token_times_match_out_under_spec_rollback():
+    """Every decode path stamps token_times from the shared clock: under a
+    rollback-heavy draft (fresh init), len(token_times) == len(out) and
+    times are nondecreasing, ending before finish_wall."""
+    m = build_model(CFG)
+    params = m.init(KEY)
+    draft = m.init(jax.random.PRNGKey(7))
+    eng = PagedEngine(CFG, params, max_batch=2, capacity=48, block_size=8,
+                      draft=draft, spec_k=3)
+    hs = _reqs(eng, shared=False)
+    eng.run()
+    assert eng.spec_drafted > 0
+    for r in hs:
+        assert len(r.token_times) == len(r.out) > 0
+        assert all(a <= b for a, b in zip(r.token_times, r.token_times[1:]))
+        assert r.finish_wall >= r.token_times[-1] > 0
+
+
+def test_engine_metric_sanity_and_lifecycle():
+    """One shared-prefix run: counters agree with handles, gauges stay in
+    range, and the trace holds >= 1 complete request lifecycle."""
+    params = build_model(CFG).init(KEY)
+    ob = obs.Obs.make()
+    eng = PagedEngine(CFG, params, max_batch=2, capacity=48, block_size=8,
+                      obs=ob)
+    hs = _reqs(eng)
+    eng.run()
+    m = ob.metrics
+    toks = sum(len(r.out) for r in hs)
+    assert m.get("engine_tokens_total").value == toks
+    assert m.get("engine_ticks_total").value > 0
+    assert m.get("engine_run_seconds").value > 0
+    assert 0.0 <= m.get("engine_block_pool_occupancy").value <= 1.0
+    fin = m.get("engine_requests_finished_total")
+    assert sum(c.value for c in fin.children().values()) == len(hs)
+    pf = {k[0]: c.value for k, c in
+          m.get("engine_prefix_cache_events_total").children().items()}
+    hits, misses = pf.get("hit", 0), pf.get("miss", 0)
+    assert 0.0 <= hits / max(1, hits + misses) <= 1.0
+    assert hits > 0                    # shared prefix must actually share
+    gap = m.get("engine_inter_token_seconds")
+    assert sum(h.count for h in gap.children().values()) == \
+        sum(max(0, len(r.out) - 1) for r in hs)
+    # trace: each request row has a closed root span + phase spans
+    spans = ob.tracer.spans()
+    roots = [s for s in spans if s.name.startswith("req ") and s.pid == 2]
+    assert len(roots) == len(hs)
+    assert all(s.end_ns is not None for s in roots)
+    phases = {s.name for s in spans if s.pid == 2}
+    assert {"queued", "prefill", "decode"} <= phases
+    # prometheus text of a live engine parses the full taxonomy
+    text = obs.prom.render(m)
+    for fam in ("engine_tick_seconds_bucket", "engine_queue_depth",
+                "engine_block_pool_occupancy",
+                "engine_prefix_cache_events_total"):
+        assert fam in text
+
+
+# ----------------------------------------------------------- pipeline wall
+def test_pipeline_wall_stamped_and_resumed(tmp_path):
+    """Per-layer solve walls land in pipeline.json; a resumed run restores
+    every kernel, adds no new wall, and reports the prior cost."""
+    from repro.core import pipeline
+    from repro.data import SyntheticCorpus, make_calib_set
+    import jax.numpy as jnp
+    m = build_model(CFG)
+    params = m.init(KEY)
+    corpus = SyntheticCorpus(vocab=CFG.vocab, seq_len=32, seed=3)
+    calib = {"tokens": jnp.asarray(make_calib_set(corpus, 4)["tokens"])}
+    q = QuantConfig(wbits=4, group_size=16, method="optq", hessian="l2",
+                    alpha=0.1)
+    ck = str(tmp_path / "pipe")
+    ob = obs.Obs.make()
+    pipeline.quantize_model(m, params, calib, q, ckpt_dir=ck,
+                            log=lambda *a: None, obs=ob)
+    with open(os.path.join(ck, "pipeline.json")) as f:
+        man = json.load(f)
+    assert man["wall"] and all(v > 0 for v in man["wall"].values())
+    assert set(man["wall"]) == set(man["done"])
+    assert m is not None
+    walls = ob.metrics.get("pipeline_wall_seconds").value
+    assert walls == pytest.approx(
+        sum(man["wall"].values()) + man["hessian_wall"], rel=1e-3)
+    # resume: all kernels restored, cumulative cost reported
+    logs = []
+    ob2 = obs.Obs.make()
+    pipeline.quantize_model(m, params, calib, q, ckpt_dir=ck,
+                            log=logs.append, obs=ob2)
+    assert any("already paid" in s for s in logs)
+    kern = ob2.metrics.get("pipeline_kernels_total")
+    src = {k[0]: c.value for k, c in kern.children().items()}
+    assert src.get("computed", 0) == 0 and src.get("restored", 0) > 0
