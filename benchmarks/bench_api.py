@@ -1,0 +1,167 @@
+"""HTTP front-end benchmark: what does the network surface cost?
+
+Serves the same shared-prefix workload twice from identical engines —
+once by driving ``PagedEngine.run`` in process, once streaming through
+``serving/api`` over a real loopback socket (driver thread + SSE framing
++ per-token asyncio hops) — and reports tokens/sec for both plus the
+ratio.  A third cell fans the HTTP requests out over concurrent client
+threads, the shape a load-balancer actually delivers.
+
+The interesting number is the ratio: the engine tick is jit'd model
+work, so the bridge/HTTP machinery should cost a modest constant per
+token, not a multiple.  ``--check`` trips (exit 1) when single-client
+HTTP throughput falls below ``HTTP_FLOOR`` x in-process — at toy scale
+the per-token model work is tiny and absorbs the whole framing cost, so
+a deep regression here means the bridge is stalling the driver (e.g. a
+blocking hop on the token path), not that SSE got slower.
+
+    python benchmarks/bench_api.py [--smoke] [--check]
+                                   [--out BENCH_api.json]
+"""
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                      # noqa: E402
+import numpy as np              # noqa: E402
+
+from repro.configs import get_smoke                         # noqa: E402
+from repro.launch import client as cl                       # noqa: E402
+from repro.models import build_model                        # noqa: E402
+from repro.serving.api import ApiServer, EngineBridge       # noqa: E402
+from repro.serving.engine import PagedEngine                # noqa: E402
+
+# single-client HTTP tokens/sec vs in-process on the same engine; the
+# asyncio hop per token is microseconds against a millisecond-scale tick,
+# so falling below this means the driver is being stalled, not framed
+HTTP_FLOOR = 0.5
+
+
+def _workload(cfg, requests, prefix_len=32, suffix_len=12):
+    rng = np.random.default_rng(3)
+    pre = cl.shared_prefix(prefix_len, cfg.vocab)
+    return [pre + [int(t) for t in rng.integers(0, cfg.vocab,
+                                                size=suffix_len)]
+            for _ in range(requests)]
+
+
+def _engine(cfg, params, args):
+    return PagedEngine(cfg, params, max_batch=args.max_batch,
+                       capacity=args.capacity,
+                       block_size=args.block_size)
+
+
+def _run_inprocess(cfg, params, args, prompts):
+    eng = _engine(cfg, params, args)
+    rs = [eng.submit(np.asarray(p, np.int32), max_tokens=args.max_tokens)
+          for p in prompts]
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    return sum(len(r.out) for r in rs), wall
+
+
+def _run_http(cfg, params, args, prompts, client_threads):
+    eng = _engine(cfg, params, args)
+    bridge = EngineBridge(eng, idle_wait=0.002).start()
+    server = ApiServer(bridge, model_info={"arch": cfg.name,
+                                           "vocab": cfg.vocab})
+    port = server.start()
+    counts = [0] * len(prompts)
+    errs = []
+
+    def worker(idxs):
+        for i in idxs:
+            try:
+                counts[i] = sum(
+                    1 for t, _ in cl.complete(port, prompts[i],
+                                              max_tokens=args.max_tokens)
+                    if t is not None)
+            except Exception as e:
+                errs.append(repr(e))
+
+    try:
+        t0 = time.perf_counter()
+        ts = [threading.Thread(
+            target=worker, args=(range(w, len(prompts), client_threads),))
+            for w in range(client_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        wall = time.perf_counter() - t0
+    finally:
+        server.stop()
+        bridge.stop()
+    if errs:
+        raise RuntimeError(f"client errors: {errs[:3]}")
+    return sum(counts), wall
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="toy-llama")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny cells (CI-sized)")
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit 1 if single-client HTTP tokens/sec "
+                         f"< {HTTP_FLOOR}x in-process")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="threads for the concurrent-client cell")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_api.json"))
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests, args.max_tokens = 8, 8
+
+    cfg = get_smoke(args.arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    prompts = _workload(cfg, args.requests)
+
+    # warmup pass compiles the tick outside every timed wall
+    _run_inprocess(cfg, params, args, prompts[:2])
+
+    cells = {}
+    toks, wall = _run_inprocess(cfg, params, args, prompts)
+    cells["inprocess"] = {"tokens": toks, "wall_s": round(wall, 4),
+                          "tokens_per_s": round(toks / wall, 1)}
+    toks, wall = _run_http(cfg, params, args, prompts, 1)
+    cells["http_1_client"] = {"tokens": toks, "wall_s": round(wall, 4),
+                              "tokens_per_s": round(toks / wall, 1)}
+    toks, wall = _run_http(cfg, params, args, prompts, args.clients)
+    cells[f"http_{args.clients}_clients"] = {
+        "tokens": toks, "wall_s": round(wall, 4),
+        "tokens_per_s": round(toks / wall, 1)}
+
+    ratio = cells["http_1_client"]["tokens_per_s"] \
+        / cells["inprocess"]["tokens_per_s"]
+    report = {"arch": cfg.name, "requests": args.requests,
+              "max_tokens": args.max_tokens, "cells": cells,
+              "http_over_inprocess": round(ratio, 3)}
+    for name, c in cells.items():
+        print(f"[bench_api] {name:>22}: {c['tokens']:4d} tokens "
+              f"in {c['wall_s']:.2f}s = {c['tokens_per_s']:.0f} tok/s")
+    print(f"[bench_api] http/in-process ratio: {ratio:.2f}")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"[bench_api] -> {args.out}")
+    if args.check and ratio < HTTP_FLOOR:
+        print(f"[bench_api] TRIPWIRE: http {ratio:.2f}x in-process "
+              f"< {HTTP_FLOOR}x floor")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,187 @@
+"""Reference client for the HTTP serving front end (stdlib only).
+
+``python -m repro.launch.client --port P`` streams one completion from a
+``serve --http`` server and prints the tokens; ``--check`` turns it into
+the CI api-smoke assertion: tokens arrived, client-measured decode rate
+is positive, and the server's ``/metrics`` scrape records at least one
+finished request lifecycle.  The helpers (``complete``, ``scrape``,
+``wait_ready``) are plain functions over ``http.client`` so the
+integration tests drive the same code path as the CLI.
+
+There is no tokenizer in this repo: prompts are token-id lists.  By
+default the prompt is ``--shared-prefix N`` deterministic tokens (the
+same chain ``serve --save-warmup --shared-prefix N`` persisted, so a
+warmed server skips its prefill) followed by ``--suffix-tokens`` fixed
+suffix tokens.
+"""
+import argparse
+import http.client
+import json
+import sys
+import time
+
+
+def wait_ready(port: int, host: str = "127.0.0.1",
+               timeout: float = 60.0) -> dict:
+    """Poll /healthz until the server answers; returns the health dict."""
+    deadline = time.monotonic() + timeout
+    last = None
+    while time.monotonic() < deadline:
+        try:
+            conn = http.client.HTTPConnection(host, port, timeout=5)
+            conn.request("GET", "/healthz")
+            resp = conn.getresponse()
+            body = json.loads(resp.read())
+            conn.close()
+            if resp.status == 200:
+                return body
+            last = body
+        except (OSError, json.JSONDecodeError) as e:
+            last = repr(e)
+        time.sleep(0.2)
+    raise TimeoutError(f"server on :{port} not ready: {last}")
+
+
+def complete(port: int, prompt, *, host: str = "127.0.0.1",
+             max_tokens: int = 16, temperature: float = 0.0,
+             seed=None, slo: str = "interactive", timeout: float = 120.0):
+    """POST a streaming completion; yields ``(token_id, finish_reason)``
+    pairs — finish_reason is None until the final chunk."""
+    body = {"prompt": [int(t) for t in prompt], "max_tokens": max_tokens,
+            "temperature": temperature, "slo": slo, "stream": True}
+    if seed is not None:
+        body["seed"] = int(seed)
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    conn.request("POST", "/v1/completions", body=json.dumps(body),
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    if resp.status != 200:
+        raise RuntimeError(f"HTTP {resp.status}: {resp.read().decode()}")
+    try:
+        for raw in resp:
+            line = raw.strip()
+            if not line.startswith(b"data: "):
+                continue
+            payload = line[len(b"data: "):]
+            if payload == b"[DONE]":
+                return
+            chunk = json.loads(payload)
+            if "error" in chunk:
+                raise RuntimeError(chunk["error"]["message"])
+            choice = chunk["choices"][0]
+            yield choice["token_id"], choice["finish_reason"]
+    finally:
+        conn.close()
+
+
+def scrape(port: int, host: str = "127.0.0.1") -> str:
+    """GET /metrics -> Prometheus 0.0.4 text."""
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    conn.request("GET", "/metrics")
+    resp = conn.getresponse()
+    text = resp.read().decode()
+    conn.close()
+    if resp.status != 200:
+        raise RuntimeError(f"/metrics returned HTTP {resp.status}")
+    return text
+
+
+def metric_value(text: str, name: str, labels: str = "") -> float:
+    """Sum of all samples of ``name`` whose label block contains
+    ``labels`` (crude but sufficient for smoke assertions)."""
+    total, seen = 0.0, False
+    for line in text.splitlines():
+        if line.startswith("#") or not line.startswith(name):
+            continue
+        rest = line[len(name):]
+        if rest[:1] not in ("{", " "):
+            continue                       # a longer metric name
+        if labels and labels not in rest:
+            continue
+        total += float(line.rsplit(None, 1)[1])
+        seen = True
+    return total if seen else float("nan")
+
+
+def shared_prefix(n: int, vocab: int):
+    """The deterministic prefix ``serve --shared-prefix n`` uses."""
+    return [(i % vocab) for i in range(1, n + 1)]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--requests", type=int, default=1)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the deterministic N-token prefix the "
+                         "server's warmup file was built from")
+    ap.add_argument("--suffix-tokens", type=int, default=8,
+                    help="fixed suffix tokens after the shared prefix")
+    ap.add_argument("--slo", default="interactive",
+                    choices=["interactive", "batch"])
+    ap.add_argument("--check", action="store_true",
+                    help="assert ≥1 token streamed, tokens/sec > 0, and "
+                         "≥1 finished request in the /metrics scrape")
+    ap.add_argument("--expect-warm", action="store_true",
+                    help="with --check: also assert the server skipped "
+                         "prefill via the warmed prefix cache")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the final /metrics scrape to FILE")
+    args = ap.parse_args(argv)
+
+    health = wait_ready(args.port, args.host)
+    print(f"[client] server ready: {health}")
+    vocab_probe = http.client.HTTPConnection(args.host, args.port,
+                                             timeout=10)
+    vocab_probe.request("GET", "/v1/models")
+    models = json.loads(vocab_probe.getresponse().read())
+    vocab_probe.close()
+    info = models["data"][0]
+    print(f"[client] model: {info}")
+    cap = int(health["capacity"])
+    vocab = int(info["vocab"])
+
+    total_tokens = 0
+    t0 = time.monotonic()
+    for i in range(args.requests):
+        prompt = shared_prefix(args.shared_prefix, vocab)
+        prompt += [(7 * i + j) % 13 + 1 for j in range(args.suffix_tokens)]
+        prompt = prompt[:cap - args.max_tokens - 1]
+        toks = []
+        for tok, fin in complete(args.port, prompt, host=args.host,
+                                 max_tokens=args.max_tokens, slo=args.slo):
+            if tok is not None:
+                toks.append(tok)
+        total_tokens += len(toks)
+        print(f"[client] req {i}: {len(toks)} tokens: {toks}")
+    dt = time.monotonic() - t0
+    rate = total_tokens / max(dt, 1e-9)
+    print(f"[client] {total_tokens} tokens in {dt:.2f}s "
+          f"({rate:.1f} tok/s)")
+
+    text = scrape(args.port, args.host)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(text)
+        print(f"[client] metrics scrape -> {args.metrics_out}")
+    if args.check:
+        finished = metric_value(text, "engine_requests_finished_total")
+        skipped = metric_value(text, "engine_prefill_tokens_total",
+                               'kind="skipped"')
+        print(f"[client] check: finished={finished} "
+              f"prefill_skipped={skipped} rate={rate:.1f}")
+        assert total_tokens > 0, "no tokens streamed"
+        assert rate > 0, "tokens/sec not positive"
+        assert finished >= 1, \
+            f"metrics report {finished} finished requests"
+        if args.expect_warm:
+            assert skipped > 0, \
+                "warmed server skipped no prefill tokens"
+        print("[client] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

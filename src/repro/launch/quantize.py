@@ -73,7 +73,8 @@ def parse_draft(spec):
 
 def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
         n_calib: int = 8, calib_seq: int = 128, seed: int = 0,
-        draft: str = None, dist_ctx=None, log=print, obs=None) -> dict:
+        draft: str = None, dist_ctx=None, log=print, obs=None,
+        save_workers: int = 0) -> dict:
     """Train (optionally) -> calibrate -> pack -> save; returns the manifest.
 
     ``draft="rtn-w4"`` additionally RTN-packs the *same* prepared fp params
@@ -104,6 +105,7 @@ def run(cfg, qcfg: QuantConfig, out_dir: str, *, train_steps: int = 0,
             f"{len(skipped)} kernels left fp")
     manifest = qckpt.save(out_dir, packed, cfg, qcfg,
                           draft=dpacked, draft_qcfg=dq,
+                          workers=save_workers,
                           extra={"seed": seed, "train_steps": train_steps,
                                  "n_calib": n_calib, "calib_seq": calib_seq})
 
@@ -143,6 +145,10 @@ def main():
                     help="also pack a zero-calibration speculative draft "
                          "of the same weights into the checkpoint "
                          "(e.g. rtn-w4)")
+    ap.add_argument("--save-workers", type=int, default=0,
+                    help="write planes.bin with N parallel per-shard "
+                         "writers (byte-identical to the default single "
+                         "streaming writer)")
     ap.add_argument("--metrics-out", default=None, metavar="metrics.prom",
                     help="write pipeline_* metrics (per-layer wall, "
                          "hessian/solve split, quant error) as Prometheus "
@@ -162,7 +168,7 @@ def main():
         else None
     run(cfg, qcfg, args.out, train_steps=args.train_steps,
         n_calib=args.calib, calib_seq=args.calib_seq, seed=args.seed,
-        draft=args.draft, obs=ob)
+        draft=args.draft, obs=ob, save_workers=args.save_workers)
     if ob is not None:
         if args.metrics_out:
             obs_mod.prom.write(args.metrics_out, ob.metrics)

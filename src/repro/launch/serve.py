@@ -2,8 +2,12 @@
 
 Serves a demo batch of requests through the engine (continuous-batching
 slot pool by default; ``--engine paged`` adds the block-pool KV with prefix
-sharing, ``--engine static`` runs the cohort baseline).  Weights come from
-one of:
+sharing, ``--engine static`` runs the cohort baseline), or — with
+``--http PORT`` — exposes the engine as a network service: OpenAI-style
+``POST /v1/completions`` with SSE streaming, live ``GET /metrics``,
+``/healthz`` and ``/v1/models`` (see ``docs/http_api.md``;
+``launch/client.py`` is the matching reference client).  Weights come
+from one of:
 
   * ``--ckpt DIR`` — a packed checkpoint written by ``launch/quantize.py``
     (or ``serving.qserve.ckpt.save``): the manifest names the model config
@@ -24,6 +28,13 @@ them, else an in-memory RTN pack of the same weights; greedy output is
 bit-identical to target-only decode), ``--prefill-chunk N`` admits long
 prompts in fixed chunks interleaved with decode ticks, and ``--slo``
 assigns SLO classes that order admission and preemption.
+
+Fleet ops (paged engine + ``--ckpt``): ``--save-warmup`` persists the
+prefix cache populated by the demo batch beside the weight planes (use
+``--shared-prefix N`` to give the demo prompts a deterministic common
+prefix worth caching); ``--warmup`` pre-seeds a fresh replica's prefix
+cache from that file at boot, so restarted servers skip the shared
+prefill from tick one.
 """
 import argparse
 import contextlib
@@ -44,30 +55,7 @@ from repro.serving.quantized import quantize_params_rtn
 QUANT_CHOICES = ("none", "rtn-w4", "rtn-w3", "rtn-w2")
 
 
-def _serve_requests(cfg, params, args, plan, draft=None, obs=None):
-    """Build the chosen engine, serve the demo batch, return the requests."""
-    if args.engine == "paged":
-        eng = PagedEngine(cfg, params, max_batch=args.requests,
-                          capacity=128, plan=plan,
-                          block_size=args.block_size, kv_bits=args.kv_bits,
-                          draft=draft, spec_k=args.spec_k,
-                          prefill_chunk=args.prefill_chunk, obs=obs)
-    else:
-        cls = Engine if args.engine == "continuous" else StaticEngine
-        eng = cls(cfg, params, max_batch=args.requests, capacity=128,
-                  plan=plan, obs=obs)
-    rng = np.random.default_rng(0)
-    slos = {"interactive": ["interactive"], "batch": ["batch"],
-            "mixed": ["interactive", "batch"]}[args.slo]
-    rs = [eng.submit(rng.integers(0, cfg.vocab, size=12),
-                     max_tokens=args.max_tokens,
-                     slo=slos[i % len(slos)])
-          for i in range(args.requests)]
-    eng.run()
-    return eng, rs
-
-
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="toy-llama")
     ap.add_argument("--smoke", action="store_true")
@@ -86,6 +74,8 @@ def main():
                          "+ per-token scale planes, ~2x less KV HBM)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=128,
+                    help="per-request KV capacity in tokens")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree over local devices")
     ap.add_argument("--engine", default="continuous",
@@ -100,8 +90,9 @@ def main():
                          "with the checkpoint's co-packed draft planes "
                          "(--ckpt) or an in-memory rtn-wN pack of the same "
                          "weights, verify with the target model")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="draft tokens proposed per speculative tick")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens proposed per speculative tick "
+                         "(requires --draft; default 4)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="paged engine: admit prompts longer than this in "
                          "fixed chunks interleaved with decode ticks "
@@ -111,24 +102,165 @@ def main():
                     help="SLO class(es) for the demo requests (mixed "
                          "alternates; interactive admits first and is "
                          "preempted last)")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP on this port instead of running "
+                         "the demo batch (0 = ephemeral port; see "
+                         "docs/http_api.md)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="give every demo prompt the same deterministic "
+                         "N-token prefix (exercises prefix sharing; "
+                         "launch/client.py --shared-prefix rebuilds it)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="paged engine + --ckpt: pre-seed the prefix cache "
+                         "from the checkpoint's warmup file at boot")
+    ap.add_argument("--save-warmup", action="store_true",
+                    help="paged engine + --ckpt: after the demo batch, "
+                         "persist the populated prefix cache beside the "
+                         "weight planes (warmup.json + warmup.npz)")
     ap.add_argument("--metrics-out", default=None, metavar="metrics.prom",
                     help="write the engine's metrics registry as "
                          "Prometheus text exposition after serving")
     ap.add_argument("--trace-out", default=None, metavar="trace.json",
                     help="write the request-lifecycle trace as Chrome "
                          "trace-event JSON (open in ui.perfetto.dev)")
-    args = ap.parse_args()
+    return ap
 
+
+def validate_args(ap: argparse.ArgumentParser, args: argparse.Namespace):
+    """All flag cross-checks in one testable place (``ap.error`` exits 2).
+    Combinations that would silently no-op are hard errors — a flag the
+    user typed must either take effect or fail loudly."""
     if args.kv_bits != 16 and args.engine != "paged":
         ap.error("--kv-bits 8 requires --engine paged (the int8 pool is "
                  "a block-pool layout)")
     if args.draft and args.engine != "paged":
         ap.error("--draft requires --engine paged (speculative decode "
                  "runs on the block-pool scheduler)")
+    if args.spec_k is not None and not args.draft:
+        ap.error("--spec-k without a draft source silently no-ops; add "
+                 "--draft rtn-wN (or quantize with draft planes and pass "
+                 "--ckpt + --draft)")
+    if args.prefill_chunk and args.engine != "paged":
+        ap.error(f"--prefill-chunk is a paged-engine feature; --engine "
+                 f"{args.engine} would silently ignore it")
     if args.check_quant and not args.ckpt:
         ap.error("--check-quant only makes sense with --ckpt")
     if args.ckpt and args.quant != "none":
         ap.error("--ckpt already carries packed weights; drop --quant")
+    if args.engine == "paged" and args.capacity % args.block_size:
+        ap.error(f"--capacity {args.capacity} must be a multiple of "
+                 f"--block-size {args.block_size}")
+    if args.warmup or args.save_warmup:
+        if args.engine != "paged":
+            ap.error("--warmup/--save-warmup operate on the paged "
+                     "engine's prefix cache; add --engine paged")
+        if not args.ckpt:
+            ap.error("--warmup/--save-warmup need a checkpoint directory "
+                     "to hold the warmup file; add --ckpt DIR")
+    if args.http is not None:
+        if not 0 <= args.http <= 65535:
+            ap.error(f"--http {args.http} is not a valid port")
+        if args.engine == "static":
+            ap.error("--http requires a continuous engine (the static "
+                     "cohort baseline has no streaming surface)")
+        if args.check_quant:
+            ap.error("--check-quant runs the demo batch; drop --http")
+        if args.save_warmup:
+            ap.error("--save-warmup persists the demo batch's prefix "
+                     "cache; run it without --http, then boot the server "
+                     "with --warmup")
+        if args.tp > 1:
+            ap.error("--http currently serves tp=1 (the driver thread "
+                     "does not re-enter the launcher's mesh context)")
+    return args
+
+
+def _demo_prompts(cfg, args):
+    """The demo workload: 12 random tokens per request, optionally behind
+    a shared deterministic prefix (same construction as launch/client.py
+    --shared-prefix, so a warmed server recognizes client prompts)."""
+    rng = np.random.default_rng(0)
+    pre = (np.arange(1, args.shared_prefix + 1) % cfg.vocab).astype(np.int32)
+    return [np.concatenate([pre, rng.integers(0, cfg.vocab,
+                                              size=12).astype(np.int32)])
+            for _ in range(args.requests)]
+
+
+def _build_engine(cfg, params, args, plan, draft=None, obs=None):
+    if args.engine == "paged":
+        return PagedEngine(cfg, params, max_batch=args.requests,
+                           capacity=args.capacity, plan=plan,
+                           block_size=args.block_size, kv_bits=args.kv_bits,
+                           draft=draft,
+                           spec_k=4 if args.spec_k is None else args.spec_k,
+                           prefill_chunk=args.prefill_chunk, obs=obs)
+    cls = Engine if args.engine == "continuous" else StaticEngine
+    return cls(cfg, params, max_batch=args.requests,
+               capacity=args.capacity, plan=plan, obs=obs)
+
+
+def _serve_requests(cfg, params, args, plan, draft=None, obs=None):
+    """Build the chosen engine, serve the demo batch, return the requests."""
+    eng = _build_engine(cfg, params, args, plan, draft=draft, obs=obs)
+    if args.warmup:
+        from repro.serving.qserve import ckpt as qckpt
+        n = qckpt.load_warmup(args.ckpt, eng)
+        print(f"[serve] prefix cache warmed: {n} blocks from {args.ckpt}")
+    slos = {"interactive": ["interactive"], "batch": ["batch"],
+            "mixed": ["interactive", "batch"]}[args.slo]
+    rs = [eng.submit(p, max_tokens=args.max_tokens,
+                     slo=slos[i % len(slos)])
+          for i, p in enumerate(_demo_prompts(cfg, args))]
+    eng.run()
+    return eng, rs
+
+
+def _model_info(cfg, manifest, args) -> dict:
+    """What /v1/models and /healthz report about the served model."""
+    qcfg = None
+    if manifest is not None:
+        from repro.serving.qserve import ckpt as qckpt
+        qcfg = qckpt.quant_config(manifest)
+    if qcfg is not None:
+        method, wbits = qcfg.method, qcfg.wbits
+    elif args.quant != "none":
+        method, wbits = "rtn", int(args.quant.rsplit("w", 1)[1])
+    else:
+        method, wbits = "fp", None
+    return {"arch": cfg.name, "method": method, "wbits": wbits,
+            "vocab": cfg.vocab,
+            "kv_bits": args.kv_bits if args.engine == "paged" else 16,
+            "engine": args.engine, "capacity": args.capacity,
+            "spec_decode": bool(args.draft),
+            "prefill_chunk": args.prefill_chunk}
+
+
+def _serve_http(cfg, params, args, plan, draft, ob, manifest):
+    """Run the HTTP front end until interrupted (Ctrl-C)."""
+    from repro.serving.api import ApiServer, EngineBridge
+    eng = _build_engine(cfg, params, args, plan, draft=draft, obs=ob)
+    if args.warmup:
+        from repro.serving.qserve import ckpt as qckpt
+        n = qckpt.load_warmup(args.ckpt, eng)
+        print(f"[serve] prefix cache warmed: {n} blocks from {args.ckpt}")
+    bridge = EngineBridge(eng).start()
+    server = ApiServer(bridge, model_info=_model_info(cfg, manifest, args),
+                       port=args.http)
+    port = server.start()
+    print(f"[serve] http on 127.0.0.1:{port} — POST /v1/completions, "
+          "GET /metrics /healthz /v1/models (Ctrl-C to stop)", flush=True)
+    try:
+        server.join()
+    except KeyboardInterrupt:
+        print("\n[serve] shutting down")
+    finally:
+        server.stop()
+        bridge.stop()
+
+
+def main(argv=None):
+    ap = build_parser()
+    args = validate_args(ap, ap.parse_args(argv))
 
     manifest = None
     if args.ckpt:
@@ -167,7 +299,7 @@ def main():
                 draft = qckpt.load(args.ckpt, plan, manifest=manifest,
                                    which="draft")
                 print("[serve] speculative draft: checkpoint draft planes "
-                      f"(k={args.spec_k})")
+                      f"(k={4 if args.spec_k is None else args.spec_k})")
         else:
             params = build_model(cfg).init(jax.random.PRNGKey(0))
             if args.quant != "none":
@@ -183,12 +315,20 @@ def main():
                     build_model(cfg).init(jax.random.PRNGKey(0)),
                     QuantConfig(wbits=wbits, group_size=32))
                 print(f"[serve] speculative draft: in-memory {args.draft} "
-                      f"pack of the same weights (k={args.spec_k})")
+                      f"pack of the same weights "
+                      f"(k={4 if args.spec_k is None else args.spec_k})")
         ob = obs_mod.Obs.make()
+        if args.http is not None:
+            _serve_http(cfg, params, args, plan, draft, ob, manifest)
+            return
         eng, rs = _serve_requests(cfg, params, args, plan, draft=draft,
                                   obs=ob)
     for r in rs:
         print(f"[serve] req {r.rid}: {r.out}")
+    if args.save_warmup:
+        from repro.serving.qserve import ckpt as qckpt
+        n = qckpt.save_warmup(args.ckpt, eng)
+        print(f"[serve] warmup saved: {n} prefix blocks -> {args.ckpt}")
     if args.metrics_out:
         obs_mod.prom.write(args.metrics_out, ob.metrics)
         print(f"[serve] metrics -> {args.metrics_out}")

@@ -1,0 +1,20 @@
+"""Asyncio HTTP serving front end over the paged engine.
+
+Layers (one file each, composable without the others):
+
+  ``protocol``  request validation + JSON/SSE wire shapes (no I/O)
+  ``bridge``    the driver thread owning the jit'd engine loop and the
+                thread-safe submit/stream/cancel surface
+  ``server``    the asyncio stream server speaking HTTP/1.1 + SSE
+
+``launch/serve.py --http PORT`` wires a loaded checkpoint into
+``EngineBridge`` + ``ApiServer``; ``launch/client.py`` is the matching
+reference client; ``docs/http_api.md`` specifies the wire format.
+"""
+from repro.serving.api.bridge import EngineBridge, StreamHandle
+from repro.serving.api.protocol import (ApiError, CompletionRequest,
+                                        parse_completion)
+from repro.serving.api.server import ApiServer
+
+__all__ = ["ApiServer", "EngineBridge", "StreamHandle", "ApiError",
+           "CompletionRequest", "parse_completion"]

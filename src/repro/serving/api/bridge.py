@@ -1,0 +1,228 @@
+"""Thread-safe bridge between asyncio HTTP handlers and the jit'd engine.
+
+The engine is single-threaded by construction: its scheduler state (slot
+vectors, block tables, the donated device cache) is unlocked, and every
+jax dispatch must come from one thread.  ``EngineBridge`` therefore owns a
+**driver thread** that runs the engine loop (``Engine.serve_step``: admit
+-> chunk prefills -> decode tick) and funnels every mutation through it:
+
+  * HTTP handlers never touch the engine.  ``await bridge.submit(...)``
+    posts a command onto a thread-safe inbox and resolves once the driver
+    has admitted the request into the engine queue; cancels (client
+    disconnects) post the same way and retire the slot between ticks,
+    returning its blocks to the pool.
+  * Tokens flow the other way through the engine's ``on_token`` /
+    ``on_finish`` hooks: the driver pushes ``("tok", t)`` /
+    ``("done", reason)`` items into a per-request ``asyncio.Queue`` via
+    ``loop.call_soon_threadsafe`` — the handler just drains its queue and
+    frames SSE events.
+  * ``/metrics`` renders the engine's live ``MetricsRegistry`` under the
+    same mutex the driver holds across a step, so a scrape never races a
+    half-updated family.
+
+The driver idles on an event when the engine has no work (no busy-wait)
+and wakes on the next submit.  Admission stalls — a queued request that
+can never fit the block pool even with the engine idle — are shed back to
+their clients as stream errors instead of wedging the thread, mirroring
+``Engine.run``'s stall detection.
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import queue as queue_mod
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.obs import prom
+from repro.serving.api.protocol import finish_reason
+
+
+class StreamHandle:
+    """What a handler gets back from ``submit``: the engine request (rid,
+    prompt, slo, ...) plus the asyncio queue its stream items land on.
+    Items: ``("tok", token_id)``, ``("done", finish_reason)``,
+    ``("error", message)`` — done/error are terminal."""
+
+    __slots__ = ("request", "queue")
+
+    def __init__(self, request, q: asyncio.Queue):
+        self.request = request
+        self.queue = q
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+
+class EngineBridge:
+    def __init__(self, engine, *, idle_wait: float = 0.05,
+                 stall_limit: int = 3):
+        self.engine = engine
+        self.idle_wait = idle_wait
+        self.stall_limit = stall_limit
+        self.error: Optional[BaseException] = None
+        self.started_ns: Optional[int] = None
+        # lock: engine + metrics-registry mutations (driver) vs /metrics
+        # renders and /healthz stat reads (handler threads)
+        self.lock = threading.Lock()
+        self._inbox: queue_mod.Queue = queue_mod.Queue()
+        self._streams: Dict[int, Tuple[asyncio.AbstractEventLoop,
+                                       asyncio.Queue]] = {}
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        engine.on_token = self._on_token
+        engine.on_finish = self._on_finish
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> "EngineBridge":
+        assert self._thread is None, "bridge already started"
+        self._thread = threading.Thread(target=self._drive,
+                                        name="engine-driver", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0):
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+
+    # ------------------------------------------------- handler-side surface
+    async def submit(self, prompt, **submit_kwargs) -> StreamHandle:
+        """Admit a request from an asyncio handler.  Raises whatever
+        ``Engine.submit`` raises (e.g. ValueError on an over-capacity
+        prompt) and RuntimeError if the driver thread is down."""
+        if self.error is not None:
+            raise RuntimeError(f"engine driver died: {self.error!r}")
+        loop = asyncio.get_running_loop()
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        q: asyncio.Queue = asyncio.Queue()
+        self._inbox.put(("submit", np.asarray(prompt, np.int32),
+                         submit_kwargs, fut, loop, q))
+        self._wake.set()
+        request = await asyncio.wrap_future(fut)
+        return StreamHandle(request, q)
+
+    def cancel(self, rid: int):
+        """Abort ``rid`` (thread-safe, non-blocking): the driver retires
+        its slot between ticks and frees its blocks."""
+        self._inbox.put(("cancel", rid))
+        self._wake.set()
+
+    def metrics_text(self) -> str:
+        """The engine's registry as Prometheus 0.0.4 text exposition,
+        rendered under the driver mutex."""
+        with self.lock:
+            return prom.render(self.engine.obs.metrics)
+
+    def stats(self) -> dict:
+        """Scheduler snapshot for ``/healthz`` (consistent under lock)."""
+        with self.lock:
+            eng = self.engine
+            return {
+                "status": "error" if self.error is not None else "ok",
+                "error": repr(self.error) if self.error else None,
+                "queue_depth": len(eng.queue),
+                "active_slots": sum(s is not None for s in eng._slots),
+                "max_batch": eng.max_batch,
+                "capacity": eng.capacity,
+                "ticks": eng.ticks,
+                "requests_finished": len(eng.finished),
+            }
+
+    # ------------------------------------------------- engine-side (driver)
+    def _post(self, loop, q, item):
+        try:
+            loop.call_soon_threadsafe(q.put_nowait, item)
+        except RuntimeError:
+            pass          # client's loop is gone; its cancel is in flight
+
+    def _on_token(self, r, tok: int):
+        s = self._streams.get(r.rid)
+        if s is not None:
+            self._post(*s, ("tok", int(tok)))
+
+    def _on_finish(self, r):
+        s = self._streams.pop(r.rid, None)
+        if s is not None:
+            self._post(*s, ("done", finish_reason(r)))
+
+    def _push(self, rid: int, item):
+        s = self._streams.get(rid)
+        if s is not None:
+            self._post(*s, item)
+
+    def _drain_inbox(self):
+        while True:
+            try:
+                cmd = self._inbox.get_nowait()
+            except queue_mod.Empty:
+                return
+            if cmd[0] == "submit":
+                _, prompt, kw, fut, loop, q = cmd
+                with self.lock:
+                    try:
+                        r = self.engine.submit(prompt, **kw)
+                    except Exception as e:          # over-length, bad kw
+                        fut.set_exception(e)
+                        continue
+                    self._streams[r.rid] = (loop, q)
+                fut.set_result(r)
+            elif cmd[0] == "cancel":
+                with self.lock:
+                    self.engine.cancel(cmd[1])
+
+    def _shed_queue(self):
+        """Admission is stalled with an idle engine: every queued request
+        exceeds what the pool can ever hold.  Error their streams and
+        cancel them so the driver goes back to serving, instead of raising
+        like ``Engine.run`` does."""
+        eng = self.engine
+        with self.lock:
+            for r in list(eng.queue):
+                self._push(r.rid, (
+                    "error", f"request {r.rid} cannot be scheduled: its "
+                             "working set exceeds the KV block pool"))
+                eng.cancel(r.rid)
+
+    def _drive(self):
+        from repro import obs as obs_mod
+        self.started_ns = obs_mod.now_ns()
+        stalls = 0
+        try:
+            while not self._stop.is_set():
+                self._drain_inbox()
+                with self.lock:
+                    eng = self.engine
+                    done0 = len(eng.finished)
+                    busy = eng.serve_step()
+                    progressed = eng._busy() or eng._prefilling() or \
+                        len(eng.finished) > done0
+                    queued = bool(eng.queue)
+                if progressed:
+                    stalls = 0
+                elif queued:
+                    # nothing running: backoffs cannot expire naturally —
+                    # force retries, then shed what still cannot fit
+                    stalls += 1
+                    with self.lock:
+                        for r in eng.queue:
+                            r._not_before = 0
+                    if stalls > self.stall_limit:
+                        self._shed_queue()
+                        stalls = 0
+                else:
+                    stalls = 0
+                if not busy:
+                    self._wake.wait(self.idle_wait)
+                    self._wake.clear()
+        except BaseException as e:                  # pragma: no cover
+            self.error = e
+            for rid in list(self._streams):
+                self._push(rid, ("error", f"engine driver died: {e!r}"))
+            raise

@@ -1,0 +1,156 @@
+"""Request/response schemas for the HTTP serving front end.
+
+One place owns validation and JSON shapes, so the asyncio server stays a
+transport layer and the integration tests can pin the schema without a
+socket.  The completion API is OpenAI-style (``POST /v1/completions``)
+with two repo-specific notes, both documented in ``docs/http_api.md``:
+
+  * there is no tokenizer in this repo — ``prompt`` is a list of token
+    ids, and streamed chunks carry ``token_id`` (with ``text`` rendered
+    as the decimal id plus a space, so piping the stream through a real
+    detokenizer is a drop-in swap);
+  * ``slo`` ("interactive" | "batch") and ``seed`` map straight onto
+    ``Engine.submit`` — SLO orders admission/preemption, seed keys the
+    per-request sampling stream (temperature > 0 output is reproducible
+    for a given seed regardless of co-batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional
+
+from repro.serving.engine import SLO_RANK
+
+#: hard cap on request bodies (a completion request is a few KB of token
+#: ids; anything larger is a client bug or abuse, rejected 413 before parse)
+MAX_BODY_BYTES = 1 << 20
+
+
+class ApiError(Exception):
+    """Client-visible request failure -> HTTP ``status`` + JSON error."""
+
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
+        self.message = message
+
+
+@dataclasses.dataclass
+class CompletionRequest:
+    prompt: List[int]
+    max_tokens: int = 32
+    temperature: float = 0.0
+    seed: Optional[int] = None
+    slo: str = "interactive"
+    eos: Optional[int] = None
+    stream: bool = True
+
+    def submit_kwargs(self) -> dict:
+        return {"max_tokens": self.max_tokens,
+                "temperature": self.temperature, "seed": self.seed,
+                "slo": self.slo, "eos": self.eos}
+
+
+def _field(body: dict, name: str, types, default, lo=None, hi=None):
+    v = body.get(name, default)
+    if v is None:
+        return None
+    if isinstance(v, bool) or not isinstance(v, types):
+        want = getattr(types, "__name__", None) or "/".join(
+            t.__name__ for t in types)
+        raise ApiError(400, f"{name!r} must be {want}, "
+                            f"got {type(v).__name__}")
+    if lo is not None and v < lo:
+        raise ApiError(400, f"{name!r} must be >= {lo}, got {v}")
+    if hi is not None and v > hi:
+        raise ApiError(400, f"{name!r} must be <= {hi}, got {v}")
+    return v
+
+
+def parse_completion(body_bytes: bytes, *, capacity: int,
+                     vocab: int) -> CompletionRequest:
+    """Validate a ``/v1/completions`` body.  Every failure is a 4xx
+    ``ApiError`` raised *before* anything reaches the engine driver
+    thread — a malformed or over-length request never wedges serving."""
+    if len(body_bytes) > MAX_BODY_BYTES:
+        raise ApiError(413, f"body of {len(body_bytes)} B exceeds the "
+                            f"{MAX_BODY_BYTES} B limit")
+    try:
+        body = json.loads(body_bytes or b"null")
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ApiError(400, f"body is not valid JSON: {e}") from e
+    if not isinstance(body, dict):
+        raise ApiError(400, "body must be a JSON object")
+
+    prompt = body.get("prompt")
+    if not isinstance(prompt, list) or not prompt or \
+            not all(isinstance(t, int) and not isinstance(t, bool)
+                    for t in prompt):
+        raise ApiError(400, "'prompt' must be a non-empty list of token "
+                            "ids (this server has no tokenizer)")
+    if any(t < 0 or t >= vocab for t in prompt):
+        raise ApiError(400, f"prompt token out of range for vocab {vocab}")
+    if len(prompt) >= capacity - 1:
+        raise ApiError(400, f"prompt of {len(prompt)} tokens does not fit "
+                            f"the capacity-{capacity} cache with room to "
+                            "decode")
+
+    slo = body.get("slo", "interactive")
+    if slo not in SLO_RANK:
+        raise ApiError(400, f"'slo' must be one of {sorted(SLO_RANK)}, "
+                            f"got {slo!r}")
+    stream = body.get("stream", True)
+    if not isinstance(stream, bool):
+        raise ApiError(400, "'stream' must be a boolean")
+    temperature = _field(body, "temperature", (int, float), 0.0, lo=0.0)
+    return CompletionRequest(
+        prompt=prompt,
+        max_tokens=_field(body, "max_tokens", int, 32, lo=1, hi=1 << 20),
+        temperature=float(temperature),
+        seed=_field(body, "seed", int, None, lo=0),
+        slo=slo,
+        eos=_field(body, "eos", int, None, lo=0),
+        stream=stream)
+
+
+# --------------------------------------------------------------- responses
+
+def chunk_json(model: str, rid: int, token: int,
+               finish_reason: Optional[str] = None) -> dict:
+    """One streamed SSE chunk (or the final zero-token chunk carrying the
+    finish reason)."""
+    choice = {"index": 0,
+              "text": f"{token} " if token is not None else "",
+              "token_id": token,
+              "finish_reason": finish_reason}
+    return {"id": f"cmpl-{rid}", "object": "text_completion",
+            "model": model, "choices": [choice]}
+
+
+def completion_json(model: str, rid: int, prompt_tokens: int,
+                    tokens: List[int], finish_reason: str) -> dict:
+    """The non-streaming response body."""
+    return {
+        "id": f"cmpl-{rid}", "object": "text_completion", "model": model,
+        "choices": [{"index": 0,
+                     "text": "".join(f"{t} " for t in tokens),
+                     "token_ids": tokens,
+                     "finish_reason": finish_reason}],
+        "usage": {"prompt_tokens": prompt_tokens,
+                  "completion_tokens": len(tokens),
+                  "total_tokens": prompt_tokens + len(tokens)},
+    }
+
+
+def error_json(status: int, message: str) -> dict:
+    return {"error": {"code": status, "message": message}}
+
+
+def finish_reason(r) -> str:
+    """Map a finished ``Request`` to the wire finish_reason."""
+    if r.cancelled:
+        return "cancelled"
+    if r.eos is not None and r.out and r.out[-1] == r.eos:
+        return "stop"
+    return "length"

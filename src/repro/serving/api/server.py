@@ -1,0 +1,293 @@
+"""Asyncio HTTP front end over the serving engine (stdlib-only).
+
+``ApiServer`` binds an asyncio stream server (no framework — the repo
+adds no deps) and speaks just enough HTTP/1.1 for the serving surface:
+
+  ``POST /v1/completions``  OpenAI-style completion; ``"stream": true``
+                            (default) frames each token as an SSE
+                            ``data:`` event and ends with ``data: [DONE]``
+  ``GET /metrics``          live Prometheus 0.0.4 exposition of the
+                            engine's ``MetricsRegistry``
+  ``GET /healthz``          scheduler liveness snapshot (queue depth,
+                            active slots, ticks)
+  ``GET /v1/models``        the served model: arch, quant method, wbits,
+                            kv_bits from the checkpoint manifest
+
+Every response closes its connection (``Connection: close``), which keeps
+the framing trivial and is how the stream signals completion to clients
+without chunked encoding.  Client disconnects are detected two ways —
+EOF on the request socket (watched concurrently with the token queue) and
+write failures — and both funnel into ``bridge.cancel``, so an abandoned
+stream's slot and KV blocks return to the pool within a tick.
+
+The server runs its own event loop on a background thread (``start()`` /
+``stop()``), so the CLI, tests, and benchmarks share one entry point.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+from typing import Optional
+
+from repro.serving.api import protocol
+from repro.serving.api.bridge import EngineBridge
+from repro.serving.api.protocol import ApiError
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            405: "Method Not Allowed", 413: "Payload Too Large",
+            500: "Internal Server Error", 503: "Service Unavailable"}
+_MAX_HEADER_BYTES = 32768
+
+
+def _head(status: int, ctype: str, extra: str = "") -> bytes:
+    return (f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}\r\n"
+            f"Content-Type: {ctype}\r\n"
+            f"Connection: close\r\n{extra}\r\n").encode()
+
+
+def _response(status: int, body: bytes, ctype: str) -> bytes:
+    return _head(status, ctype,
+                 f"Content-Length: {len(body)}\r\n") + body
+
+
+def _json_response(status: int, obj) -> bytes:
+    return _response(status, json.dumps(obj).encode(), "application/json")
+
+
+def _sse_event(obj) -> bytes:
+    return b"data: " + json.dumps(obj).encode() + b"\n\n"
+
+
+class ApiServer:
+    def __init__(self, bridge: EngineBridge, *, model_info: Optional[dict]
+                 = None, host: str = "127.0.0.1", port: int = 0):
+        self.bridge = bridge
+        self.model_info = dict(model_info or {})
+        self.host = host
+        self.port = port              # 0 = ephemeral; start() fills it in
+        self._thread: Optional[threading.Thread] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._stop_ev: Optional[asyncio.Event] = None
+        self._ready = threading.Event()
+        self._startup_err: Optional[BaseException] = None
+
+    @property
+    def model_name(self) -> str:
+        return str(self.model_info.get("arch", "repro"))
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> int:
+        """Bind and serve on a background thread; returns the bound port."""
+        assert self._thread is None, "server already started"
+        self._thread = threading.Thread(
+            target=lambda: asyncio.run(self._amain()),
+            name="api-server", daemon=True)
+        self._thread.start()
+        self._ready.wait(timeout=30)
+        if self._startup_err is not None:
+            raise self._startup_err
+        if not self._ready.is_set():
+            raise RuntimeError("API server failed to start within 30s")
+        return self.port
+
+    def stop(self, timeout: float = 10.0):
+        if self._loop is not None and self._stop_ev is not None:
+            self._loop.call_soon_threadsafe(self._stop_ev.set)
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+
+    def join(self):
+        """Block until the server thread exits (Ctrl-C to interrupt)."""
+        while self._thread is not None and self._thread.is_alive():
+            self._thread.join(timeout=0.5)
+
+    async def _amain(self):
+        self._loop = asyncio.get_running_loop()
+        self._stop_ev = asyncio.Event()
+        try:
+            server = await asyncio.start_server(self._handle, self.host,
+                                                self.port)
+        except OSError as e:
+            self._startup_err = e
+            self._ready.set()
+            return
+        self.port = server.sockets[0].getsockname()[1]
+        self._ready.set()
+        async with server:
+            await self._stop_ev.wait()
+
+    # ------------------------------------------------------------ plumbing
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter):
+        try:
+            try:
+                method, path, body = await self._read_request(reader)
+            except ApiError as e:
+                writer.write(_json_response(
+                    e.status, protocol.error_json(e.status, e.message)))
+                return
+            await self._route(method, path, body, reader, writer)
+        except (ConnectionError, asyncio.IncompleteReadError,
+                asyncio.LimitOverrunError):
+            pass                                   # client went away
+        except Exception as e:                     # pragma: no cover
+            try:
+                writer.write(_json_response(
+                    500, protocol.error_json(500, repr(e))))
+            except Exception:
+                pass
+        finally:
+            try:
+                if writer.can_write_eof():
+                    writer.write_eof()
+                writer.close()
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    async def _read_request(self, reader):
+        line = await reader.readline()
+        parts = line.decode("latin-1").split()
+        if len(parts) != 3 or not parts[2].startswith("HTTP/1."):
+            raise ApiError(400, f"malformed request line {line!r}")
+        method, path = parts[0].upper(), parts[1]
+        headers = {}
+        total = len(line)
+        while True:
+            h = await reader.readline()
+            total += len(h)
+            if total > _MAX_HEADER_BYTES:
+                raise ApiError(400, "header section too large")
+            if h in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = h.decode("latin-1").partition(":")
+            headers[k.strip().lower()] = v.strip()
+        body = b""
+        try:
+            n = int(headers.get("content-length", "0"))
+        except ValueError:
+            raise ApiError(400, "bad Content-Length") from None
+        if n < 0 or n > protocol.MAX_BODY_BYTES:
+            raise ApiError(413, f"Content-Length {n} out of range")
+        if n:
+            body = await reader.readexactly(n)
+        return method, path, body
+
+    async def _route(self, method, path, body, reader, writer):
+        path = path.split("?", 1)[0]
+        if path == "/v1/completions":
+            if method != "POST":
+                writer.write(_json_response(405, protocol.error_json(
+                    405, "use POST /v1/completions")))
+                return
+            await self._completions(body, reader, writer)
+        elif path == "/metrics" and method == "GET":
+            writer.write(_response(
+                200, self.bridge.metrics_text().encode(),
+                "text/plain; version=0.0.4"))
+        elif path == "/healthz" and method == "GET":
+            st = self.bridge.stats()
+            writer.write(_json_response(503 if st["status"] != "ok"
+                                        else 200, st))
+        elif path == "/v1/models" and method == "GET":
+            writer.write(_json_response(200, {
+                "object": "list",
+                "data": [dict(self.model_info, id=self.model_name,
+                              object="model")]}))
+        else:
+            writer.write(_json_response(404, protocol.error_json(
+                404, f"no route for {method} {path}")))
+
+    # --------------------------------------------------------- completions
+    async def _completions(self, body, reader, writer):
+        eng = self.bridge.engine
+        try:
+            req = protocol.parse_completion(
+                body, capacity=eng.capacity, vocab=eng.cfg.vocab)
+        except ApiError as e:
+            writer.write(_json_response(
+                e.status, protocol.error_json(e.status, e.message)))
+            return
+        try:
+            handle = await self.bridge.submit(req.prompt,
+                                              **req.submit_kwargs())
+        except ValueError as e:
+            writer.write(_json_response(400, protocol.error_json(400,
+                                                                 str(e))))
+            return
+        except RuntimeError as e:
+            writer.write(_json_response(503, protocol.error_json(503,
+                                                                 str(e))))
+            return
+        # EOF on the request socket = client hung up; resolves while we
+        # wait on the token queue so an abandoned stream cancels promptly
+        watcher = asyncio.ensure_future(reader.read())
+        try:
+            if req.stream:
+                await self._stream_response(req, handle, watcher, writer)
+            else:
+                await self._full_response(req, handle, watcher, writer)
+        finally:
+            watcher.cancel()
+
+    async def _next_item(self, handle, watcher):
+        """The next stream item, or None on client disconnect."""
+        getter = asyncio.ensure_future(handle.queue.get())
+        done, _ = await asyncio.wait(
+            {getter, watcher}, return_when=asyncio.FIRST_COMPLETED)
+        if getter in done:
+            return getter.result()
+        getter.cancel()
+        return None
+
+    async def _stream_response(self, req, handle, watcher, writer):
+        writer.write(_head(200, "text/event-stream",
+                           "Cache-Control: no-cache\r\n"))
+        model = self.model_name
+        while True:
+            item = await self._next_item(handle, watcher)
+            if item is None:                       # disconnect
+                self.bridge.cancel(handle.rid)
+                return
+            kind, val = item
+            if kind == "tok":
+                writer.write(_sse_event(
+                    protocol.chunk_json(model, handle.rid, val)))
+            elif kind == "done":
+                writer.write(_sse_event(
+                    protocol.chunk_json(model, handle.rid, None,
+                                        finish_reason=val)))
+                writer.write(b"data: [DONE]\n\n")
+                return
+            else:                                  # terminal error
+                writer.write(_sse_event(
+                    {"error": {"message": val, "id": handle.rid}}))
+                writer.write(b"data: [DONE]\n\n")
+                return
+            try:
+                await writer.drain()
+            except (ConnectionError, RuntimeError):
+                self.bridge.cancel(handle.rid)
+                return
+
+    async def _full_response(self, req, handle, watcher, writer):
+        tokens = []
+        while True:
+            item = await self._next_item(handle, watcher)
+            if item is None:
+                self.bridge.cancel(handle.rid)
+                return
+            kind, val = item
+            if kind == "tok":
+                tokens.append(val)
+            elif kind == "done":
+                writer.write(_json_response(200, protocol.completion_json(
+                    self.model_name, handle.rid, len(req.prompt),
+                    tokens, val)))
+                return
+            else:
+                writer.write(_json_response(
+                    503, protocol.error_json(503, val)))
+                return

@@ -69,6 +69,9 @@ class Request:
     slo: str = "interactive"           # SLO class (see SLO_RANK)
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # set by Engine.cancel (client disconnect / shed): the request was
+    # aborted before EOS/budget and its slot+blocks were released
+    cancelled: bool = False
     # scheduler telemetry (continuous engine): tick of admission/retirement
     # and wall-clock completion offset from run() start (benchmarks).
     admit_tick: int = -1
@@ -298,6 +301,12 @@ class _EngineBase:
         self.obs = obs_mod.resolve(obs)
         self._t0_ns = obs_mod.now_ns()     # run() resets; direct-driven
         self._init_obs()                   # engines still get valid offsets
+        # serving-front-end hooks, fired on the thread driving the engine:
+        # on_token(request, token) at the single emission point
+        # (_emit_token), on_finish(request) once per retirement — the
+        # HTTP bridge (serving/api) streams rides on these; None = no-op.
+        self.on_token = None
+        self.on_finish = None
         self.ctx = None
         if plan is not None:
             c = plan.ctx(_serve_shape(capacity, max_batch))
@@ -382,6 +391,8 @@ class _EngineBase:
         r.out.append(tok)
         r.token_times.append(now_off)
         self.m["tokens"].inc()
+        if self.on_token is not None:
+            self.on_token(r, tok)
 
     def _trace_submit(self, r: Request):
         tr = self.obs.tracer
@@ -535,6 +546,47 @@ class Engine(_EngineBase):
         self.m["finished"].labels(slo=r.slo).inc()
         self.m["latency"].labels(slo=r.slo).observe(r.finish_wall)
         self._trace_finish(r)
+        if self.on_finish is not None:
+            self.on_finish(r)
+
+    # -------------------------------------------------------- cancellation
+    def _cancel_slot(self, i: int):
+        """Release slot ``i`` for a cancelled request (paged override also
+        aborts an in-flight chunked prefill)."""
+        self._retire(i)
+
+    def _finish_cancelled_queued(self, r: Request):
+        """Finish bookkeeping for a request cancelled before admission."""
+        r.done = True
+        r.finish_tick = self.ticks
+        r.finish_wall = self._now_off()
+        self.finished[r.rid] = r
+        self.m["finished"].labels(slo=r.slo).inc()
+        self._trace_finish(r)
+        self._queue_gauges()
+        if self.on_finish is not None:
+            self.on_finish(r)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort request ``rid``: drop it from the admission queue, or
+        retire its live slot (the paged engine frees the slot's blocks, so
+        a disconnected client's KV returns to the pool immediately).
+        Returns True when the request was found live.  Must be called from
+        the thread driving the engine — scheduler state is unlocked; the
+        serving front end funnels cancels through its driver thread."""
+        for idx, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(idx)
+                r.cancelled = True
+                r._swap = None          # swap blobs hold no pool blocks
+                self._finish_cancelled_queued(r)
+                return True
+        for i, s in enumerate(self._slots):
+            if s is not None and s.rid == rid:
+                s.cancelled = True
+                self._cancel_slot(i)
+                return True
+        return False
 
     def _acct_prefill(self, computed: int = 0, skipped: int = 0):
         """Prompt-token accounting: legacy attributes (serve.py / tests
@@ -753,6 +805,19 @@ class Engine(_EngineBase):
 
     def _busy(self) -> bool:
         return any(s is not None for s in self._slots)
+
+    def serve_step(self) -> bool:
+        """One scheduler iteration (admit + chunk prefills + decode tick)
+        for callers that own the loop — the HTTP front end's driver thread
+        runs this instead of ``run()`` so it can interleave submissions and
+        cancellations between ticks.  Returns True while the engine has
+        live or queued work (False = safe to idle until the next submit).
+        Unlike ``run()``, admission stalls are the caller's to resolve
+        (expire backoffs / shed the queue); this never raises on them."""
+        self._admit()
+        self._prefill_step()
+        self._tick()
+        return bool(self.queue) or self._busy() or self._prefilling()
 
     def run(self):
         self._t0_ns = obs_mod.now_ns()
@@ -1233,6 +1298,12 @@ class PagedEngine(Engine):
             self._release_row(self._tables[i])
             self._tables[i] = -1
         super()._retire(i)
+
+    def _cancel_slot(self, i: int):
+        # a cancelled mid-chunk prefill just stops: _retire releases the
+        # blocks the finished chunks mapped
+        self._chunking.pop(i, None)
+        super()._cancel_slot(i)
 
     # ------------------------------------------------ preemption / swap-out
     def _preempt_victim(self, exclude=(), min_rank=0) -> Optional[int]:
@@ -1746,6 +1817,8 @@ class StaticEngine(_EngineBase):
             self.m["finished"].labels(slo=r.slo).inc()
             self.m["latency"].labels(slo=r.slo).observe(now)
             self._trace_finish(r)
+            if self.on_finish is not None:
+                self.on_finish(r)
 
     def run(self):
         self._t0_ns = obs_mod.now_ns()

@@ -83,26 +83,72 @@ def _tree_from_paths(entries):
 # save
 # --------------------------------------------------------------------------
 
-class _PlaneWriter:
-    def __init__(self, f):
-        self.f = f
+class _PlaneLayout:
+    """Pure layout pass: assigns each plane its ALIGN-aligned offset and
+    records ``(offset, leaf)`` write jobs without touching the disk.
+    Separating layout from I/O is what makes the parallel writer trivially
+    byte-identical to the streaming one — offsets are fixed before either
+    writes a byte, and the inter-plane gaps are zero either way."""
+
+    def __init__(self):
         self.off = 0
+        self.jobs: list = []            # (offset, array-like) in path order
 
     def write(self, arr) -> dict:
-        arr = np.asarray(arr)
-        pad = (-self.off) % ALIGN
-        if pad:
-            self.f.write(b"\0" * pad)
-            self.off += pad
-        entry = {"offset": self.off, "bytes": arr.nbytes,
-                 "shape": list(arr.shape),
-                 "dtype": _dtype_name(arr.dtype)}
-        self.f.write(np.ascontiguousarray(arr).tobytes())
-        self.off += arr.nbytes
+        shape = tuple(arr.shape)
+        dtype = jnp.dtype(arr.dtype)
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        self.off += (-self.off) % ALIGN
+        entry = {"offset": self.off, "bytes": nbytes,
+                 "shape": list(shape), "dtype": _dtype_name(dtype)}
+        self.jobs.append((self.off, arr))
+        self.off += nbytes
         return entry
 
 
-def _write_tree(w: _PlaneWriter, params) -> dict:
+def _plane_bytes(arr) -> bytes:
+    return np.ascontiguousarray(np.asarray(arr)).tobytes()
+
+
+def _write_jobs_stream(path: str, jobs, total: int):
+    """Single sequential writer: planes in offset order, zero-filled
+    alignment gaps."""
+    off = 0
+    with open(path, "wb") as f:
+        for o, arr in jobs:
+            if o > off:
+                f.write(b"\0" * (o - off))
+            buf = _plane_bytes(arr)
+            f.write(buf)
+            off = o + len(buf)
+        if total > off:
+            f.write(b"\0" * (total - off))
+
+
+def _write_jobs_parallel(path: str, jobs, total: int, workers: int):
+    """Per-shard parallel writer mirroring the shard-by-shard reader:
+    preallocate (``ftruncate`` zero-fills, matching the stream writer's
+    explicit gap zeros), then ``workers`` threads ``pwrite`` disjoint
+    plane extents at their layout offsets.  Threads suffice — the work is
+    kernel I/O plus ``tobytes`` copies, both of which release the GIL."""
+    import concurrent.futures
+
+    fd = os.open(path, os.O_RDWR | os.O_CREAT | os.O_TRUNC, 0o644)
+    try:
+        os.ftruncate(fd, total)
+
+        def shard(i: int):
+            for o, arr in jobs[i::workers]:
+                os.pwrite(fd, _plane_bytes(arr), o)
+
+        with concurrent.futures.ThreadPoolExecutor(workers) as ex:
+            # list() to re-raise the first worker failure
+            list(ex.map(shard, range(workers)))
+    finally:
+        os.close(fd)
+
+
+def _write_tree(w: _PlaneLayout, params) -> dict:
     """Append every leaf of ``params`` to the plane writer; returns the
     manifest ``tensors`` section describing them."""
     flat, _ = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_qt)
@@ -126,7 +172,8 @@ def _write_tree(w: _PlaneWriter, params) -> dict:
 
 
 def save(ckpt_dir: str, params, cfg, qcfg=None, *,
-         extra: Optional[dict] = None, draft=None, draft_qcfg=None) -> dict:
+         extra: Optional[dict] = None, draft=None, draft_qcfg=None,
+         workers: int = 0) -> dict:
     """Write ``params`` (dense leaves + packed QuantizedTensors) as a
     packed checkpoint under ``ckpt_dir``; returns the manifest dict.
 
@@ -137,15 +184,24 @@ def save(ckpt_dir: str, params, cfg, qcfg=None, *,
     roles of self-speculative decoding: ``load(dir)`` gives the verify
     model, ``load(dir, which="draft")`` the proposer.
 
+    ``workers`` > 1 writes the plane file with that many parallel
+    ``pwrite`` threads over a preallocated file; the output is
+    byte-identical to the default single streaming writer because the
+    layout pass fixes every offset first (guarded by
+    ``tests/test_ckpt_ops.py``).
+
     The plane file is written first and the manifest is renamed into place
     last, so a directory with a readable manifest is always complete.
     """
     os.makedirs(ckpt_dir, exist_ok=True)
+    w = _PlaneLayout()
+    tensors = _write_tree(w, params)
+    draft_tensors = _write_tree(w, draft) if draft is not None else None
     tmp_planes = os.path.join(ckpt_dir, PLANES_NAME + ".tmp")
-    with open(tmp_planes, "wb") as f:
-        w = _PlaneWriter(f)
-        tensors = _write_tree(w, params)
-        draft_tensors = _write_tree(w, draft) if draft is not None else None
+    if workers and workers > 1:
+        _write_jobs_parallel(tmp_planes, w.jobs, w.off, int(workers))
+    else:
+        _write_jobs_stream(tmp_planes, w.jobs, w.off)
     os.replace(tmp_planes, os.path.join(ckpt_dir, PLANES_NAME))
 
     manifest = {
@@ -375,3 +431,186 @@ def load(ckpt_dir: str, plan=None, *, manifest: Optional[dict] = None,
 
     return _tree_from_paths(
         [(path, one(path, t)) for path, t in tensors.items()])
+
+
+# --------------------------------------------------------------------------
+# prefix-cache warmup (persisted popular prompt-prefix KV blocks)
+# --------------------------------------------------------------------------
+
+WARMUP_FORMAT = "oac-warmup"
+WARMUP_VERSION = 1
+WARMUP_META_NAME = "warmup.json"
+WARMUP_NPZ_NAME = "warmup.npz"
+
+
+def _paged_nodes(engine):
+    """(all cache nodes, indices of the paged ones) for the engine's live
+    device cache."""
+    from repro.serving.engine import PagedKVCache, _cache_nodes
+    nodes, _ = _cache_nodes(engine._cache)
+    return nodes, [j for j, n in enumerate(nodes)
+                   if isinstance(n, PagedKVCache)]
+
+
+def save_warmup(ckpt_dir: str, engine, *, top: Optional[int] = None) -> int:
+    """Persist the engine's ``PrefixCache`` beside the weight planes.
+
+    Each cache entry is one full KV block keyed by the exact token chain
+    that produced it; the file stores the chains plus, per paged cache
+    node, the pool block contents (and scale planes at ``kv_bits=8``)
+    gathered in entry order.  ``top`` keeps only the N most recently
+    touched chains — "popular" under the cache's own LRU clock.  Entries
+    are written parents-first (shortest chain first) so a loader can
+    rebuild the chain structure in one pass.  Returns the entry count.
+
+    Layout: ``warmup.json`` (format/version/arch/block geometry) +
+    ``warmup.npz`` (``chain_lens``, concatenated ``chain_tokens``,
+    ``node{j}_k/v[/ks/vs]`` arrays), both renamed into place last.
+    """
+    cache = engine.prefix
+    keys = list(cache.entries)
+    if top is not None:
+        keys.sort(key=lambda k: cache.lru[k], reverse=True)
+        keys = keys[:top]
+    keys.sort(key=lambda k: (len(k), k))          # parents before children
+    ids = np.asarray([cache.entries[k] for k in keys], np.int32)
+    chains = [np.frombuffer(k, np.int32) for k in keys]
+
+    nodes, paged = _paged_nodes(engine)
+    arrays = {
+        "chain_lens": np.asarray([len(c) for c in chains], np.int32),
+        "chain_tokens": (np.concatenate(chains) if chains
+                         else np.zeros((0,), np.int32)),
+    }
+    quantized = []
+    for j in paged:
+        n = nodes[j]
+        arrays[f"node{j}_k"] = np.asarray(n.k[:, ids])
+        arrays[f"node{j}_v"] = np.asarray(n.v[:, ids])
+        quantized.append(bool(n.quantized))
+        if n.quantized:
+            arrays[f"node{j}_ks"] = np.asarray(n.k_scale[:, ids])
+            arrays[f"node{j}_vs"] = np.asarray(n.v_scale[:, ids])
+
+    meta = {
+        "format": WARMUP_FORMAT,
+        "version": WARMUP_VERSION,
+        "arch": engine.cfg.name,
+        "block_size": engine.block_size,
+        "kv_bits": engine.kv_bits,
+        "entries": len(keys),
+        "paged_nodes": paged,
+        "quantized": quantized,
+    }
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, WARMUP_NPZ_NAME + ".tmp")
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, os.path.join(ckpt_dir, WARMUP_NPZ_NAME))
+    tmp = os.path.join(ckpt_dir, WARMUP_META_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+    os.replace(tmp, os.path.join(ckpt_dir, WARMUP_META_NAME))
+    return len(keys)
+
+
+def has_warmup(ckpt_dir: str) -> bool:
+    return os.path.exists(os.path.join(ckpt_dir, WARMUP_META_NAME))
+
+
+def load_warmup(ckpt_dir: str, engine) -> int:
+    """Pre-seed a freshly built engine's ``PrefixCache`` from a warmup
+    file, so the first clients sharing the persisted prompt prefixes skip
+    their prefill from tick one.  Returns the number of blocks seeded.
+
+    Every chain allocates one pool block at its logical position (stripe
+    correctness rides on ``engine._alloc_block``), the saved block
+    contents scatter into the device pool in one batched update per cache
+    node, and the entry registers into ``PrefixCache`` holding the usual
+    single cache-owned allocator ref.  Chains whose parent block could
+    not be seeded (pool exhausted) are dropped — the cache never holds an
+    orphaned child.  Raises ``CkptError`` when the file does not match
+    the engine's arch or block geometry.
+    """
+    mpath = os.path.join(ckpt_dir, WARMUP_META_NAME)
+    if not os.path.exists(mpath):
+        raise CkptError(f"no {WARMUP_META_NAME} under {ckpt_dir}")
+    try:
+        with open(mpath) as f:
+            meta = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CkptError(f"corrupt warmup meta {mpath}: {e}") from e
+    if meta.get("format") != WARMUP_FORMAT or \
+            meta.get("version") != WARMUP_VERSION:
+        raise CkptError(f"not an {WARMUP_FORMAT} v{WARMUP_VERSION} file: "
+                        f"{meta.get('format')!r} v{meta.get('version')!r}")
+    nodes, paged = _paged_nodes(engine)
+    for field, want in (("arch", engine.cfg.name),
+                        ("block_size", engine.block_size),
+                        ("kv_bits", engine.kv_bits),
+                        ("paged_nodes", paged)):
+        if meta.get(field) != want:
+            raise CkptError(f"warmup/engine mismatch on {field}: file has "
+                            f"{meta.get(field)!r}, engine has {want!r}")
+    if not meta["entries"]:
+        return 0
+    with np.load(os.path.join(ckpt_dir, WARMUP_NPZ_NAME)) as z:
+        arrays = {k: z[k] for k in z.files}
+
+    bs = engine.block_size
+    lens = arrays["chain_lens"]
+    offs = np.concatenate([[0], np.cumsum(lens)])
+    chains = [arrays["chain_tokens"][offs[i]:offs[i + 1]]
+              for i in range(len(lens))]
+
+    # allocate pool blocks chain-by-chain (file order is parents-first);
+    # a chain is only seeded if its parent made it in, and allocation
+    # failure (pool smaller than the warmup set) stops cleanly
+    seeded: dict = {}                    # key -> (row in file, pool block)
+    for row, chain in enumerate(chains):
+        if len(chain) % bs or not len(chain):
+            raise CkptError(f"warmup chain {row} has {len(chain)} tokens "
+                            f"(not a whole number of {bs}-token blocks)")
+        key = chain.tobytes()
+        lb = len(chain) // bs - 1
+        if key in engine.prefix.entries:
+            continue
+        if lb > 0 and chain[:lb * bs].tobytes() not in \
+                set(engine.prefix.entries) | set(seeded):
+            continue                     # orphaned child: parent not seeded
+        try:
+            b = engine._alloc_block(lb)
+        except RuntimeError:
+            break                        # pool full: keep what fits
+        seeded[key] = (row, b)
+    if not seeded:
+        return 0
+
+    rows = np.asarray([r for r, _ in seeded.values()], np.int32)
+    ids = jnp.asarray([b for _, b in seeded.values()])
+    from repro.serving.engine import PagedKVCache, _cache_nodes
+    nodes, td = _cache_nodes(engine._cache)
+    out = list(nodes)
+    for j in paged:
+        n = nodes[j]
+        sc = (None, None)
+        if n.quantized:
+            sc = (n.k_scale.at[:, ids].set(
+                      jnp.asarray(arrays[f"node{j}_ks"][:, rows])),
+                  n.v_scale.at[:, ids].set(
+                      jnp.asarray(arrays[f"node{j}_vs"][:, rows])))
+        out[j] = PagedKVCache(
+            n.k.at[:, ids].set(jnp.asarray(arrays[f"node{j}_k"][:, rows])),
+            n.v.at[:, ids].set(jnp.asarray(arrays[f"node{j}_v"][:, rows])),
+            n.block_tables, *sc)
+    engine._cache = jax.tree_util.tree_unflatten(td, out)
+
+    trow = np.full(engine.max_blocks, -1, np.int32)
+    for key, (row, b) in seeded.items():
+        chain = chains[row]
+        lb = len(chain) // bs - 1
+        trow[lb] = b
+        engine.prefix.insert(chain, trow, lb, lb + 1)
+        trow[lb] = -1
+        engine.alloc.decref(b)           # cache ref is the only holder now
+    return len(seeded)

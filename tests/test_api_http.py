@@ -1,0 +1,309 @@
+"""HTTP serving front end, end-to-end over a real socket on the toy arch.
+
+Pins the tentpole contracts of the API layer:
+  * streamed SSE tokens are bit-identical to an in-process ``PagedEngine``
+    greedy run for the same params/prompt on every request path — plain,
+    self-speculative decode, chunked prefill;
+  * concurrent mixed-SLO clients all complete;
+  * a client disconnect mid-stream retires the slot and returns the
+    request's blocks to the pool;
+  * ``/metrics`` parses as Prometheus 0.0.4 text and the ``engine_*``
+    families agree with the request counts;
+  * malformed bodies and over-length prompts get a 4xx and the driver
+    thread keeps serving.
+"""
+import http.client
+import json
+import re
+import socket
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.launch import client as cl
+from repro.models import build_model
+from repro.serving.api import ApiServer, EngineBridge
+from repro.serving.engine import PagedEngine
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+
+PROMPT = [3, 5, 7, 11, 13, 17, 19, 23]
+LONG_PROMPT = [(5 * i + 1) % CFG.vocab for i in range(40)]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _engine(params, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("capacity", 64)
+    kw.setdefault("block_size", 8)
+    return PagedEngine(CFG, params, **kw)
+
+
+@pytest.fixture()
+def serve(params):
+    """Factory fixture: start a server over a fresh engine, tear down."""
+    started = []
+
+    def start(**engine_kw):
+        eng = _engine(params, **engine_kw)
+        bridge = EngineBridge(eng, idle_wait=0.01).start()
+        server = ApiServer(bridge, model_info={"arch": CFG.name,
+                                               "vocab": CFG.vocab})
+        port = server.start()
+        started.append((server, bridge))
+        return port, eng
+
+    yield start
+    for server, bridge in started:
+        server.stop()
+        bridge.stop()
+
+
+def _greedy_ref(params, prompt, max_tokens, **kw):
+    eng = _engine(params, **kw)
+    r = eng.submit(np.asarray(prompt), max_tokens=max_tokens)
+    eng.run()
+    return r.out
+
+
+def _drain(eng, bridge, timeout=30.0):
+    """Wait until the engine is fully idle (all slots retired)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        with bridge.lock:
+            idle = not eng.queue and all(s is None for s in eng._slots) \
+                and not eng._prefilling()
+        if idle:
+            return
+        time.sleep(0.01)
+    raise TimeoutError("engine did not drain")
+
+
+# -------------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("path", ["plain", "spec", "chunked"])
+def test_stream_bit_identical_to_inprocess(serve, params, path):
+    engine_kw = {}
+    prompt = PROMPT
+    if path == "spec":
+        # self-speculative with the target as its own draft: acceptance is
+        # total but the code path (draft + scanned verify) is exercised
+        engine_kw = {"draft": params, "spec_k": 3}
+    elif path == "chunked":
+        engine_kw = {"prefill_chunk": 16}
+        prompt = LONG_PROMPT
+    ref = _greedy_ref(params, prompt, 10, **engine_kw)
+    port, _ = serve(**engine_kw)
+    got = [t for t, _ in cl.complete(port, prompt, max_tokens=10)
+           if t is not None]
+    assert got == ref
+
+
+def test_nonstream_matches_stream(serve, params):
+    ref = _greedy_ref(params, PROMPT, 10)
+    port, _ = serve()
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+    conn.request("POST", "/v1/completions", body=json.dumps(
+        {"prompt": PROMPT, "max_tokens": 10, "stream": False}))
+    resp = conn.getresponse()
+    body = json.loads(resp.read())
+    conn.close()
+    assert resp.status == 200
+    assert body["choices"][0]["token_ids"] == ref
+    assert body["choices"][0]["finish_reason"] == "length"
+    assert body["usage"]["completion_tokens"] == 10
+
+
+def test_seeded_sampling_reproducible(serve):
+    port, _ = serve()
+
+    def run():
+        return [t for t, _ in cl.complete(
+            port, PROMPT, max_tokens=12, temperature=0.8, seed=123)
+            if t is not None]
+
+    a, b = run(), run()
+    assert len(a) == 12 and a == b
+
+
+# -------------------------------------------------------------- concurrency
+def test_concurrent_mixed_slo_clients_complete(serve):
+    port, eng = serve(max_batch=2)       # more clients than slots
+    n = 6
+    outs = [None] * n
+    errs = []
+
+    def one(i):
+        try:
+            slo = "interactive" if i % 2 == 0 else "batch"
+            prompt = [(i + 2 + j) % CFG.vocab for j in range(6 + i)]
+            outs[i] = [t for t, _ in cl.complete(
+                port, prompt, max_tokens=5 + i % 3, slo=slo)
+                if t is not None]
+        except Exception as e:           # surface in the main thread
+            errs.append((i, repr(e)))
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errs, errs
+    for i, out in enumerate(outs):
+        assert out is not None and len(out) == 5 + i % 3, (i, out)
+
+
+# -------------------------------------------------------------- disconnect
+def test_disconnect_mid_stream_frees_blocks(serve, params):
+    # baseline occupancy 0 (no prefix cache); big capacity = long runway,
+    # so the hang-up lands mid-generation, not after a natural finish
+    port, eng = serve(share_prefixes=False, capacity=512)
+    bridge = eng.on_token.__self__
+    body = json.dumps({"prompt": PROMPT, "max_tokens": 4096}).encode()
+    s = socket.create_connection(("127.0.0.1", port), timeout=30)
+    s.sendall(b"POST /v1/completions HTTP/1.1\r\n"
+              b"Host: x\r\nContent-Length: %d\r\n\r\n%s"
+              % (len(body), body))
+    # wait for the stream to actually start (first token on the wire)
+    buf = b""
+    while b"token_id" not in buf:
+        chunk = s.recv(4096)
+        assert chunk, f"stream closed early: {buf!r}"
+        buf += chunk
+    assert eng.alloc.blocks_in_use > 0
+    s.close()                                 # hang up mid-generation
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        with bridge.lock:
+            if eng.alloc.blocks_in_use == 0 and \
+                    all(x is None for x in eng._slots):
+                break
+        time.sleep(0.02)
+    else:
+        raise AssertionError(
+            f"{eng.alloc.blocks_in_use} blocks still live after disconnect")
+    # the cancelled request is accounted a finished lifecycle
+    with bridge.lock:
+        assert any(r.cancelled for r in eng.finished.values())
+    # and the driver still serves
+    got = [t for t, _ in cl.complete(port, PROMPT, max_tokens=4)
+           if t is not None]
+    assert len(got) == 4
+
+
+# ----------------------------------------------------------------- metrics
+def _parse_prom(text):
+    """Strict-enough Prometheus 0.0.4 parser: every non-comment line is
+    ``name{labels} value``; HELP/TYPE precede their family."""
+    samples = {}
+    typed = set()
+    for ln in text.splitlines():
+        if not ln.strip():
+            continue
+        if ln.startswith("#"):
+            m = re.match(r"^# (HELP|TYPE) ([a-zA-Z_:][a-zA-Z0-9_:]*) ", ln)
+            assert m, f"bad comment line: {ln!r}"
+            if m.group(1) == "TYPE":
+                typed.add(m.group(2))
+            continue
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"
+                     r"(\{[^{}]*\})? (-?[0-9.eE+]+|NaN)$", ln)
+        assert m, f"unparsable sample line: {ln!r}"
+        name = m.group(1)
+        base = name[:-len("_bucket")] if name.endswith("_bucket") else name
+        for suf in ("_sum", "_count"):
+            if base.endswith(suf):
+                base = base[:-len(suf)]
+        assert base in typed or name in typed, f"untyped family: {name}"
+        samples[(name, m.group(2) or "")] = float(m.group(3))
+    return samples
+
+
+def test_metrics_scrape_agrees_with_requests(serve):
+    port, eng = serve()
+    n = 3
+    for i in range(n):
+        toks = [t for t, _ in cl.complete(
+            port, [(j + i) % CFG.vocab for j in range(6)], max_tokens=4)
+            if t is not None]
+        assert len(toks) == 4
+    samples = _parse_prom(cl.scrape(port))
+    fam = {k: v for k, v in samples.items()
+           if k[0] == "engine_requests_finished_total"}
+    assert sum(fam.values()) == n
+    sub = {k: v for k, v in samples.items()
+           if k[0] == "engine_requests_submitted_total"}
+    assert sum(sub.values()) == n
+    assert any(k[0].startswith("engine_") for k in samples)
+
+
+def test_healthz_and_models(serve):
+    port, _ = serve()
+    h = cl.wait_ready(port)
+    assert h["status"] == "ok" and h["capacity"] == 64
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+    conn.request("GET", "/v1/models")
+    resp = conn.getresponse()
+    models = json.loads(resp.read())
+    conn.close()
+    assert resp.status == 200
+    info = models["data"][0]
+    assert info["arch"] == CFG.name and info["vocab"] == CFG.vocab
+
+
+# -------------------------------------------------------------- bad inputs
+def _post(port, body: bytes, path="/v1/completions"):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+    conn.request("POST", path, body=body)
+    resp = conn.getresponse()
+    out = (resp.status, json.loads(resp.read()))
+    conn.close()
+    return out
+
+
+def test_bad_requests_get_4xx_and_driver_survives(serve):
+    port, eng = serve()
+    cases = [
+        (b"{oops", 400),                                  # not JSON
+        (b"[1, 2]", 400),                                 # not an object
+        (b"{}", 400),                                     # no prompt
+        (json.dumps({"prompt": []}).encode(), 400),
+        (json.dumps({"prompt": "hi"}).encode(), 400),     # no tokenizer
+        (json.dumps({"prompt": [1, "x"]}).encode(), 400),
+        (json.dumps({"prompt": [1, CFG.vocab]}).encode(), 400),
+        (json.dumps({"prompt": [-1]}).encode(), 400),
+        (json.dumps({"prompt": list(range(2)) * 40}).encode(), 400),
+        (json.dumps({"prompt": [1], "max_tokens": 0}).encode(), 400),
+        (json.dumps({"prompt": [1], "max_tokens": True}).encode(), 400),
+        (json.dumps({"prompt": [1], "slo": "gold"}).encode(), 400),
+        (json.dumps({"prompt": [1], "temperature": -1}).encode(), 400),
+        (json.dumps({"prompt": [1], "seed": -5}).encode(), 400),
+        (json.dumps({"prompt": [1], "stream": "yes"}).encode(), 400),
+        (b"x" * (2 << 20), 413),                          # oversize body
+    ]
+    for body, want in cases:
+        status, payload = _post(port, body)
+        assert status == want, (body[:40], status, payload)
+        assert "error" in payload
+    status, _ = _post(port, b"{}", path="/nope")
+    assert status == 404
+    # GET on the completion route
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+    conn.request("GET", "/v1/completions")
+    assert conn.getresponse().status == 405
+    conn.close()
+    # after all that abuse the driver thread still serves correctly
+    got = [t for t, _ in cl.complete(port, PROMPT, max_tokens=3)
+           if t is not None]
+    assert len(got) == 3
+    h = cl.wait_ready(port)
+    assert h["status"] == "ok" and h["queue_depth"] == 0

@@ -1,0 +1,210 @@
+"""Property-based hardening of the serving bridge and the prefix cache.
+
+Two invariants under randomized interleavings:
+
+  * the API bridge never leaks blocks or slots: after any sequence of
+    submit / partial-stream / disconnect / run-to-finish operations
+    drains, every ``BlockAllocator`` refcount is explained by a live
+    table mapping or a prefix-cache entry, and all slots are free;
+  * ``PrefixCache`` insert/evict over random token chains keeps its
+    parent/child ``kids`` counts exactly recomputable from the entry set
+    and releases every block on evict-to-empty.
+
+Both run twice: seeded-random deterministic sweeps that always execute,
+and hypothesis-driven searches (shrinking, broader space) that skip
+cleanly when hypothesis is not installed (per requirements-dev.txt).
+The engine and bridge are module-level singletons reused across cases —
+the interleavings shrink, not the engine geometry, and rebuilding the
+jit'd engine per example would swamp the suite.
+"""
+import asyncio
+import time
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAS_HYP = True
+except ImportError:
+    HAS_HYP = False
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.serving.api import EngineBridge
+from repro.serving.engine import BlockAllocator, PagedEngine, PrefixCache
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+
+_STATE = {}
+
+
+def _bridge():
+    if not _STATE:
+        params = build_model(CFG).init(jax.random.PRNGKey(0))
+        eng = PagedEngine(CFG, params, max_batch=3, capacity=64,
+                          block_size=8)
+        _STATE["eng"] = eng
+        _STATE["bridge"] = EngineBridge(eng, idle_wait=0.005).start()
+    return _STATE["eng"], _STATE["bridge"]
+
+
+def _assert_no_leaks(eng, bridge):
+    """live == mapped: every allocator ref is a table mapping or a prefix
+    entry, no slot is occupied, nothing queued."""
+    with bridge.lock:
+        assert not eng.queue
+        assert all(s is None for s in eng._slots)
+        refs = Counter()
+        for row in eng._tables:
+            for b in row[row >= 0]:
+                refs[int(b)] += 1
+        for b in eng.prefix.entries.values():
+            refs[b] += 1
+        assert dict(refs) == dict(eng.alloc.refcount)
+        assert eng.alloc.blocks_in_use + eng.alloc.blocks_free \
+            == eng.alloc.num_blocks - len(eng.alloc.reserved)
+
+
+# ---------------------------------------------------------- bridge scenario
+# one op = (prompt seed, prompt len, max_tokens, items to consume before
+# disconnecting — None streams to completion)
+
+async def _run_ops(bridge, ops):
+    async def one(seed, plen, max_tokens, cut):
+        prompt = [(seed * 7 + j) % CFG.vocab for j in range(plen)]
+        h = await bridge.submit(prompt, max_tokens=max_tokens)
+        seen = 0
+        while True:
+            kind, val = await asyncio.wait_for(h.queue.get(), timeout=60)
+            if kind != "tok":
+                return kind, val
+            seen += 1
+            if cut is not None and seen > cut:
+                bridge.cancel(h.rid)      # simulated client disconnect
+                cut = None                # keep draining to the terminal
+
+    return await asyncio.gather(*(one(*op) for op in ops))
+
+
+def _check_ops(ops):
+    eng, bridge = _bridge()
+    results = asyncio.run(_run_ops(bridge, ops))
+    for kind, val in results:
+        assert kind == "done", (kind, val)
+        assert val in ("length", "stop", "cancelled")
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        with bridge.lock:
+            if not eng.queue and all(s is None for s in eng._slots):
+                break
+        time.sleep(0.01)
+    _assert_no_leaks(eng, bridge)
+
+
+def test_bridge_interleavings_never_leak_seeded():
+    rng = np.random.default_rng(42)
+    for _ in range(8):
+        n = int(rng.integers(1, 7))
+        ops = [(int(rng.integers(0, 6)), int(rng.integers(1, 20)),
+                int(rng.integers(1, 8)),
+                None if rng.random() < 0.5 else int(rng.integers(0, 4)))
+               for _ in range(n)]
+        _check_ops(ops)
+
+
+# ------------------------------------------------------ prefix-cache scenario
+def _recompute_kids(cache, bs):
+    kids = Counter()
+    for key in cache.entries:
+        if len(key) > bs * 4:
+            kids[key[:-bs * 4]] += 1
+    return {k: v for k, v in kids.items()}
+
+
+def _check_chains(chains, evict_between):
+    bs = 8
+    alloc = BlockAllocator(64, bs)
+    cache = PrefixCache(alloc, bs)
+    for chain in chains:
+        prompt = np.asarray(chain, np.int32)
+        nb = len(prompt) // bs
+        # simulate one admitted request: match shared blocks, own the rest
+        n_shared, shared = cache.match(prompt)
+        trow = np.full(16, -1, np.int32)
+        for j, b in enumerate(shared):
+            alloc.incref(b)
+            trow[j] = b
+        for j in range(n_shared, nb):
+            b = alloc.alloc()
+            if b is None:
+                if not cache.evict_one():
+                    break
+                b = alloc.alloc()
+            trow[j] = b
+        cache.insert(prompt, trow, n_shared, int((trow >= 0).sum()))
+        # retire: request drops its refs, cache entries keep theirs
+        for b in trow[trow >= 0]:
+            alloc.decref(int(b))
+        if evict_between:
+            cache.evict_one()
+        # invariant: kids is exactly recomputable, every entry holds
+        # exactly the cache's one ref
+        assert _recompute_kids(cache, bs) == cache.kids
+        for b in cache.entries.values():
+            assert alloc.refcount[b] == 1
+        assert len(set(cache.entries.values())) == len(cache.entries)
+        assert alloc.blocks_in_use == len(cache.entries)
+    while cache.evict_one():
+        pass
+    assert not cache.entries and not cache.kids and not cache.lru
+    assert alloc.blocks_in_use == 0
+    assert alloc.blocks_free == alloc.num_blocks - len(alloc.reserved)
+
+
+def test_prefix_cache_refcounts_consistent_seeded():
+    rng = np.random.default_rng(7)
+    for case in range(20):
+        chains = [list(rng.integers(0, CFG.vocab,
+                                    size=int(rng.integers(8, 41))))
+                  for _ in range(int(rng.integers(1, 9)))]
+        # force shared prefixes in half the cases
+        if case % 2:
+            head = chains[0][:16]
+            chains = [head + c[len(head):] if len(c) > len(head) else c
+                      for c in chains]
+        _check_chains(chains, evict_between=bool(case % 3 == 0))
+
+
+# --------------------------------------------------- hypothesis-driven search
+if HAS_HYP:
+    OP = st.tuples(st.integers(0, 5), st.integers(1, 20),
+                   st.integers(1, 8),
+                   st.one_of(st.none(), st.integers(0, 4)))
+    CHAIN = st.lists(st.integers(0, CFG.vocab - 1), min_size=8,
+                     max_size=40)
+
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(ops=st.lists(OP, min_size=1, max_size=7))
+    def test_bridge_interleavings_never_leak(ops):
+        _check_ops(ops)
+
+    @settings(max_examples=60, deadline=None)
+    @given(chains=st.lists(CHAIN, min_size=1, max_size=8),
+           evict_between=st.booleans())
+    def test_prefix_cache_refcounts_consistent(chains, evict_between):
+        _check_chains(chains, evict_between)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_bridge_interleavings_never_leak():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_prefix_cache_refcounts_consistent():
+        pass

@@ -1,0 +1,175 @@
+"""Fleet checkpoint ops: per-shard parallel save byte-identity and
+prefix-cache warmup round trips.
+
+The parallel writer must be a pure performance change — planes.bin and
+manifest.json byte-identical to the streaming writer for dense, packed,
+and draft-carrying trees.  A warmed PrefixCache must be indistinguishable
+from a naturally-populated one: same prefill-skip counters on the
+shared-prefix workload, bit-identical outputs, consistent allocator
+refcounts, and clean rejection of warmup files from a different engine
+geometry."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import build_model
+from repro.serving.engine import PagedEngine
+from repro.serving.quantized import quantize_params_rtn
+from repro.serving.qserve import ckpt as qckpt
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64, mlp="swiglu", norm="rmsnorm", pos="rope")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def packed(params):
+    p, _ = quantize_params_rtn(params, QuantConfig(wbits=4, group_size=16))
+    return p
+
+
+def _read(d, name):
+    with open(os.path.join(d, name), "rb") as f:
+        return f.read()
+
+
+# ------------------------------------------------------------ parallel save
+@pytest.mark.parametrize("workers", [2, 3, 8])
+def test_parallel_save_byte_identical(tmp_path, packed, params, workers):
+    a, b = str(tmp_path / "seq"), str(tmp_path / "par")
+    qckpt.save(a, packed, CFG, QuantConfig(wbits=4, group_size=16),
+               draft=params)
+    qckpt.save(b, packed, CFG, QuantConfig(wbits=4, group_size=16),
+               draft=params, workers=workers)
+    assert _read(a, qckpt.PLANES_NAME) == _read(b, qckpt.PLANES_NAME)
+    assert _read(a, qckpt.MANIFEST_NAME) == _read(b, qckpt.MANIFEST_NAME)
+
+
+def test_parallel_save_loads_back(tmp_path, packed):
+    d = str(tmp_path / "ck")
+    qckpt.save(d, packed, CFG, QuantConfig(wbits=4, group_size=16),
+               workers=4)
+    loaded = qckpt.load(d)
+    ref = jax.tree.leaves(packed)
+    got = jax.tree.leaves(loaded)
+    assert len(ref) == len(got)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+
+
+def test_workers_one_is_stream_path(tmp_path, packed):
+    """workers=1 (and 0) take the sequential writer; output matches."""
+    a, b = str(tmp_path / "w0"), str(tmp_path / "w1")
+    qckpt.save(a, packed, CFG, workers=0)
+    qckpt.save(b, packed, CFG, workers=1)
+    assert _read(a, qckpt.PLANES_NAME) == _read(b, qckpt.PLANES_NAME)
+
+
+# ----------------------------------------------------------------- warmup
+def _engine(params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("capacity", 64)
+    kw.setdefault("block_size", 8)
+    return PagedEngine(CFG, params, **kw)
+
+
+def _shared_workload(eng, n=3, prefix=32, max_tokens=6):
+    pre = (np.arange(1, prefix + 1) % CFG.vocab).astype(np.int32)
+    rng = np.random.default_rng(0)
+    prompts = [np.concatenate([pre, rng.integers(
+        0, CFG.vocab, size=8).astype(np.int32)]) for _ in range(n)]
+    rs = [eng.submit(p, max_tokens=max_tokens) for p in prompts]
+    eng.run()
+    return rs
+
+
+def test_warmup_matches_naturally_populated_cache(tmp_path, params):
+    d = str(tmp_path)
+    # naturally populate, persist, and measure a re-serve of the workload
+    nat = _engine(params)
+    out1 = [r.out for r in _shared_workload(nat)]
+    qckpt.save_warmup(d, nat)
+    base = nat.prefill_tokens_skipped
+    out_nat = [r.out for r in _shared_workload(nat)]
+    skipped_nat = nat.prefill_tokens_skipped - base
+
+    # a warmed fresh replica must serve the same workload identically
+    warm = _engine(params)
+    assert qckpt.load_warmup(d, warm) == len(nat.prefix.entries)
+    out_warm = [r.out for r in _shared_workload(warm)]
+    assert warm.prefill_tokens_skipped == skipped_nat
+    assert out_warm == out_nat == out1
+
+
+def test_warmup_refcounts_consistent(tmp_path, params):
+    d = str(tmp_path)
+    nat = _engine(params)
+    _shared_workload(nat)
+    qckpt.save_warmup(d, nat)
+
+    warm = _engine(params)
+    n = qckpt.load_warmup(d, warm)
+    assert n > 0
+    # cache holds exactly one ref per seeded block, nothing else is live
+    assert warm.alloc.blocks_in_use == n
+    assert all(warm.alloc.refcount[b] == 1
+               for b in warm.prefix.entries.values())
+    # the seeded chain structure is evictable down to empty
+    while warm.prefix.evict_one():
+        pass
+    assert not warm.prefix.entries and not warm.prefix.kids
+    assert warm.alloc.blocks_in_use == 0
+
+
+def test_warmup_top_n_keeps_hottest(tmp_path, params):
+    d = str(tmp_path)
+    nat = _engine(params)
+    _shared_workload(nat)
+    total = len(nat.prefix.entries)
+    kept = qckpt.save_warmup(d, nat, top=2)
+    assert kept == min(2, total)
+    warm = _engine(params)
+    assert qckpt.load_warmup(d, warm) <= kept
+
+
+def test_warmup_idempotent_load(tmp_path, params):
+    """Loading twice (restart with a stale in-memory cache) neither leaks
+    blocks nor duplicates entries."""
+    d = str(tmp_path)
+    nat = _engine(params)
+    _shared_workload(nat)
+    qckpt.save_warmup(d, nat)
+    warm = _engine(params)
+    n = qckpt.load_warmup(d, warm)
+    assert qckpt.load_warmup(d, warm) == 0
+    assert warm.alloc.blocks_in_use == n
+
+
+def test_warmup_geometry_mismatch_rejected(tmp_path, params):
+    d = str(tmp_path)
+    nat = _engine(params)
+    _shared_workload(nat)
+    qckpt.save_warmup(d, nat)
+    other = _engine(params, block_size=16, capacity=64)
+    with pytest.raises(qckpt.CkptError, match="block_size"):
+        qckpt.load_warmup(d, other)
+    with pytest.raises(qckpt.CkptError, match="no warmup"):
+        qckpt.load_warmup(str(tmp_path / "nope"), nat)
+
+
+def test_warmup_empty_cache_roundtrip(tmp_path, params):
+    d = str(tmp_path)
+    eng = _engine(params, share_prefixes=False)
+    _shared_workload(eng)
+    assert qckpt.save_warmup(d, eng) == 0
+    warm = _engine(params)
+    assert qckpt.load_warmup(d, warm) == 0
+    assert warm.alloc.blocks_in_use == 0

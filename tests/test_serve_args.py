@@ -1,0 +1,90 @@
+"""launch/serve.py flag validation: combinations that would silently
+no-op (--spec-k without a draft source, --prefill-chunk off the paged
+engine, warmup flags without a checkpoint, --http on the static cohort)
+must exit 2 with a clear error, and every legitimate combination must
+parse.  Also pins the serve/client shared-prefix construction contract
+the warmup CI path relies on."""
+import numpy as np
+import pytest
+
+from repro.launch.serve import build_parser, validate_args
+
+GOOD = [
+    [],
+    ["--engine", "paged"],
+    ["--engine", "paged", "--draft", "rtn-w4"],
+    ["--engine", "paged", "--draft", "rtn-w4", "--spec-k", "6"],
+    ["--engine", "paged", "--prefill-chunk", "16"],
+    ["--engine", "paged", "--kv-bits", "8"],
+    ["--engine", "paged", "--capacity", "256", "--block-size", "16"],
+    ["--ckpt", "d", "--check-quant", "rtn-w4"],
+    ["--engine", "paged", "--ckpt", "d", "--warmup"],
+    ["--engine", "paged", "--ckpt", "d", "--save-warmup",
+     "--shared-prefix", "32"],
+    ["--http", "0"],
+    ["--http", "8080", "--engine", "paged", "--ckpt", "d", "--warmup"],
+    ["--engine", "static"],
+]
+
+BAD = [
+    ["--spec-k", "4"],                        # no draft source: no-op
+    ["--engine", "paged", "--spec-k", "4"],   # still no draft
+    ["--draft", "rtn-w4"],                    # wrong engine
+    ["--engine", "static", "--draft", "rtn-w4"],
+    ["--prefill-chunk", "16"],                # continuous engine ignores it
+    ["--engine", "static", "--prefill-chunk", "16"],
+    ["--kv-bits", "8"],                       # int8 pool is paged-only
+    ["--check-quant", "rtn-w4"],              # needs --ckpt
+    ["--ckpt", "d", "--quant", "rtn-w4"],     # conflicting weight sources
+    ["--engine", "paged", "--capacity", "100", "--block-size", "16"],
+    ["--warmup"],                             # wrong engine
+    ["--engine", "paged", "--warmup"],        # no ckpt to read from
+    ["--engine", "paged", "--save-warmup"],   # no ckpt to write to
+    ["--http", "8080", "--engine", "static"],
+    ["--http", "70000"],                      # not a port
+    ["--http", "-1"],
+    ["--http", "8080", "--ckpt", "d", "--check-quant", "rtn-w4"],
+    ["--http", "8080", "--engine", "paged", "--ckpt", "d",
+     "--save-warmup"],
+    ["--http", "8080", "--tp", "2"],
+]
+
+
+@pytest.mark.parametrize("argv", GOOD, ids=" ".join)
+def test_valid_flag_combinations_parse(argv):
+    ap = build_parser()
+    validate_args(ap, ap.parse_args(argv))
+
+
+@pytest.mark.parametrize("argv", BAD, ids=" ".join)
+def test_silent_noop_combinations_rejected(argv):
+    ap = build_parser()
+    with pytest.raises(SystemExit) as e:
+        validate_args(ap, ap.parse_args(argv))
+    assert e.value.code == 2
+
+
+def test_spec_k_default_resolution():
+    """--spec-k stays None when unset (so validation can tell 'typed' from
+    'default'); the engine builder resolves None to 4."""
+    ap = build_parser()
+    args = validate_args(ap, ap.parse_args(
+        ["--engine", "paged", "--draft", "rtn-w4"]))
+    assert args.spec_k is None
+
+
+def test_shared_prefix_contract():
+    """serve's demo-prompt prefix and the client's reconstruction are the
+    same token chain — the warmed-server CI path depends on it."""
+    from repro.launch.client import shared_prefix
+    from repro.launch.serve import _demo_prompts
+
+    class Cfg:
+        vocab = 64
+
+    ap = build_parser()
+    args = validate_args(ap, ap.parse_args(["--shared-prefix", "32"]))
+    prompts = _demo_prompts(Cfg, args)
+    want = np.asarray(shared_prefix(32, 64), np.int32)
+    for p in prompts:
+        np.testing.assert_array_equal(p[:32], want)
